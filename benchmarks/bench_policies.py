@@ -1,0 +1,37 @@
+"""Design-space exploration — the platform's purpose: compare hybrid-memory
+management policies on the same workload (paper §II-B/III-A). Reports mean
+access latency, fast-tier hit rate, migrations and energy per policy."""
+from __future__ import annotations
+
+from repro.core import paper_platform, run_trace
+from repro.trace import TraceSpec, generate
+
+
+def run(verbose=True, n_requests=120_000):
+    spec = TraceSpec(n_requests=n_requests, footprint_pages=120_000,
+                     write_frac=0.4, pattern="zipfian", zipf_alpha=1.05)
+    trace = generate(spec)
+    rows = []
+    for policy in ("static", "hotness", "write_bias", "stream"):
+        cfg = paper_platform().with_(policy=policy, chunk=512,
+                                     hot_threshold=4, write_weight=4,
+                                     decay_every=32)
+        state, _, summ = run_trace(cfg, trace)
+        fast = summ["reads_fast"] + summ["writes_fast"]
+        slow = summ["reads_slow"] + summ["writes_slow"]
+        rows.append({
+            "policy": policy,
+            "mean_read_latency": summ["mean_read_latency_cyc"],
+            "fast_hit_rate": fast / (fast + slow),
+            "migrations": int(state.dma.swaps_done),
+            "energy_mJ": summ["energy_mJ"],
+            "emulated_ms": int(state.clock) / 1e6,
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"  {policy:11s} lat {r['mean_read_latency']:8.1f}cyc  "
+                  f"fast-hit {r['fast_hit_rate']*100:5.1f}%  "
+                  f"migr {r['migrations']:5d}  "
+                  f"energy {r['energy_mJ']:8.2f}mJ  "
+                  f"time {r['emulated_ms']:7.2f}ms")
+    return rows

@@ -1,0 +1,33 @@
+"""Paper Fig 8: memory-request volume per workload, measured by the
+platform's performance counters and re-expanded to paper scale."""
+from __future__ import annotations
+
+from repro.core import paper_platform, run_trace
+from repro.trace import WORKLOADS, workload_trace
+
+
+def run(scale=4e-9, verbose=True):
+    cfg = paper_platform().with_(chunk=512)
+    rows = []
+    for name, w in WORKLOADS.items():
+        t, _, n = workload_trace(name, scale=scale)
+        state, _, summ = run_trace(cfg, t)
+        applied_scale = n * 64 / w.total_traffic_bytes
+        rows.append({
+            "workload": name,
+            "measured_GB_read": summ["GB_read"],
+            "measured_GB_written": summ["GB_written"],
+            "paper_scale_TB_read": summ["GB_read"] / applied_scale / 1e3,
+            "paper_scale_TB_written": summ["GB_written"] / applied_scale / 1e3,
+            "energy_mJ": summ["energy_mJ"],
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"  {name:15s} R {r['paper_scale_TB_read']:8.3f} TB | "
+                  f"W {r['paper_scale_TB_written']:8.3f} TB (paper scale)")
+    order = sorted(rows, key=lambda r: -(r["paper_scale_TB_read"]
+                                         + r["paper_scale_TB_written"]))
+    if verbose:
+        print(f"  max: {order[0]['workload']}  min: {order[-1]['workload']} "
+              f"(paper: 505.mcf max 5.65TB, 538.imagick min 8.96GB)")
+    return rows

@@ -1,0 +1,88 @@
+"""Paper Fig 7: simulation time normalized against native execution.
+
+Native execution time = the *emulated* wall-clock of the platform (the
+final HMMU cycle counter in ns) — i.e. how long the application's memory
+phase takes on the real hardware the emulator models. Each simulator's
+slowdown = host wall time / native time. The paper reports FPGA 3.17x,
+ChampSim 7241x, gem5 29398x (speedups 2286x / 9280x vs the FPGA).
+
+Our analogue: the jit-compiled HMES emulation pipeline vs the sequential
+trace-driven simulator (ChampSim-class) vs the event-driven cycle-level
+simulator with CPU model (gem5-class), on the SPEC-2017-like suite.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import paper_platform, run_trace, emulate, pad_trace
+from repro.sims import cycle_sim, trace_sim
+from repro.trace import workload_trace
+
+WORKLOADS_SMALL = ["505.mcf", "519.lbm", "538.imagick", "520.omnetpp",
+                   "508.namd", "541.leela"]
+
+
+def _time(fn, reps=1):
+    fn()                       # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+    return (time.time() - t0) / reps, out
+
+
+def run(scale=6e-9, chunk=4096, workloads=None, verbose=True,
+        min_requests=16_384):
+    cfg = paper_platform().with_(chunk=chunk)
+    rows = []
+    for name in workloads or WORKLOADS_SMALL:
+        t, w, n = workload_trace(name, scale=scale,
+                                 min_requests=min_requests)
+        page, off, wr, sz = (np.asarray(x) for x in t)
+        padded, valid = pad_trace(cfg, t)
+
+        def run_emu():
+            state, _ = emulate(cfg, padded, valid)
+            jax.block_until_ready(state.clock)
+            return state
+
+        emu_s, state = _time(run_emu, reps=3)
+        native_s = int(state.clock) * 1e-9          # 1 cycle == 1 ns
+
+        ts_s, _ = _time(lambda: trace_sim.simulate(cfg, page, off, wr, sz))
+        cs_s, _ = _time(lambda: cycle_sim.simulate(
+            cfg, page, off, wr, sz, refresh=True, cpu_model=True))
+
+        row = {
+            "workload": name, "requests": n,
+            "native_s": native_s,
+            "emu_slowdown": emu_s / native_s,
+            "tracesim_slowdown": ts_s / native_s,
+            "cyclesim_slowdown": cs_s / native_s,
+            "speedup_vs_tracesim": ts_s / emu_s,
+            "speedup_vs_cyclesim": cs_s / emu_s,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"  {name:15s} n={n:6d} emu {row['emu_slowdown']:9.1f}x | "
+                  f"trace {row['tracesim_slowdown']:9.1f}x | "
+                  f"cycle {row['cyclesim_slowdown']:9.1f}x | "
+                  f"speedup {row['speedup_vs_tracesim']:6.1f}x /"
+                  f" {row['speedup_vs_cyclesim']:6.1f}x")
+
+    def geomean(key):
+        v = np.array([r[key] for r in rows])
+        return float(np.exp(np.mean(np.log(v))))
+
+    summary = {k: geomean(k) for k in
+               ("emu_slowdown", "tracesim_slowdown", "cyclesim_slowdown",
+                "speedup_vs_tracesim", "speedup_vs_cyclesim")}
+    if verbose:
+        print(f"  geomean: emu {summary['emu_slowdown']:.1f}x, "
+              f"trace_sim {summary['tracesim_slowdown']:.1f}x, "
+              f"cycle_sim {summary['cyclesim_slowdown']:.1f}x -> "
+              f"speedups {summary['speedup_vs_tracesim']:.1f}x / "
+              f"{summary['speedup_vs_cyclesim']:.1f}x")
+    return rows, summary

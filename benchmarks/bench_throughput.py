@@ -1,0 +1,58 @@
+"""Emulation-platform throughput: requests/second of the HMES pipeline vs
+chunk width and parallel channels (the FPGA-parallelism analogue). This is
+the paper-technique perf surface tracked in EXPERIMENTS.md §Perf."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (Trace, emulate, emulate_channels, pad_trace,
+                        paper_platform)
+from repro.trace import TraceSpec, generate
+import jax.numpy as jnp
+
+
+def _bench(fn, reps=3):
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+def run(verbose=True, n=65_536):
+    spec = TraceSpec(n_requests=n, footprint_pages=100_000, pattern="zipfian")
+    trace = generate(spec)
+    rows = []
+    for chunk in (256, 1024, 4096):
+        cfg = paper_platform().with_(chunk=chunk)
+        padded, valid = pad_trace(cfg, trace)
+        sec = _bench(lambda: jax.block_until_ready(
+            emulate(cfg, padded, valid)[0].clock))
+        rows.append({"mode": f"chunk={chunk}", "us_per_req": sec / n * 1e6,
+                     "req_per_s": n / sec})
+        if verbose:
+            print(f"  chunk={chunk:5d}              "
+                  f"{rows[-1]['us_per_req']:7.3f} us/req  "
+                  f"({rows[-1]['req_per_s']:,.0f} req/s)")
+
+    # spatial parallelism: C independent channels (vmap)
+    for channels in (4, 16):
+        cfg = paper_platform().with_(chunk=1024)
+        per = n // channels
+        per = per - per % cfg.chunk
+        t = Trace(*(jnp.stack([x[i*per:(i+1)*per] for i in range(channels)])
+                    for x in trace))
+        sec = _bench(lambda: jax.block_until_ready(
+            emulate_channels(cfg, t)[0].clock))
+        total = per * channels
+        rows.append({"mode": f"channels={channels}",
+                     "us_per_req": sec / total * 1e6,
+                     "req_per_s": total / sec})
+        if verbose:
+            print(f"  channels={channels:3d} (chunk 1024) "
+                  f"{rows[-1]['us_per_req']:7.3f} us/req  "
+                  f"({rows[-1]['req_per_s']:,.0f} req/s)")
+    return rows

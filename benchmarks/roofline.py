@@ -1,0 +1,145 @@
+"""Roofline-term derivation from dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware constants (TPU v5e class, per chip):
+    peak bf16 compute 197 TFLOP/s, HBM 819 GB/s, ICI ~50 GB/s/link.
+
+Terms (seconds, per step, per chip — dry-run costs are already per-device):
+    compute    = corrected_HLO_FLOPs / 197e12
+    memory     = corrected_HLO_bytes / 819e9     (upper bound: pre-fusion
+                 operand traffic; `memory_flash_adj` additionally removes
+                 the S x S attention-logit traffic that the flash kernels
+                 keep in VMEM)
+    collective = corrected_collective_bytes / 50e9
+
+MODEL_FLOPS (the "useful" yardstick): 6*N_active*T for training,
+2*N_active*T for prefill, 2*N_active*B for decode, plus causal-optimal
+attention score/value FLOPs; divided by total chips for the per-chip ratio.
+"""
+from __future__ import annotations
+
+import json
+
+import repro.configs as configs
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _attention_flops(cfg, shape) -> float:
+    """Causal-optimal attention score+value FLOPs for the whole step."""
+    L, H = cfg.n_layers, max(cfg.n_heads, 1)
+    if cfg.attn_type == "rwkv6":
+        # linear recurrence: ~4 flops per (token, channel) state update
+        return 8.0 * shape.global_batch * shape.seq_len * cfg.d_model * L
+    if cfg.attn_type == "mla":
+        hd = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim + cfg.mla.v_head_dim
+    else:
+        hd = 2 * cfg.head_dim_
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        per_layer = 2.0 * B * H * S * hd
+        win = cfg.window
+        if win is not None:
+            n_glob = (L // cfg.global_every if cfg.attn_type != "hymba"
+                      else len(cfg.hymba_global_layers))
+            loc = L - n_glob
+            per_layer_loc = 2.0 * B * H * min(win, S) * hd
+            return n_glob * per_layer + loc * per_layer_loc
+        return L * per_layer
+    mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd vs fwd
+    return mult * L * B * H * S * S * hd / 2.0     # /2: causal triangle
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        base = 6.0 * n * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        base = 2.0 * n * shape.global_batch * shape.seq_len
+    else:
+        base = 2.0 * n * shape.global_batch       # one token per sequence
+    return base + _attention_flops(cfg, shape)
+
+
+def logit_traffic_adjustment(arch: str, shape_name: str, chips: int,
+                             dp: int = 16, tp: int = 16) -> float:
+    """Per-device bytes of S x S attention-logit traffic in the naive cost
+    variant that flash attention keeps in VMEM (estimate, ~10 passes of
+    the fp32 logit tensor fwd+bwd, ~5 fwd-only).
+
+    Sharding-aware: logits shard over batch (dp) always, over heads (tp)
+    only when the head count divides the model axis — musicgen (24H),
+    gemma3 (8H) and hymba (25H) attention is batch-parallel only."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" or cfg.attn_type == "rwkv6":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    H = max(cfg.n_heads, 1)
+    b_loc = B / dp if B % dp == 0 else B
+    if H % tp == 0:
+        h_loc, s_loc = H / tp, S            # head-sharded logits
+    elif b_loc * H * (S / tp) * S * 4.0 <= 4e9 and S % tp == 0:
+        h_loc, s_loc = H, S / tp            # context-parallel (M2) logits
+    else:
+        h_loc, s_loc = H, S                 # replicated-head fallback
+    passes = 10.0 if shape.kind == "train" else 5.0
+    return passes * 4.0 * b_loc * h_loc * s_loc * S * cfg.n_layers
+
+
+def terms(rec: dict, chips: int = 256) -> dict | None:
+    """rec: one dryrun.jsonl record with roofline_raw."""
+    rr = rec.get("roofline_raw")
+    if not rr or rr.get("status") == "skipped":
+        return None
+    arch, shape = rec["arch"], rec["shape"]
+    t_c = rr["flops"] / PEAK_FLOPS
+    t_m = rr["bytes"] / HBM_BW
+    adj = max(0.0, rr["bytes"]
+              - logit_traffic_adjustment(arch, shape, chips)) / HBM_BW
+    t_x = rr["coll"] / ICI_BW
+    dom = max((("compute", t_c), ("memory", adj), ("collective", t_x)),
+              key=lambda kv: kv[1])
+    mf = model_flops(arch, shape)
+    useful = mf / (rr["flops"] * chips) if rr["flops"] else 0.0
+    bound = max(t_c, adj, t_x)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "memory_flash_adj_s": adj,
+        "collective_s": t_x, "dominant": dom[0],
+        "model_flops": mf, "useful_ratio": useful,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound if bound else 0,
+    }
+
+
+def markdown_table(jsonl_path: str, chips: int = 256) -> str:
+    lines = ["| arch | shape | compute (ms) | memory^ (ms) | collective (ms) "
+             "| dominant | useful | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    with open(jsonl_path) as f:
+        for raw in f:
+            rec = json.loads(raw)
+            if rec.get("status") == "skipped":
+                lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                             f"skipped: {rec.get('reason','')[:40]} | — | — |")
+                continue
+            t = terms(rec, chips)
+            if t is None:
+                continue
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} "
+                f"| {t['compute_s']*1e3:.2f} | {t['memory_flash_adj_s']*1e3:.2f} "
+                f"| {t['collective_s']*1e3:.2f} | **{t['dominant']}** "
+                f"| {t['useful_ratio']*100:.0f}% "
+                f"| {t['roofline_fraction']*100:.0f}% |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    print(markdown_table(sys.argv[1] if len(sys.argv) > 1
+                         else "results/dryrun.jsonl"))

@@ -1,0 +1,66 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints one CSV line per bench: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_latency_fidelity, bench_policies,
+                            bench_request_volume, bench_speedup,
+                            bench_throughput)
+
+    csv = []
+
+    print("== Fig 7: simulation time vs native (slowdowns & speedups) ==")
+    rows, summary = bench_speedup.run(
+        scale=3e-9 if args.quick else 6e-9,
+        workloads=["505.mcf", "538.imagick"] if args.quick else None)
+    emu_us = 1e6 * sum(r["native_s"] * r["emu_slowdown"] for r in rows) / \
+        sum(r["requests"] for r in rows)
+    csv.append(("fig7_speedup", f"{emu_us:.3f}",
+                f"geomean_speedup_vs_gem5class={summary['speedup_vs_cyclesim']:.1f}x;"
+                f"vs_champsimclass={summary['speedup_vs_tracesim']:.1f}x;"
+                f"emu_slowdown={summary['emu_slowdown']:.1f}x"))
+
+    print("== Fig 8: memory request volumes ==")
+    vol = bench_request_volume.run(scale=2e-9 if args.quick else 4e-9)
+    mx = max(vol, key=lambda r: r["paper_scale_TB_read"])
+    csv.append(("fig8_request_volume", "0",
+                f"max_workload={mx['workload']};"
+                f"max_TB={mx['paper_scale_TB_read']+mx['paper_scale_TB_written']:.2f}"))
+
+    print("== Table I: arbitrary-latency emulation fidelity ==")
+    fid = bench_latency_fidelity.run()
+    worst = max(r["rel_err"] for r in fid)
+    csv.append(("tableI_latency_fidelity", "0", f"worst_rel_err={worst:.4f}"))
+
+    print("== Policy design-space exploration (platform use case) ==")
+    pol = bench_policies.run(n_requests=30_000 if args.quick else 120_000)
+    best = min(pol, key=lambda r: r["mean_read_latency"])
+    static = [r for r in pol if r["policy"] == "static"][0]
+    csv.append(("policy_exploration", "0",
+                f"best={best['policy']};"
+                f"latency_gain={static['mean_read_latency']/best['mean_read_latency']:.2f}x"))
+
+    print("== Emulator throughput (chunk width / channels) ==")
+    thr = bench_throughput.run(n=16_384 if args.quick else 65_536)
+    best_thr = min(thr, key=lambda r: r["us_per_req"])
+    csv.append(("emulator_throughput", f"{best_thr['us_per_req']:.3f}",
+                f"best_mode={best_thr['mode']};req_per_s={best_thr['req_per_s']:.0f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

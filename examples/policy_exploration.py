@@ -1,0 +1,28 @@
+"""Design-space exploration — what the paper built its platform for:
+sweep (placement policy x NVM technology) and compare outcomes quickly.
+
+    PYTHONPATH=src python examples/policy_exploration.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.core import TECHNOLOGIES, paper_platform, run_trace  # noqa: E402
+from repro.trace import TraceSpec, generate                      # noqa: E402
+
+trace = generate(TraceSpec(n_requests=40_000, footprint_pages=100_000,
+                           write_frac=0.4, pattern="zipfian",
+                           zipf_alpha=1.05))
+
+print(f"{'policy':12s} {'NVM':10s} {'read lat (cyc)':>14s} "
+      f"{'fast hit %':>10s} {'migrations':>10s} {'energy mJ':>10s}")
+for tech in ("3dxpoint", "stt-ram"):
+    for policy in ("static", "hotness", "write_bias", "stream"):
+        cfg = paper_platform().with_(
+            policy=policy, slow=TECHNOLOGIES[tech], chunk=512,
+            hot_threshold=4, write_weight=4, decay_every=32)
+        state, _, s = run_trace(cfg, trace)
+        fast = s["reads_fast"] + s["writes_fast"]
+        slow = s["reads_slow"] + s["writes_slow"]
+        print(f"{policy:12s} {tech:10s} {s['mean_read_latency_cyc']:14.1f} "
+              f"{fast/(fast+slow)*100:10.1f} {int(state.dma.swaps_done):10d} "
+              f"{s['energy_mJ']:10.2f}")

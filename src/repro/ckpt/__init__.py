@@ -1,0 +1,6 @@
+"""Checkpointing + fault tolerance."""
+from .checkpoint import (CheckpointManager, save_checkpoint, load_checkpoint,
+                         latest_step)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "latest_step"]

@@ -1,0 +1,133 @@
+"""Configuration for the hybrid-memory emulation platform.
+
+All times are integer *cycles* of the emulated HMMU clock (1 cycle == 1 ns
+at the paper's 1 GHz fabric reference), mirroring the paper's stall-cycle
+latency-injection mechanism (paper §III-F): technologies are emulated by
+scaling cycle counts from the DRAM round trip, not by modelling devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Device ids used throughout the platform.
+FAST = 0  # "DRAM"  — the fast tier
+SLOW = 1  # "NVM"   — the slow tier (emulated technology)
+
+
+@dataclasses.dataclass(frozen=True)
+class TechnologyParams:
+    """Per-technology access characteristics (paper Table I).
+
+    read/write latencies in cycles (== ns); bandwidth in bytes/cycle
+    (== GB/s at 1 GHz).
+    """
+
+    name: str
+    read_lat: int
+    write_lat: int
+    bytes_per_cycle: float
+    # Write endurance (cycles of the cell, not clock cycles) — tracked by a
+    # counter so wear policies can be studied; no behavioural effect here.
+    endurance_log10: float = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class EmulatorConfig:
+    """Static configuration of the emulation platform (paper Table II)."""
+
+    # --- address space geometry -------------------------------------------------
+    page_size: int = 4096           # bytes per page (migration granularity)
+    subblock: int = 512             # DMA transfer sub-block (paper §III-D)
+    n_fast_pages: int = 32768       # 128 MB DRAM tier  (paper Table II)
+    n_slow_pages: int = 262144      # 1 GB NVM tier     (paper Table II)
+    line_size: int = 64             # request granularity after cache filtering
+
+    # --- device timing ------------------------------------------------------------
+    fast: TechnologyParams = dataclasses.field(
+        default_factory=lambda: TECHNOLOGIES["dram"])
+    slow: TechnologyParams = dataclasses.field(
+        default_factory=lambda: TECHNOLOGIES["3dxpoint"])
+    n_banks: int = 16               # banks per device (queue contention model)
+
+    # --- interconnect ("PCIe" in the paper's platform) ----------------------------
+    link_lat: int = 600             # per-request link round-trip overhead, cycles.
+    #   The paper identifies PCIe latency as the dominant slowdown term for
+    #   request-heavy workloads (§IV-B); 600 ns ≈ PCIe Gen3 round trip.
+    link_bytes_per_cycle: float = 8.0   # PCIe Gen3 x8 ≈ 8 GB/s
+
+    # --- host issue model ---------------------------------------------------------
+    issue_gap: int = 4              # cycles between consecutive requests leaving
+    #   the host cache hierarchy (open-loop arrival); chunk boundaries are
+    #   closed-loop: the next chunk starts no earlier than the last in-order
+    #   return of the previous chunk (host blocks on outstanding reads).
+    max_inflight: int = 64          # host MSHR-like cap within a chunk
+
+    # --- DMA engine (paper §III-D) -------------------------------------------------
+    dma_bytes_per_cycle: float = 16.0  # dedicated migration engine bandwidth
+    dma_buffer_bytes: int = 8192       # internal staging buffer (2 pages)
+
+    # --- emulation pipeline -----------------------------------------------------
+    chunk: int = 256                # requests per pipeline chunk (policy-commit
+    #   granularity; chunk=1 reproduces a fully sequential model exactly)
+
+    # --- policy -------------------------------------------------------------------
+    policy: str = "hotness"         # one of core.policies.POLICIES
+    hot_threshold: int = 8          # accesses before a slow page is promoted
+    hotness_decay_shift: int = 1    # hotness >>= shift at each decay boundary
+    decay_every: int = 16           # decay every N chunks (hardware aging tick)
+    write_weight: int = 1           # extra hotness weight for writes ("write_bias")
+
+    # --- misc ----------------------------------------------------------------------
+    power_pj_per_bit_fast: float = 1.2   # dynamic-power estimate coefficients
+    power_pj_per_bit_slow_read: float = 2.0
+    power_pj_per_bit_slow_write: float = 12.0
+
+    @property
+    def n_pages(self) -> int:
+        return self.n_fast_pages + self.n_slow_pages
+
+    @property
+    def subblocks_per_page(self) -> int:
+        return self.page_size // self.subblock
+
+    @property
+    def dma_cycles_per_subblock(self) -> int:
+        return max(1, round(self.subblock / self.dma_bytes_per_cycle))
+
+    def with_(self, **kw) -> "EmulatorConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper Table I, converted to cycles (ns) and bytes/cycle. Bandwidths are
+# platform-level defaults (a DDR4 DIMM, Optane-class media, ...), since
+# Table I only gives latencies; all are overridable per experiment.
+TECHNOLOGIES: dict[str, TechnologyParams] = {
+    "dram":     TechnologyParams("dram", read_lat=50, write_lat=50,
+                                 bytes_per_cycle=19.2, endurance_log10=16),
+    "3dxpoint": TechnologyParams("3dxpoint", read_lat=100, write_lat=275,
+                                 bytes_per_cycle=2.4, endurance_log10=9),
+    "stt-ram":  TechnologyParams("stt-ram", read_lat=20, write_lat=20,
+                                 bytes_per_cycle=12.8, endurance_log10=16),
+    "mram":     TechnologyParams("mram", read_lat=20, write_lat=20,
+                                 bytes_per_cycle=12.8, endurance_log10=15),
+    "flash":    TechnologyParams("flash", read_lat=100_000, write_lat=100_000,
+                                 bytes_per_cycle=0.5, endurance_log10=4),
+    # "hdd" from Table I is out of scope for a memory bus (5 ms) but kept for
+    # completeness of the technology table.
+    "hdd":      TechnologyParams("hdd", read_lat=5_000_000, write_lat=5_000_000,
+                                 bytes_per_cycle=0.15, endurance_log10=15),
+}
+
+
+def paper_platform() -> EmulatorConfig:
+    """The exact platform of paper Table II: 128 MB DRAM + 1 GB emulated
+    3D XPoint behind a PCIe Gen3 link."""
+    return EmulatorConfig()
+
+
+def small_platform(**kw) -> EmulatorConfig:
+    """A reduced platform for tests: tiny page counts, small chunks."""
+    base = dict(n_fast_pages=8, n_slow_pages=56, chunk=16, hot_threshold=3)
+    base.update(kw)
+    return EmulatorConfig(**base)

@@ -1,0 +1,38 @@
+"""Memory-consistency tag matching (paper §III-C, Fig 3).
+
+Requests split across the DRAM/NVM channels complete out of order (a later
+DRAM request overtakes an earlier NVM one). The paper stores request
+headers in a FIFO and matches returned data against the head tag so the
+host always sees responses in request order.
+
+The timing consequence of that mechanism is exactly a running maximum:
+
+    return_i = max_{j <= i} complete_j
+
+because a response is held until every earlier response has been released.
+``jax.lax.cummax`` computes this in O(log n) depth — the vectorized
+equivalent of the HDR-FIFO tag match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def in_order_returns(complete: jax.Array, last_return: jax.Array) -> jax.Array:
+    """Map out-of-order completion times to in-order return times.
+
+    complete: int32[chunk] — media/link completion time per request, in
+        request-issue order.
+    last_return: int32 scalar — return time of the final request of the
+        previous chunk (the FIFO never reorders across chunks either).
+    """
+    shifted = jnp.maximum(complete, last_return)
+    return jax.lax.cummax(shifted, axis=shifted.ndim - 1)
+
+
+def reorder_depth(complete: jax.Array) -> jax.Array:
+    """Diagnostic: how many responses each request had to wait behind
+    (0 == it was already in order). Used by tests and counters."""
+    ret = jax.lax.cummax(complete, axis=complete.ndim - 1)
+    return jnp.sum(ret > complete)

@@ -1,0 +1,93 @@
+"""Performance counters (paper §II-B, Fig 8).
+
+The FPGA platform's key observability feature: users drop in counters of
+their choice. We carry a counter pytree through the emulation scan and
+update it per chunk — read/write transactions and bytes per device (the
+paper's Fig 8 data), migration counts, reorder-hold events, latency sums,
+and the dynamic-power estimate the paper derives from transaction counts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import EmulatorConfig, SLOW
+
+
+class Counters(NamedTuple):
+    reads_fast: jax.Array      # int32 counts
+    writes_fast: jax.Array
+    reads_slow: jax.Array
+    writes_slow: jax.Array
+    bytes_read_fast: jax.Array   # float32 (bytes overflow int32)
+    bytes_write_fast: jax.Array
+    bytes_read_slow: jax.Array
+    bytes_write_slow: jax.Array
+    sum_read_latency: jax.Array  # float32, cycles summed over read requests
+    n_reads: jax.Array           # int32
+    max_latency: jax.Array       # int32
+    reorder_held: jax.Array      # int32 — responses delayed by tag matching
+    energy_pj: jax.Array         # float32 — dynamic energy estimate
+
+    @staticmethod
+    def zeros() -> "Counters":
+        i = jnp.int32(0)
+        f = jnp.float32(0.0)
+        return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f)
+
+
+def update(cfg: EmulatorConfig, c: Counters, *, device: jax.Array,
+           is_write: jax.Array, size: jax.Array, valid: jax.Array,
+           latency: jax.Array, held: jax.Array) -> Counters:
+    """Accumulate one chunk. All request fields are int32[chunk]."""
+    v = valid
+    w = is_write & v
+    r = (~is_write) & v
+    slow = device == SLOW
+    fsize = size.astype(jnp.float32)
+
+    def cnt(mask):
+        return jnp.sum(mask).astype(jnp.int32)
+
+    def byt(mask):
+        return jnp.sum(jnp.where(mask, fsize, 0.0))
+
+    bits_fast = 8.0 * (byt(r & ~slow) + byt(w & ~slow))
+    energy = (bits_fast * cfg.power_pj_per_bit_fast
+              + 8.0 * byt(r & slow) * cfg.power_pj_per_bit_slow_read
+              + 8.0 * byt(w & slow) * cfg.power_pj_per_bit_slow_write)
+
+    read_lat = jnp.where(r, latency, 0)
+    return Counters(
+        reads_fast=c.reads_fast + cnt(r & ~slow),
+        writes_fast=c.writes_fast + cnt(w & ~slow),
+        reads_slow=c.reads_slow + cnt(r & slow),
+        writes_slow=c.writes_slow + cnt(w & slow),
+        bytes_read_fast=c.bytes_read_fast + byt(r & ~slow),
+        bytes_write_fast=c.bytes_write_fast + byt(w & ~slow),
+        bytes_read_slow=c.bytes_read_slow + byt(r & slow),
+        bytes_write_slow=c.bytes_write_slow + byt(w & slow),
+        sum_read_latency=c.sum_read_latency + jnp.sum(read_lat.astype(jnp.float32)),
+        n_reads=c.n_reads + cnt(r),
+        max_latency=jnp.maximum(c.max_latency, jnp.max(jnp.where(v, latency, 0))),
+        reorder_held=c.reorder_held + held,
+        energy_pj=c.energy_pj + energy,
+    )
+
+
+def summary(c: Counters) -> dict:
+    """Host-side readable summary (concrete values)."""
+    g = lambda x: x.item() if hasattr(x, "item") else x
+    n_reads = max(1, g(c.n_reads))
+    return {
+        "reads_fast": g(c.reads_fast), "writes_fast": g(c.writes_fast),
+        "reads_slow": g(c.reads_slow), "writes_slow": g(c.writes_slow),
+        "GB_read": (g(c.bytes_read_fast) + g(c.bytes_read_slow)) / 1e9,
+        "GB_written": (g(c.bytes_write_fast) + g(c.bytes_write_slow)) / 1e9,
+        "mean_read_latency_cyc": g(c.sum_read_latency) / n_reads,
+        "max_latency_cyc": g(c.max_latency),
+        "reorder_held": g(c.reorder_held),
+        "energy_mJ": g(c.energy_pj) / 1e9,
+    }

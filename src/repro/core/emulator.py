@@ -1,0 +1,225 @@
+"""The HMMU emulation pipeline — the platform's "FPGA fabric".
+
+Requests flow through the same stages as the paper's Fig 2 workflow:
+
+    RX link -> TLP decode -> redirection-table lookup -> DMA-conflict
+    redirect -> bank queues (per device) -> media access -> tag-match
+    in-order return -> TX link
+
+Each stage is a vectorized array computation over a *chunk* of requests;
+ordering-sensitive stages (bank queues, link serialization, in-order
+return) are resolved exactly with associative scans (see latency.py,
+consistency.py). Policy state (hotness, migrations) commits at chunk
+boundaries — the pipeline-depth visibility delay real RTL has.
+
+``chunk=1`` degrades to a fully sequential model, which the oracle tests
+compare against; large chunks are the "FPGA mode" delivering the paper's
+orders-of-magnitude speedup over sequential software simulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import consistency, counters as counters_lib, dma as dma_lib
+from . import latency, policies as policies_lib, table as table_lib
+from .config import EmulatorConfig, FAST, SLOW
+
+
+class Trace(NamedTuple):
+    """A memory-request trace (struct-of-arrays, int32)."""
+    page: jax.Array      # flat page number
+    offset: jax.Array    # byte offset within the page
+    is_write: jax.Array  # bool
+    size: jax.Array      # bytes (usually the 64B line size)
+
+    def __len__(self):
+        return self.page.shape[-1]
+
+
+class EmulatorState(NamedTuple):
+    table_device: jax.Array   # int32[n_pages]
+    table_frame: jax.Array    # int32[n_pages]
+    hotness: jax.Array        # int32[n_pages]
+    wear: jax.Array           # int32[n_slow_pages] — writes per NVM frame
+    #   (endurance tracking, paper Table I row; policies like write_bias
+    #    exist to flatten exactly this histogram)
+    fast_owner: jax.Array     # int32[n_fast_pages] — inverse map frame -> page
+    clock_ptr: jax.Array      # int32 — CLOCK victim pointer over fast frames
+    chunk_idx: jax.Array      # int32 — chunks processed (decay ticks)
+    dma: dma_lib.DMAState
+    clock: jax.Array          # int32 cycles
+    bank_free: jax.Array      # int32[2 * n_banks] — per device x bank
+    link_free_rx: jax.Array   # int32
+    link_free_tx: jax.Array   # int32
+    last_return: jax.Array    # int32
+    counters: counters_lib.Counters
+
+
+def init_state(cfg: EmulatorConfig) -> EmulatorState:
+    device, frame = table_lib.init_table(cfg)
+    z = jnp.int32(0)
+    return EmulatorState(
+        table_device=device, table_frame=frame,
+        hotness=jnp.zeros(cfg.n_pages, jnp.int32),
+        wear=jnp.zeros(cfg.n_slow_pages, jnp.int32),
+        fast_owner=jnp.arange(cfg.n_fast_pages, dtype=jnp.int32),
+        clock_ptr=z, chunk_idx=z,
+        dma=dma_lib.DMAState.idle(),
+        clock=z,
+        bank_free=jnp.zeros(2 * cfg.n_banks, jnp.int32),
+        link_free_rx=z, link_free_tx=z, last_return=z,
+        counters=counters_lib.Counters.zeros(),
+    )
+
+
+def pad_trace(cfg: EmulatorConfig, t: Trace) -> tuple[Trace, jax.Array]:
+    """Pad to a multiple of cfg.chunk; returns (trace, valid mask)."""
+    n = len(t)
+    rem = (-n) % cfg.chunk
+    valid = jnp.arange(n + rem) < n
+    if rem:
+        t = Trace(*(jnp.pad(x, (0, rem)) for x in t))
+    return t, valid
+
+
+def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
+                chunk: tuple[Trace, jax.Array]):
+    trace, valid = chunk
+    page, offset, is_write, size = trace
+    n = page.shape[0]
+    size = jnp.where(valid, size, 0)
+
+    # --- stage 1: RX link (host -> HMMU). Writes carry payload, reads a header.
+    issue = state.clock + cfg.issue_gap * (1 + jnp.arange(n, dtype=jnp.int32))
+    issue = jnp.where(valid, issue, latency._NEG)
+    rx_bytes = jnp.where(is_write, size, 16)
+    rx_srv = jnp.where(valid, latency.link_service_cycles(cfg, rx_bytes), 0)
+    rx_done = latency.maxplus_scan(
+        jnp.maximum(issue, jnp.where(valid, state.link_free_rx, latency._NEG)),
+        rx_srv)
+    arrive = rx_done + jnp.where(valid, cfg.link_lat // 2, 0)
+
+    # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
+    dev = state.table_device[page]
+    frm = state.table_frame[page]
+    a = jnp.maximum(state.dma.page_a, 0)
+    b = jnp.maximum(state.dma.page_b, 0)
+    dev, frm = dma_lib.redirect(
+        cfg, state.dma, page, offset, arrive, dev, frm,
+        state.table_device[a], state.table_frame[a],
+        state.table_device[b], state.table_frame[b])
+
+    # --- stage 3: per-device bank queues + media access.
+    bank = dev * cfg.n_banks + frm % cfg.n_banks
+    med_srv = jnp.where(valid, latency.device_service_cycles(cfg, dev, is_write, size), 0)
+    med_done, bank_free = latency.resolve_bank_queues(
+        arrive, med_srv, bank, 2 * cfg.n_banks, state.bank_free)
+
+    # --- stage 4: tag-match in-order return (paper §III-C) ...
+    ordered = consistency.in_order_returns(
+        jnp.where(valid, med_done, latency._NEG), state.last_return)
+    held = jnp.sum((ordered > med_done) & valid).astype(jnp.int32)
+
+    # --- stage 5: ... then TX link serialization (responses leave in order).
+    tx_bytes = jnp.where(is_write, 16, size)
+    tx_srv = jnp.where(valid, latency.link_service_cycles(cfg, tx_bytes), 0)
+    returns = latency.maxplus_scan(
+        jnp.maximum(ordered, jnp.where(valid, state.link_free_tx, latency._NEG)),
+        tx_srv) + jnp.where(valid, cfg.link_lat // 2, 0)
+
+    lat = jnp.where(valid, returns - issue, 0)
+
+    # --- chunk boundary: counters, hotness, DMA completion, policy commit.
+    ctr = counters_lib.update(cfg, state.counters, device=dev,
+                              is_write=is_write, size=size, valid=valid,
+                              latency=lat, held=held)
+    do_decay = (state.chunk_idx % cfg.decay_every) == (cfg.decay_every - 1)
+    hotness = policies_lib.update_hotness(cfg, state.hotness, page, is_write,
+                                          valid, do_decay)
+    # NVM endurance: count writes per slow frame (DMA migration writes the
+    # whole page once too — charged at swap commit below is negligible vs
+    # demand writes, so we charge demand traffic only).
+    slow_wr = is_write & valid & (dev == SLOW)
+    wear = state.wear.at[jnp.where(slow_wr, frm, 0)].add(
+        slow_wr.astype(jnp.int32), mode="drop")
+
+    any_valid = jnp.any(valid)
+    last_ret = jnp.where(any_valid, jnp.max(jnp.where(valid, returns, state.last_return)),
+                         state.last_return)
+    now = jnp.maximum(state.clock + cfg.issue_gap * n, last_ret)
+
+    swap_a = jnp.maximum(state.dma.page_a, 0)  # pre-completion swap pair
+    dma, tdev, tfrm = state.dma, state.table_device, state.table_frame
+    dma, tdev, tfrm, done = dma_lib.maybe_complete(cfg, dma, now, tdev, tfrm)
+    # Maintain the frame -> page inverse map: the promoted page (swap_a, now
+    # FAST) owns its new frame.
+    own_idx = jnp.where(done & (tdev[swap_a] == FAST), tfrm[swap_a], 0)
+    own_val = jnp.where(done & (tdev[swap_a] == FAST), swap_a,
+                        state.fast_owner[0])
+    fast_owner = state.fast_owner.at[own_idx].set(own_val)
+
+    want, cand, victim, clock_ptr = policy(
+        cfg, hotness, tdev, fast_owner, state.clock_ptr, page, is_write, valid)
+    want = want & any_valid & (tdev[cand] == SLOW) & (tdev[victim] == FAST)
+    dma = dma_lib.maybe_start(dma, want, cand, victim, now)
+
+    new_state = EmulatorState(
+        table_device=tdev, table_frame=tfrm, hotness=hotness, wear=wear,
+        fast_owner=fast_owner, clock_ptr=clock_ptr,
+        chunk_idx=state.chunk_idx + 1, dma=dma,
+        clock=now,
+        bank_free=bank_free,
+        link_free_rx=jnp.where(any_valid, rx_done[-1], state.link_free_rx),
+        link_free_tx=jnp.where(any_valid, returns[-1], state.link_free_tx),
+        last_return=last_ret,
+        counters=ctr,
+    )
+    out = {"returns": jnp.where(valid, returns, 0),
+           "device": jnp.where(valid, dev, -1),
+           "latency": lat}
+    return new_state, out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
+            state: EmulatorState | None = None
+            ) -> tuple[EmulatorState, dict]:
+    """Run a trace through the platform. Returns the final state and
+    per-request outputs (in-order return time, device accessed, latency).
+
+    The trace length must be a multiple of ``cfg.chunk`` (use
+    ``pad_trace``). Pass ``state`` to continue a previous emulation (the
+    serving integration feeds traces incrementally). jit-compiled;
+    vmap-able over a leading channel axis via ``emulate_channels``.
+    """
+    policy = policies_lib.get(cfg.policy)
+    n = len(trace)
+    assert n % cfg.chunk == 0, "pad the trace to a chunk multiple first"
+    if valid is None:
+        valid = jnp.ones(n, bool)
+    if state is None:
+        state = init_state(cfg)
+    chunks = jax.tree.map(lambda x: x.reshape(n // cfg.chunk, cfg.chunk),
+                          (trace, valid))
+    state, outs = jax.lax.scan(
+        functools.partial(_chunk_step, cfg, policy), state, chunks)
+    outs = jax.tree.map(lambda x: x.reshape(n), outs)
+    return state, outs
+
+
+def emulate_channels(cfg: EmulatorConfig, traces: Trace):
+    """FPGA-style spatial parallelism: emulate many independent trace
+    channels at once (vmapped). ``traces`` has a leading channel axis."""
+    fn = jax.vmap(lambda t: emulate(cfg, t))
+    return fn(traces)
+
+
+def run_trace(cfg: EmulatorConfig, trace: Trace):
+    """Convenience wrapper: pad, emulate, return (state, outputs, summary)."""
+    padded, valid = pad_trace(cfg, trace)
+    state, outs = emulate(cfg, padded, valid)
+    return state, outs, counters_lib.summary(state.counters)

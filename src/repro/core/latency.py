@@ -1,0 +1,86 @@
+"""Latency model: arbitrary stall-cycle injection (paper §III-F).
+
+The paper emulates any NVM technology by inserting stall cycles scaled from
+the measured DRAM round trip. Here the same idea is analytic: every request
+gets ``service = device latency + transfer + bank-queue wait + link``,
+with all terms derived from the technology table (``config.TECHNOLOGIES``).
+
+Queue contention is resolved *exactly* inside a chunk with a max-plus
+associative scan: the recurrence
+
+    done_i = max(arrival_i, done_{prev in same bank}) + service_i
+
+is the composition of functions f(x) = max(M, x + C) with
+M = arrival + service, C = service, which is associative — so a chunk of
+requests resolves in O(log chunk) depth instead of sequentially, exactly
+like the pipelined RTL in the FPGA resolves one request per cycle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import EmulatorConfig, FAST, SLOW
+
+
+def maxplus_scan(arrival: jax.Array, service: jax.Array) -> jax.Array:
+    """Resolve ``done_i = max(arrival_i, done_{i-1}) + service_i`` in parallel.
+
+    Closed form: unrolling gives done_i = max_{j<=i}(arr_j + sum_{k=j..i}
+    srv_k) = cummax(arr_j - CS_{j-1}) + CS_i with CS = cumsum(srv) — two
+    *native* cumulative primitives instead of an associative_scan with a
+    custom combine (a 5.5x win on the CPU backend; EXPERIMENTS.md §Perf).
+
+    Works on int32 cycle counts. Shapes: arrival/service [..., n] scanned
+    over the last axis. Elements with ``service == 0`` and
+    ``arrival == INT_MIN`` are identity pass-throughs (used for bank masks).
+    """
+    ax = arrival.ndim - 1
+    cs = jnp.cumsum(service, axis=ax)
+    return jax.lax.cummax(arrival - (cs - service), axis=ax) + cs
+
+
+_NEG = jnp.int32(-(2**30))
+
+
+def resolve_bank_queues(arrival: jax.Array, service: jax.Array,
+                        bank: jax.Array, n_banks: int,
+                        bank_free: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-bank queue resolution for one chunk.
+
+    arrival, service, bank: int32[chunk]; bank in [0, n_banks).
+    bank_free: int32[n_banks] — next-free time of each bank at chunk start.
+
+    Returns (done[chunk], new_bank_free[n_banks]).
+    """
+    onehot = bank[None, :] == jnp.arange(n_banks, dtype=bank.dtype)[:, None]
+    # Seed each bank's lane with its chunk-start busy time via a virtual
+    # element folded into the first real arrival of the lane.
+    arr = jnp.where(onehot, jnp.maximum(arrival[None, :], _NEG), _NEG)
+    srv = jnp.where(onehot, service[None, :], 0)
+    # Fold bank_free in: a request can't start before the bank frees up.
+    arr = jnp.where(onehot, jnp.maximum(arr, bank_free[:, None]), arr)
+    done_lanes = maxplus_scan(arr, srv)               # [n_banks, chunk]
+    done = jnp.sum(jnp.where(onehot, done_lanes, 0), axis=0)
+    new_free = done_lanes[:, -1]
+    # Lanes that saw no request keep their old busy time.
+    saw = jnp.any(onehot, axis=1)
+    new_free = jnp.where(saw, new_free, bank_free)
+    return done, new_free
+
+
+def device_service_cycles(cfg: EmulatorConfig, device: jax.Array,
+                          is_write: jax.Array, size: jax.Array) -> jax.Array:
+    """Media access time (latency + transfer) per request, int32 cycles."""
+    f, s = cfg.fast, cfg.slow
+    lat_fast = jnp.where(is_write, f.write_lat, f.read_lat)
+    lat_slow = jnp.where(is_write, s.write_lat, s.read_lat)
+    xfer_fast = jnp.ceil(size / f.bytes_per_cycle).astype(jnp.int32)
+    xfer_slow = jnp.ceil(size / s.bytes_per_cycle).astype(jnp.int32)
+    slow = device == SLOW
+    return jnp.where(slow, lat_slow + xfer_slow, lat_fast + xfer_fast)
+
+
+def link_service_cycles(cfg: EmulatorConfig, size: jax.Array) -> jax.Array:
+    """Serialization time on the host<->HMMU link (PCIe analogue)."""
+    return jnp.ceil(size / cfg.link_bytes_per_cycle).astype(jnp.int32)

@@ -1,0 +1,149 @@
+"""Data placement / migration / pattern-recognition policies (paper §III-A).
+
+The paper's platform exists so users can drop *their own* policies into the
+HMMU pipeline. A policy here is a pure function examining the chunk's
+access stream plus the policy state, and proposing (at most) one page swap
+for the single DMA engine — exactly the three policy aspects the paper
+names: access-pattern recognition, data placement, data migration.
+
+Hardware faithfulness note: policies only use O(chunk) work plus O(1)
+state lookups — promotion candidates come from the *current* access stream
+(what the RTL pipeline sees), and victims come from a CLOCK-style
+round-robin pointer over DRAM frames (``fast_owner`` inverse map), not
+from a global argmin no RTL could compute in a cycle. A global-scan
+variant ("hotness_global") is kept as an idealized reference policy for
+design-space studies.
+
+Policy interface::
+
+    propose(cfg, hotness, table_device, fast_owner, ptr, pages, is_write, valid)
+        -> (want: bool[], slow_page: int32[], fast_victim: int32[], new_ptr)
+
+New policies register via ``@register("name")``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import EmulatorConfig, FAST, SLOW
+
+POLICIES: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        POLICIES[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable:
+    if name not in POLICIES:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(POLICIES)}")
+    return POLICIES[name]
+
+
+def update_hotness(cfg: EmulatorConfig, hotness: jax.Array, pages: jax.Array,
+                   is_write: jax.Array, valid: jax.Array,
+                   do_decay: jax.Array) -> jax.Array:
+    """Scatter-add chunk accesses (writes weighted), then decay-by-shift on
+    ``do_decay`` boundaries (hardware aging counters)."""
+    w = 1 + (cfg.write_weight - 1) * is_write.astype(jnp.int32)
+    w = jnp.where(valid, w, 0)
+    hotness = hotness.at[pages].add(w, mode="drop")
+    return jax.lax.cond(do_decay,
+                        lambda h: h >> cfg.hotness_decay_shift,
+                        lambda h: h, hotness)
+
+
+def _chunk_candidate(cfg, hotness, table_device, pages, valid):
+    """Hottest slow-resident page among this chunk's accesses."""
+    heat = jnp.where(valid & (table_device[pages] == SLOW), hotness[pages], -1)
+    j = jnp.argmax(heat)
+    return pages[j], heat[j]
+
+
+def _clock_victim(fast_owner, ptr):
+    return fast_owner[ptr]
+
+
+@register("static")
+def static_policy(cfg, hotness, table_device, fast_owner, ptr,
+                  pages, is_write, valid):
+    """Placement fixed at initialization; never migrate (the baseline the
+    paper's users compare their designs against)."""
+    z = jnp.int32(0)
+    return jnp.bool_(False), z, z, ptr
+
+
+@register("hotness")
+def hotness_policy(cfg, hotness, table_device, fast_owner, ptr,
+                   pages, is_write, valid):
+    """Promote the hottest slow page seen in this chunk once it crosses
+    ``hot_threshold``; victim = CLOCK pointer over DRAM frames, skipped if
+    the victim is hotter than the candidate."""
+    cand, heat = _chunk_candidate(cfg, hotness, table_device, pages, valid)
+    victim = _clock_victim(fast_owner, ptr)
+    want = (heat >= cfg.hot_threshold) & (heat > hotness[victim])
+    new_ptr = jnp.where(want, (ptr + 1) % fast_owner.shape[0], ptr)
+    return want, cand, victim, new_ptr
+
+
+@register("write_bias")
+def write_bias_policy(cfg, hotness, table_device, fast_owner, ptr,
+                      pages, is_write, valid):
+    """Same promotion rule, but hotness accumulation weights writes by
+    ``cfg.write_weight`` (configure > 1): NVM writes are the expensive,
+    endurance-limited operation (paper Table I), so write-heavy pages
+    should live in DRAM."""
+    return hotness_policy(cfg, hotness, table_device, fast_owner, ptr,
+                          pages, is_write, valid)
+
+
+@register("stream")
+def stream_policy(cfg, hotness, table_device, fast_owner, ptr,
+                  pages, is_write, valid):
+    """Access-pattern recognition: detect a dominant small stride in the
+    chunk's page stream and *pre-promote* the stream's next page before
+    demand accesses pay NVM latency (prefetch-style migration). Falls back
+    to the hotness rule when no stream is detected."""
+    deltas = jnp.where(valid[1:] & valid[:-1], pages[1:] - pages[:-1], 0)
+    span = 4  # recognise strides in [-span, span] \ {0}
+    in_range = (jnp.abs(deltas) <= span) & (deltas != 0)
+    hist = jnp.zeros(2 * span + 1, jnp.int32).at[
+        jnp.clip(deltas + span, 0, 2 * span)].add(
+        in_range.astype(jnp.int32), mode="drop")
+    stride = jnp.argmax(hist).astype(jnp.int32) - span
+    strength = jnp.max(hist)
+    streaming = strength > (pages.shape[0] // 4)
+
+    last = pages[jnp.argmax(jnp.where(valid, jnp.arange(pages.shape[0]), -1))]
+    target = jnp.clip(last + stride, 0, table_device.shape[0] - 1)
+    target_is_slow = table_device[target] == SLOW
+
+    hw, hc, hv, _ = hotness_policy(cfg, hotness, table_device, fast_owner,
+                                   ptr, pages, is_write, valid)
+    want_stream = streaming & target_is_slow
+    want = want_stream | hw
+    cand = jnp.where(want_stream, target, hc)
+    victim = hv
+    new_ptr = jnp.where(want, (ptr + 1) % fast_owner.shape[0], ptr)
+    return want, cand, victim, new_ptr
+
+
+@register("hotness_global")
+def hotness_global_policy(cfg, hotness, table_device, fast_owner, ptr,
+                          pages, is_write, valid):
+    """Idealized reference: global hottest-slow / coldest-fast scan each
+    chunk. No RTL implements this in a cycle — kept for design-space
+    comparison against the realizable policies above."""
+    heat_all = jnp.where(table_device == SLOW, hotness, -1)
+    cand = jnp.argmax(heat_all).astype(jnp.int32)
+    heat = heat_all[cand]
+    cold = jnp.where(table_device == FAST, hotness, jnp.int32(2 ** 30))
+    victim = jnp.argmin(cold).astype(jnp.int32)
+    want = (heat >= cfg.hot_threshold) & (heat > hotness[victim])
+    return want, cand, victim, ptr

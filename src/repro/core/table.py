@@ -1,0 +1,94 @@
+"""Address-redirection table + allocator middleware.
+
+Heterogeneity transparency (paper §III-B): the OS/application sees one flat
+physical space; the HMMU translates physical page -> (device, frame). The
+mapping *is* the placement policy's state and migrations rewrite it.
+
+The paper's middleware (mem_driver.ko + modified jemalloc, §III-G) becomes
+``HybridAllocator``: a host-side page allocator over the flat space that
+honours placement *hints* (the paper's extended malloc API) by choosing
+pages whose initial mapping lands on the preferred device. The serving
+stack (repro.memtier) allocates KV-cache pages through this API.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import EmulatorConfig, FAST, SLOW
+
+
+def init_table(cfg: EmulatorConfig) -> tuple[jax.Array, jax.Array]:
+    """Initial placement: first ``n_fast_pages`` of the flat space map to
+    DRAM frames, the rest to NVM frames (paper's BAR window layout maps the
+    two DIMMs contiguously)."""
+    n = cfg.n_pages
+    device = jnp.where(jnp.arange(n) < cfg.n_fast_pages, FAST, SLOW
+                       ).astype(jnp.int32)
+    frame = jnp.where(jnp.arange(n) < cfg.n_fast_pages,
+                      jnp.arange(n), jnp.arange(n) - cfg.n_fast_pages
+                      ).astype(jnp.int32)
+    return device, frame
+
+
+def check_table(cfg: EmulatorConfig, device: np.ndarray,
+                frame: np.ndarray) -> None:
+    """Invariant: the mapping is a bijection onto device frames — every
+    fast frame and slow frame is owned by exactly one page. Raises on
+    violation (used by tests and by the emulator's debug mode)."""
+    device = np.asarray(device)
+    frame = np.asarray(frame)
+    fast_frames = np.sort(frame[device == FAST])
+    slow_frames = np.sort(frame[device == SLOW])
+    if fast_frames.size != cfg.n_fast_pages or \
+            not np.array_equal(fast_frames, np.arange(cfg.n_fast_pages)):
+        raise AssertionError("fast-frame mapping is not a bijection")
+    if slow_frames.size != cfg.n_slow_pages or \
+            not np.array_equal(slow_frames, np.arange(cfg.n_slow_pages)):
+        raise AssertionError("slow-frame mapping is not a bijection")
+
+
+class HybridAllocator:
+    """Host-side allocator over the flat hybrid space with placement hints.
+
+    Mirrors the paper's driver+jemalloc middleware: allocations are ranges
+    of flat pages; ``hint`` expresses device preference honoured on a
+    best-effort basis (like the extended malloc API of §III-G).
+    """
+
+    def __init__(self, cfg: EmulatorConfig):
+        self.cfg = cfg
+        # Free pools of flat page numbers whose *initial* mapping is on the
+        # given device.
+        self._free = {
+            FAST: list(range(cfg.n_fast_pages - 1, -1, -1)),
+            SLOW: list(range(cfg.n_pages - 1, cfg.n_fast_pages - 1, -1)),
+        }
+        self._owned: dict[int, list[int]] = {}
+        self._next_handle = 0
+
+    def alloc(self, n_pages: int, hint: int = FAST) -> tuple[int, np.ndarray]:
+        """Allocate ``n_pages`` flat pages, preferring ``hint`` device.
+        Returns (handle, page_numbers)."""
+        other = SLOW if hint == FAST else FAST
+        take = []
+        for pool in (self._free[hint], self._free[other]):
+            while pool and len(take) < n_pages:
+                take.append(pool.pop())
+        if len(take) < n_pages:
+            for p in take:  # roll back
+                self._free[FAST if p < self.cfg.n_fast_pages else SLOW].append(p)
+            raise MemoryError(f"out of hybrid memory ({n_pages} pages)")
+        handle = self._next_handle
+        self._next_handle += 1
+        self._owned[handle] = take
+        return handle, np.asarray(take, np.int32)
+
+    def free(self, handle: int) -> None:
+        for p in self._owned.pop(handle):
+            self._free[FAST if p < self.cfg.n_fast_pages else SLOW].append(p)
+
+    @property
+    def free_pages(self) -> dict[int, int]:
+        return {d: len(v) for d, v in self._free.items()}

@@ -1,0 +1,4 @@
+"""Deterministic sharded synthetic token pipeline."""
+from .pipeline import DataConfig, make_batch_iterator, batch_specs
+
+__all__ = ["DataConfig", "make_batch_iterator", "batch_specs"]

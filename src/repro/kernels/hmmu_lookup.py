@@ -1,0 +1,57 @@
+"""HMMU redirection-table lookup engine — Pallas TPU kernel.
+
+The paper's hottest pipeline stage: for every request in a chunk, fetch
+the page's redirection-table row (device, frame, flags, hotness, ...).
+On the FPGA this is a BRAM read per cycle; the TPU-native analogue is a
+scalar-prefetch-driven DMA gather: the page indices ride in SMEM ahead of
+the grid (``PrefetchScalarGridSpec``), and each grid step's BlockSpec
+index_map *is* the table lookup — the DMA engine chases the indices
+through HBM while compute overlaps.
+
+Table rows are packed int32[W] (device, frame, hotness, epoch, flags,
+pad...). W=8 keeps rows compact; on a real TPU the row tile pads to the
+(8, 128) int32 native tile, which the dry-run roofline accounts as the
+gather's bandwidth cost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ROW_W = 8  # int32 lanes per table row
+
+
+def _kernel(pages_ref, table_ref, out_ref):
+    # pages_ref is the scalar-prefetch operand; the gather already happened
+    # in the index_map. The body just moves the row VMEM -> VMEM.
+    out_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hmmu_lookup(table: jax.Array, pages: jax.Array, *,
+                interpret: bool = False) -> jax.Array:
+    """Gather redirection-table rows for a request chunk.
+
+    table: int32[n_pages, ROW_W]; pages: int32[chunk] -> int32[chunk, ROW_W].
+    """
+    chunk = pages.shape[0]
+    w = table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(chunk,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i, pages: (pages[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda i, pages: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((chunk, w), jnp.int32),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), table)

@@ -1,0 +1,113 @@
+"""Public jit'd wrappers: dispatch Pallas kernel vs jnp reference.
+
+Kernel path on TPU (compiled) or when REPRO_FORCE_PALLAS=1 (interpret mode
+on CPU — used by the kernel test suite). Reference path everywhere else,
+including the multi-pod dry-run on the CPU host.
+
+``flash_attention`` is differentiable: the Pallas forward pairs with a
+recompute-based reference backward via jax.custom_vjp (the standard
+memory-saving trade — the backward re-runs reference attention under
+autodiff, which XLA fuses; a dedicated backward kernel is a possible
+future optimization and would not change the roofline compute term).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import flash_attention as _fa
+from . import decode_attention as _da
+from . import hmmu_lookup as _hl
+from . import rwkv_scan as _rw
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_REF"):
+        return False
+    if os.environ.get("REPRO_FORCE_PALLAS"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------- #
+# flash attention (training / prefill)
+# --------------------------------------------------------------------------- #
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attn(q, k, v, causal, window, scale):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, interpret=_interpret())
+
+
+def _flash_attn_fwd(q, k, v, causal, window, scale):
+    out = _flash_attn(q, k, v, causal, window, scale)
+    return out, (q, k, v)
+
+
+def _flash_attn_bwd(causal, window, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.attention(q, k, v, causal=causal, window=window,
+                                      scale=scale), q, k, v)
+    return vjp(g)
+
+
+_flash_attn.defvjp(_flash_attn_fwd, _flash_attn_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """[B, Hq, Sq, D] x [B, Hkv, Skv, D]^2 -> [B, Hq, Sq, D]."""
+    if use_pallas():
+        return _flash_attn(q, k, v, causal, window, scale)
+    return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+# --------------------------------------------------------------------------- #
+# flash decode (serving)
+# --------------------------------------------------------------------------- #
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, scale: float | None = None,
+                     window: int | None = None) -> jax.Array:
+    """[B, Hq, D] x [B, Hkv, Smax, D]^2 + int32[B] -> [B, Hq, D]."""
+    if use_pallas():
+        return _da.decode_attention(q, k_cache, v_cache, kv_len, scale=scale,
+                                    window=window, interpret=_interpret())
+    return ref.decode_attention(q, k_cache, v_cache, kv_len, scale=scale,
+                                window=window)
+
+
+# --------------------------------------------------------------------------- #
+# HMMU table lookup (emulation platform hot loop)
+# --------------------------------------------------------------------------- #
+
+def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
+    """int32[n_pages, W] x int32[chunk] -> int32[chunk, W]."""
+    if use_pallas():
+        return _hl.hmmu_lookup(table, pages, interpret=_interpret())
+    return ref.hmmu_lookup(table, pages)
+
+
+# --------------------------------------------------------------------------- #
+# rwkv6 chunked linear attention (SSM-family training hot spot)
+# --------------------------------------------------------------------------- #
+
+def rwkv_chunk(r, k, v, logw, u, *, chunk: int = 128):
+    """[B,H,S,D]^4 + [H,D] -> fp32 [B,H,S,Dv]. Kernel on TPU, jnp
+    reference elsewhere (the reference also returns the carry state used
+    by decode; see models.rwkv)."""
+    if use_pallas():
+        return _rw.rwkv_chunk_scan(r, k, v, logw, u, chunk=chunk,
+                                   interpret=_interpret())
+    from repro.models.rwkv import rwkv_chunk_scan as _ref
+    return _ref(r, k, v, logw, u, chunk)[0]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the lowering path used on non-TPU backends and for the
+multi-pod dry-run: XLA's fused attention is numerically identical and has
+the same FLOP count, so roofline compute terms are unaffected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k: jax.Array, n_q_heads: int) -> jax.Array:
+    """[B, Hkv, S, D] -> [B, Hq, S, D] by repeating each kv head."""
+    b, hkv, s, d = k.shape
+    group = n_q_heads // hkv
+    return jnp.repeat(k, group, axis=1) if group > 1 else k
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int | None = None,
+              scale: float | None = None) -> jax.Array:
+    """Reference multi-head attention with GQA, causal and sliding-window
+    masking. q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D]. Sq == Skv or the
+    final Sq positions of the kv sequence (prefill continuation)."""
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k, hq)
+    v = _gqa_expand(v, hq)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (skv - sq)   # absolute q positions
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= qi - ki < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, scale: float | None = None,
+                     window: int | None = None) -> jax.Array:
+    """Single-token decode attention over a (padded) KV cache.
+
+    q: [B, Hq, D]; k_cache/v_cache: [B, Hkv, Smax, D]; kv_len: int32[B] —
+    number of valid cache entries per sequence (the new token's position is
+    kv_len - 1)."""
+    b, hq, d = q.shape
+    smax = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _gqa_expand(k_cache, hq).astype(jnp.float32)
+    v = _gqa_expand(v_cache, hq).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k) * scale
+    ki = jnp.arange(smax)[None, None, :]
+    mask = ki < kv_len[:, None, None]
+    if window is not None:
+        mask &= ki >= (kv_len[:, None, None] - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v)
+    return out.astype(q.dtype)
+
+
+def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
+    """Redirection-table row gather. table: int32[n_pages, W]; pages:
+    int32[chunk] -> int32[chunk, W]."""
+    return table[pages]

@@ -1,0 +1,1 @@
+"""Launcher: production mesh, sharding specs, step builders, dry-run."""

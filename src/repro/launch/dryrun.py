@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, print memory/cost analysis, and emit roofline
+terms.
+
+The XLA_FLAGS line above MUST run before any other import — jax locks the
+device count at first init. 512 host devices stand in for 2 pods x 256
+chips; everything below is ShapeDtypeStruct-driven, so nothing is
+allocated at model scale.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+        --out results/dryrun.jsonl
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+import repro.configs as configs                      # noqa: E402
+from repro.configs.shapes import SHAPES, shape_applicable  # noqa: E402
+from repro.data import DataConfig, batch_specs as data_specs  # noqa: E402
+from repro.launch import shardings as shd            # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.launch.steps import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step)
+from repro.models import ModelConfig, ShardCtx, init_cache, init_params  # noqa: E402
+from repro.optim import AdamWConfig                  # noqa: E402
+from repro.optim.adamw import init_opt_state         # noqa: E402
+
+# bytes per element for HLO shape parsing
+_DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+       "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+       "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes (per-device) of every collective op."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s*(\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):
+                out[c] += _shape_bytes(m.group(1))
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def micro_batches_for(arch: str, shape_name: str) -> int:
+    """Gradient-accumulation depth per cell (activation-memory lever)."""
+    if shape_name != "train_4k":
+        return 1
+    return {"deepseek-v2-236b": 8, "phi3.5-moe-42b-a6.6b": 4,
+            "minitron-8b": 2, "rwkv6-7b": 2}.get(arch, 1)
+
+
+def build_cell(arch: str, shape_name: str, mesh, cfg: ModelConfig | None = None,
+               micro_batches: int | None = None):
+    """Returns (jitted_fn, arg_specs) for one (arch x shape) cell."""
+    cfg = cfg or configs.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+    sh = ShardCtx.from_mesh(mesh)
+
+    pspecs = shd.param_specs(cfg, sh)
+    params_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pshapes_tree = jax.tree.map(lambda x: x.shape, params_shapes)
+
+    if shape.kind == "train":
+        dcfg = DataConfig(vocab=cfg.vocab, seq_len=shape.seq_len,
+                          global_batch=shape.global_batch,
+                          frontend=cfg.frontend, frame_dim=cfg.frame_dim)
+        bspecs = shd.batch_specs(cfg, sh)
+        opt_shapes = jax.eval_shape(init_opt_state, params_shapes)
+        ospecs_inner = shd.zero1_specs(pspecs, pshapes_tree, sh)
+        ospecs = type(opt_shapes)(mu=ospecs_inner, nu=ospecs_inner,
+                                  step=jax.sharding.PartitionSpec())
+        mb = (micro_batches if micro_batches is not None
+              else micro_batches_for(arch, shape_name))
+        gspecs = shd.to_named(ospecs_inner, mesh)   # ZeRO-2 grad layout
+        step = make_train_step(cfg, AdamWConfig(), sh, micro_batches=mb,
+                               grad_specs=gspecs)
+        fn = jax.jit(step,
+                     in_shardings=(shd.to_named(pspecs, mesh),
+                                   shd.to_named(ospecs, mesh),
+                                   shd.to_named(bspecs, mesh)),
+                     out_shardings=(shd.to_named(pspecs, mesh),
+                                    shd.to_named(ospecs, mesh), None),
+                     donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, data_specs(dcfg))
+        return (fn, args), None
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, sh, smax=shape.seq_len)
+        if cfg.frontend == "frames":
+            inputs = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.frame_dim),
+                jnp.float32)
+            ispec = jax.sharding.PartitionSpec(sh.batch_axes, None, None)
+        else:
+            inputs = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32)
+            ispec = jax.sharding.PartitionSpec(sh.batch_axes, None)
+        cspecs = shd.cache_specs(cfg, sh)
+        out_sh = (None, shd.to_named(cspecs, mesh), None)
+        fn = jax.jit(step,
+                     in_shardings=(shd.to_named(pspecs, mesh),
+                                   shd.to_named(ispec, mesh)),
+                     out_shardings=out_sh)
+        return (fn, (params_shapes, inputs)), None
+
+    # decode
+    step = make_serve_step(cfg, sh)
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = shd.cache_specs(cfg, sh, batch=shape.global_batch)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    bspec = jax.sharding.PartitionSpec(
+        sh.batch_axes_for(shape.global_batch))
+    fn = jax.jit(step,
+                 in_shardings=(shd.to_named(pspecs, mesh),
+                               shd.to_named(bspec, mesh),
+                               shd.to_named(cspecs, mesh),
+                               shd.to_named(bspec, mesh)),
+                 out_shardings=(None, shd.to_named(cspecs, mesh), None),
+                 donate_argnums=(2,))
+    return (fn, (params_shapes, tokens, cache_shapes, pos)), None
+
+
+def _compile_metrics(fn, args, mesh) -> dict:
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["total"], "coll_by_op": coll}
+
+
+def roofline_costs(arch: str, shape_name: str, mesh) -> dict:
+    """Exact per-device FLOPs/bytes/collective totals via the unrolled
+    1-/2-layer variant diff (XLA counts while bodies once; total(L) =
+    (2*V1 - V2) + L*(V2 - V1); EXPERIMENTS.md §Roofline methodology)."""
+    base_cfg = configs.get(arch)
+    L = base_cfg.n_layers
+    out = {}
+    vs = []
+    for lvar in (1, 2):
+        cfg = base_cfg.with_(n_layers=lvar, unroll_layers=True,
+                             attention_impl="naive", rwkv_unroll=True)
+        built, why = build_cell(arch, shape_name, mesh, cfg=cfg,
+                                micro_batches=1)
+        if built is None:
+            return {"status": "skipped", "reason": why}
+        fn, args = built
+        vs.append(_compile_metrics(fn, args, mesh))
+    v1, v2 = vs
+    for key in ("flops", "bytes", "coll"):
+        body = v2[key] - v1[key]
+        out[key] = max(0.0, (2 * v1[key] - v2[key]) + L * body)
+    out["coll_by_op"] = {
+        k: max(0, (2 * v1["coll_by_op"][k] - v2["coll_by_op"][k])
+               + L * (v2["coll_by_op"][k] - v1["coll_by_op"][k]))
+        for k in v1["coll_by_op"]}
+    out["per_layer"] = {k: v2[k] - v1[k] for k in ("flops", "bytes", "coll")}
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             roofline: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    built, why = build_cell(arch, shape_name, mesh)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if built is None:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    fn, args = built
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    rec.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    )
+    if roofline:
+        rec["roofline_raw"] = roofline_costs(arch, shape_name, mesh)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also extract exact roofline costs (slower)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = [(a, s) for a in configs.ALIASES for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, mp, roofline=args.roofline)
+            except Exception as e:           # a failure here is a system bug
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "status": "FAILED", "error": repr(e)[:500]}
+                failures += 1
+            line = json.dumps(rec)
+            print(line, flush=True)
+            if out:
+                out.write(line + "\n")
+                out.flush()
+    if out:
+        out.close()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

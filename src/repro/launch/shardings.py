@@ -1,0 +1,197 @@
+"""PartitionSpec assignment for every pytree in the system.
+
+Param specs are derived from the init_params structure by path rules
+(weights stacked over layers: specs gain a leading None). ZeRO-1 moment
+specs additionally shard one replicated dim over "data". Head-sharding is
+conditional on divisibility (ShardCtx.divides) — gemma3 (8 heads) and
+hymba (25 heads) run attention batch-parallel.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, ShardCtx
+
+
+def _attn_specs(cfg: ModelConfig, sh: ShardCtx) -> dict:
+    m = sh.model_axis
+    heads_ok = sh.divides(cfg.n_heads * cfg.head_dim_) and \
+        sh.divides(cfg.n_heads)
+    kv_ok = sh.divides(cfg.n_kv_heads * cfg.head_dim_) and \
+        sh.divides(cfg.n_kv_heads)
+    h = m if heads_ok else None
+    k = m if kv_ok else None
+    if cfg.attn_type == "gqa" or cfg.attn_type == "hymba":
+        base = {
+            "norm": P(), "wq": P(None, None, h), "wk": P(None, None, k),
+            "wv": P(None, None, k),
+        }
+        if cfg.attn_type == "gqa":
+            base["wo"] = P(None, h, None)
+            return base
+        di_ok = sh.divides(cfg.n_heads * cfg.head_dim_)
+        dm = m if di_ok else None
+        base.update({
+            "wo": P(None, dm, None),
+            "attn_out_norm": P(), "ssm_out_norm": P(),
+            "mamba": {
+                "in_proj": P(None, None, dm),
+                "conv_w": P(None, dm, None),
+                "x_proj": P(None, dm, None),
+                "dt_proj": P(None, None, dm),
+                "dt_bias": P(None, dm),
+                "a_log": P(None, dm, None),
+                "d_skip": P(None, dm),
+            },
+        })
+        return base
+    if cfg.attn_type == "mla":
+        hd_ok = sh.divides(cfg.n_heads)
+        h = m if hd_ok else None
+        return {
+            "norm": P(), "wq_a": P(None, None, None), "q_norm": P(),
+            "wq_b": P(None, None, h),
+            "wkv_a": P(None, None, None), "kv_norm": P(),
+            "wk_b": P(None, None, h), "wv_b": P(None, None, h),
+            "wo": P(None, h, None),
+        }
+    if cfg.attn_type == "rwkv6":
+        d_ok = sh.divides(cfg.d_model) and sh.divides(cfg.n_heads)
+        h = m if d_ok else None
+        return {
+            "norm": P(), "mu_r": P(), "mu_k": P(), "mu_v": P(), "mu_w": P(),
+            "mu_g": P(),
+            "w_r": P(None, None, h), "w_k": P(None, None, h),
+            "w_v": P(None, None, h), "w_g": P(None, None, h),
+            "w_o": P(None, h, None),
+            "decay_a": P(), "decay_b": P(None, None, h),
+            "decay_base": P(None, h) if h else P(),
+            "u": P(None, h, None), "gn_w": P(None, h) if h else P(),
+        }
+    raise ValueError(cfg.attn_type)
+
+
+def _mlp_specs(cfg: ModelConfig, sh: ShardCtx) -> dict:
+    m = sh.model_axis
+    if cfg.attn_type == "rwkv6":
+        f = m if sh.divides(cfg.d_ff) else None
+        return {"norm": P(), "mu_k": P(), "mu_r": P(),
+                "w_k": P(None, None, f), "w_v": P(None, f, None),
+                "w_r": P(None, None, None)}
+    if cfg.moe:
+        e_ok = sh.divides(cfg.moe.n_experts)
+        e = m if e_ok else None
+        p = {"norm": P(), "router": P(None, None, None),
+             "w_in": P(None, e, None, None), "w_gate": P(None, e, None, None),
+             "w_out": P(None, e, None, None)}
+        if cfg.moe.n_shared:
+            f = m if sh.divides(cfg.moe.d_ff_shared) else None
+            p["shared"] = {"w_in": P(None, None, f),
+                           "w_gate": P(None, None, f),
+                           "w_out": P(None, f, None)}
+        return p
+    f = m if sh.divides(cfg.d_ff) else None
+    return {"norm": P(), "w_in": P(None, None, f), "w_gate": P(None, None, f),
+            "w_out": P(None, f, None)}
+
+
+def needs_fsdp(cfg: ModelConfig, sh: ShardCtx,
+               hbm_budget: float = 8e9) -> bool:
+    """Model-axis TP alone leaves params replicated across the data axis;
+    when that replica exceeds the budget (deepseek-v2: 29.5 GB on a 16-way
+    model axis), shard params over 'data' too (FSDP / ZeRO-3)."""
+    msz = max(1, sh.size("model"))
+    return cfg.n_params() * 2 / msz > hbm_budget
+
+
+def param_specs(cfg: ModelConfig, sh: ShardCtx,
+                fsdp: bool | None = None) -> dict:
+    m = sh.model_axis
+    v = m if sh.divides(cfg.vocab) else None
+    embed = {"tokens": P(v, None)}
+    if cfg.frontend == "frames":
+        embed["frames"] = P(None, None)
+    specs = {
+        "embed": embed,
+        "layers": {"attn": _attn_specs(cfg, sh), "mlp": _mlp_specs(cfg, sh)},
+        "final_norm": P(),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, v)
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, sh)
+    if fsdp and "data" in sh.names:
+        shapes = _param_shapes(cfg)
+        specs = zero1_specs(specs, shapes, sh)   # adds 'data' on a free dim
+    return specs
+
+
+def _param_shapes(cfg: ModelConfig):
+    import jax as _jax
+    from repro.models import init_params as _init
+    shapes = _jax.eval_shape(lambda: _init(cfg, _jax.random.PRNGKey(0)))
+    return _jax.tree.map(lambda x: x.shape, shapes)
+
+
+def zero1_specs(param_specs_tree, params_shapes, sh: ShardCtx):
+    """Optimizer-moment specs: param spec + shard one free dim over 'data'
+    (ZeRO-1). Picks the largest divisible unsharded dim."""
+    data = "data" if "data" in sh.names else None
+    if data is None:
+        return param_specs_tree
+    dsz = sh.size("data")
+
+    def one(spec: P, shape):
+        if len(shape) == 0:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        if any(e == data or (isinstance(e, tuple) and data in e)
+               for e in entries):
+            return P(*entries)        # already data-sharded (FSDP params)
+        best, best_dim = None, 0
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is None and dim % dsz == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None:
+            entries[best] = data
+        return P(*entries)
+
+    return jax.tree.map(one, param_specs_tree, params_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, sh: ShardCtx) -> dict:
+    b = sh.batch_axes
+    if cfg.frontend == "frames":
+        return {"inputs": P(b, None, None), "labels": P(b, None)}
+    return {"inputs": P(b, None), "labels": P(b, None)}
+
+
+def cache_specs(cfg: ModelConfig, sh: ShardCtx,
+                batch: int | None = None) -> dict:
+    """Decode-cache specs: batch over DP axes (when divisible), seq over
+    'model' (sequence-sharded flash-decode; DESIGN.md §4)."""
+    b = sh.batch_axes if batch is None else sh.batch_axes_for(batch)
+    m = sh.model_axis
+    if cfg.attn_type == "gqa":
+        kv = P(None, b, None, m, None)
+        return {"k": kv, "v": kv}
+    if cfg.attn_type == "mla":
+        return {"c_kv": P(None, b, m, None), "k_rope": P(None, b, m, None)}
+    if cfg.attn_type == "rwkv6":
+        h = m if sh.divides(cfg.n_heads) else None
+        return {"state": P(None, b, h, None, None),
+                "prev_att": P(None, b, None), "prev_ffn": P(None, b, None)}
+    if cfg.attn_type == "hymba":
+        di = m if sh.divides(cfg.n_heads * cfg.head_dim_) else None
+        kv = P(b, None, m, None)     # per-layer ring buffers (tuple cache)
+        return tuple({"k": kv, "v": kv, "conv": P(b, None, di),
+                      "ssm": P(b, di, None)}
+                     for _ in range(cfg.n_layers))
+    raise ValueError(cfg.attn_type)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,80 @@
+"""Step builders: the exact jit-able functions the launcher lowers/runs.
+
+``make_train_step`` supports gradient accumulation (micro-batches) — the
+activation-memory lever for the biggest train cells — and returns
+(params, opt_state, metrics) with params/opt donated.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, ShardCtx, decode_step, loss_fn, prefill
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, sh: ShardCtx,
+                    micro_batches: int = 1, grad_specs=None):
+    """``grad_specs`` (optional PartitionSpec pytree, normally the ZeRO-1
+    moment specs): constrains gradients — and the fp32 accumulation
+    buffers — to the data-sharded layout. XLA then reduce-scatters each
+    microbatch's gradients instead of all-reducing, and the accumulator
+    shrinks by the data-axis size (ZeRO-2; EXPERIMENTS.md §Perf M5)."""
+
+    def _constrain(grads):
+        if grad_specs is None or not sh.axis_sizes:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, grad_specs,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def compute_grads(params, batch):
+        grad_fn = jax.value_and_grad(
+            lambda p, b: loss_fn(cfg, p, b, sh), has_aux=True)
+        if micro_batches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, _constrain(grads)
+
+        def split(x):
+            return x.reshape(micro_batches, x.shape[0] // micro_batches,
+                             *x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def acc(carry, mb):
+            loss_a, grads_a = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32),
+                grads_a, _constrain(grads))
+            return (loss_a + loss, _constrain(grads)), metrics
+
+        zero = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grads), metrics = jax.lax.scan(acc, (0.0, zero), micro)
+        inv = 1.0 / micro_batches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * inv, last_metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, sh: ShardCtx, smax: int):
+    def prefill_step(params, inputs):
+        return prefill(cfg, params, inputs, sh, smax)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, sh: ShardCtx):
+    def serve_step(params, tokens, cache, pos):
+        return decode_step(cfg, params, tokens, cache, pos, sh)
+    return serve_step

@@ -1,0 +1,6 @@
+"""The paper's technique as a first-class serving feature: a tiered,
+paged KV cache whose placement/migration is managed by the core HMMU."""
+from .tiered_cache import TieredKVAccounting
+from .engine import ServeEngine
+
+__all__ = ["TieredKVAccounting", "ServeEngine"]

@@ -1,0 +1,131 @@
+"""Batched serving engine with the HMMU-managed tiered KV cache.
+
+Continuous-batching style: requests join a fixed-capacity batch slot-wise,
+prefill fills the slot's cache region, decode advances every active slot
+one token per step. The accelerator-side compute uses the model's decode
+path; the memory-system behaviour of the cache streams through the
+TieredKVAccounting platform (the paper's contribution) each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EmulatorConfig
+from repro.models import (ModelConfig, ShardCtx, decode_step, init_cache,
+                          prefill)
+from .tiered_cache import TieredKVAccounting
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # int32 [S] (or frames [S, frame_dim])
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
+                 smax: int = 256, emu_cfg: EmulatorConfig | None = None,
+                 policy: str = "hotness", sh: ShardCtx | None = None,
+                 eos: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.sh = sh or ShardCtx()
+        self.b = batch_size
+        self.smax = smax
+        self.eos = eos
+        self.cache = init_cache(cfg, batch_size, smax)
+        self.pos = jnp.zeros((batch_size,), jnp.int32)
+        self.tokens = jnp.zeros((batch_size,), jnp.int32)
+        self.active: list[Request | None] = [None] * batch_size
+        self.queue: list[Request] = []
+        emu_cfg = emu_cfg or EmulatorConfig(
+            n_fast_pages=256, n_slow_pages=2048, chunk=64, policy=policy)
+        if emu_cfg.policy != policy:
+            emu_cfg = emu_cfg.with_(policy=policy)
+        kv_bytes = self._kv_bytes_per_position()
+        self.tier = TieredKVAccounting(emu_cfg, cfg.n_layers,
+                                       positions_per_page=64,
+                                       bytes_per_position=max(64, kv_bytes))
+        self._decode = jax.jit(
+            lambda p, t, c, q: decode_step(cfg, p, t, c, q, self.sh))
+        self._prefill = jax.jit(
+            lambda p, i: prefill(cfg, p, i, self.sh, smax))
+
+    def _kv_bytes_per_position(self) -> int:
+        c = self.cfg
+        if c.attn_type == "mla":
+            return 2 * (c.mla.kv_lora_rank + c.mla.rope_head_dim)
+        if c.attn_type == "rwkv6":
+            return 0
+        return 2 * 2 * c.n_kv_heads * c.head_dim_
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.b):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                # slot-wise prefill: run the prompt through its own lane
+                prompt = jnp.asarray(req.prompt)[None]
+                logits, cache1, pos1 = self._prefill(self.params, prompt)
+                # splice lane 0 of the fresh cache into this slot
+                def splice(dst, src):
+                    return dst.at[:, slot].set(src[:, 0])
+                self.cache = jax.tree.map(splice, self.cache, cache1)
+                self.pos = self.pos.at[slot].set(pos1[0])
+                nxt = int(jnp.argmax(logits[0]))
+                self.tokens = self.tokens.at[slot].set(nxt)
+                req.out.append(nxt)
+
+    def step(self) -> bool:
+        """One decode step for the whole batch. Returns False when idle."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return False
+
+        logits, self.cache, self.pos = self._decode(
+            self.params, self.tokens, self.cache, self.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = nxt
+
+        # --- memory-system accounting through the HMMU platform -------------
+        kv_lens = [int(self.pos[i]) for i in live]
+        windows = None
+        if self.cfg.window is not None:
+            windows = [self.cfg.window] * len(live)
+        trace = self.tier.access_trace([self.active[i].rid for i in live],
+                                       kv_lens, windows)
+        self.tier.account(trace)
+
+        for i in live:
+            req = self.active[i]
+            tok = int(nxt[i])
+            req.out.append(tok)
+            if len(req.out) >= req.max_new_tokens or \
+                    (self.eos is not None and tok == self.eos) or \
+                    int(self.pos[i]) >= self.smax - 1:
+                req.done = True
+                self.tier.free_sequence(req.rid)
+                self.active[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return steps
+
+    def report(self) -> dict:
+        return self.tier.report()

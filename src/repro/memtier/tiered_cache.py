@@ -1,0 +1,119 @@
+"""Tiered paged KV-cache accounting — the HMMU managing a serving cache.
+
+This is the paper's platform doing its job inside the serving stack:
+the *real application* is the decoding LM (runs at full speed on the
+accelerator); the *design under test* is a KV-cache tier-management
+policy. KV pages (``positions_per_page`` consecutive cache slots of one
+layer group) are allocated in the emulated hybrid space through the
+middleware API (core.table.HybridAllocator — the paper's driver+jemalloc
+analogue, with placement hints: fresh pages prefer the fast tier). Every
+decode step emits the page-access stream the attention kernels would
+issue; the stream feeds the HMMU emulator incrementally, which
+
+  * applies the configured placement/migration policy (promoting hot KV
+    pages to the DRAM tier, demoting cold ones),
+  * accounts per-request latency through the full pipeline model, and
+  * exposes the paper's performance counters (per-tier traffic, energy).
+
+Policies are swappable per engine (`policy="hotness" | "static" | ...`),
+so the engine doubles as the policy-exploration harness the paper built
+its platform for (examples/policy_exploration.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (EmulatorConfig, HybridAllocator, Trace, counters,
+                        emulator as emu, FAST, SLOW)
+
+
+@dataclasses.dataclass
+class TierStats:
+    steps: int = 0
+    requests: int = 0
+    est_cycles: int = 0
+
+
+class TieredKVAccounting:
+    """Tracks one model's decode-cache pages in the hybrid space."""
+
+    def __init__(self, emu_cfg: EmulatorConfig, n_layers: int,
+                 positions_per_page: int = 256,
+                 bytes_per_position: int = 1024):
+        self.cfg = emu_cfg
+        self.alloc = HybridAllocator(emu_cfg)
+        self.n_layers = n_layers
+        self.ppp = positions_per_page
+        self.bpp = bytes_per_position
+        self.state = emu.init_state(emu_cfg)
+        # (seq_id, layer_group, seq_page) -> flat page
+        self._pages: dict[tuple, int] = {}
+        self._handles: dict[tuple, int] = {}
+        self.stats = TierStats()
+
+    def _page_for(self, seq_id: int, pos_page: int) -> int:
+        key = (seq_id, pos_page)
+        if key not in self._pages:
+            # Fresh (hot) KV pages prefer the fast tier — the placement
+            # hint the paper's extended malloc carries (§III-G).
+            handle, pages = self.alloc.alloc(1, hint=FAST)
+            self._pages[key] = int(pages[0])
+            self._handles[key] = handle
+        return self._pages[key]
+
+    def access_trace(self, seq_ids, kv_lens, windows=None):
+        """Build one decode step's page-access stream.
+
+        seq_ids: list of active sequence ids; kv_lens: tokens cached per
+        sequence; windows: per-sequence effective attention windows (None
+        = full). Reads touch every page the attention pass streams; the
+        new token's page gets a write.
+        """
+        pages, offsets, writes = [], [], []
+        for sid, klen, win in zip(
+                seq_ids, kv_lens,
+                windows if windows is not None else [None] * len(seq_ids)):
+            first = 0 if win is None else max(0, (klen - win) // self.ppp)
+            last = (klen - 1) // self.ppp
+            for pp in range(first, last + 1):
+                pages.append(self._page_for(sid, pp))
+                offsets.append((pp % 4) * self.cfg.subblock)
+                writes.append(False)
+            pages.append(self._page_for(sid, last))
+            offsets.append(((klen - 1) % self.ppp) * self.bpp
+                           % self.cfg.page_size)
+            writes.append(True)
+        trace = Trace(
+            page=jnp.asarray(pages, jnp.int32),
+            offset=jnp.asarray(offsets, jnp.int32),
+            is_write=jnp.asarray(writes, bool),
+            size=jnp.full(len(pages), min(self.bpp, 4096), jnp.int32))
+        return trace
+
+    def account(self, trace: Trace) -> dict:
+        """Feed one step's stream through the HMMU emulator (incremental)."""
+        padded, valid = emu.pad_trace(self.cfg, trace)
+        before = int(self.state.clock)
+        self.state, _ = emu.emulate(self.cfg, padded, valid, self.state)
+        self.stats.steps += 1
+        self.stats.requests += len(trace)
+        self.stats.est_cycles = int(self.state.clock)
+        return {"step_cycles": int(self.state.clock) - before}
+
+    def free_sequence(self, seq_id: int):
+        for key in [k for k in self._pages if k[0] == seq_id]:
+            self.alloc.free(self._handles.pop(key))
+            del self._pages[key]
+
+    def report(self) -> dict:
+        summ = counters.summary(self.state.counters)
+        summ.update(est_total_cycles=self.stats.est_cycles,
+                    migrations=int(self.state.dma.swaps_done),
+                    steps=self.stats.steps,
+                    requests=self.stats.requests,
+                    fast_free=self.alloc.free_pages[FAST],
+                    slow_free=self.alloc.free_pages[SLOW])
+        return summ

@@ -1,0 +1,10 @@
+"""Model zoo: one backbone, four block families (GQA / MLA / RWKV6 /
+Hymba), dense or MoE FFN, token or frame frontends."""
+from .config import ModelConfig, MoEConfig, MLAConfig, SSMConfig
+from .sharding import ShardCtx
+from .transformer import (init_params, loss_fn, forward_seq, prefill,
+                          decode_step, init_cache, layer_windows)
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "ShardCtx",
+           "init_params", "loss_fn", "forward_seq", "prefill", "decode_step",
+           "init_cache", "layer_windows"]

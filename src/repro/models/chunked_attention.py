@@ -1,0 +1,183 @@
+"""Memory-bounded attention in pure jnp with a flash-style custom VJP.
+
+This is the attention path used for training and prefill on every backend
+(the Pallas kernel accelerates the TPU forward; this module guarantees the
+whole system — including 32k prefill and 4k training backward — never
+materializes an S x S attention matrix).
+
+GQA/MQA/MLA kv heads are handled in *grouped* form — q is viewed as
+[B, Hkv, G, S, D] and every einsum contracts against the unexpanded
+[B, Hkv, S, D] k/v. No ``jnp.repeat`` materialization: for deepseek's
+decode-style Hkv=1 x 128 q-heads the expansion would be a 4.8 GB/layer
+broadcast (found via dry-run HLO inspection; EXPERIMENTS.md §Perf M1).
+
+Forward: scan over query blocks; each block computes logits against the
+full K (peak memory B*H*bq*S) with a numerically-stable softmax.
+Backward: recomputes P blockwise from the saved logsumexp and accumulates
+dK/dV in fp32 carries — O(S) residuals instead of O(S^2).
+
+``window`` may be a traced scalar (per-layer dynamic windows let a scanned
+layer stack mix local and global attention in one HLO body — how gemma3's
+5:1 interleave lowers without doubling the graph).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qi, ki, causal, window):
+    m = jnp.ones(jnp.broadcast_shapes(qi.shape, ki.shape), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= qi - ki < window
+    return m
+
+
+def _fwd_blocks(q, k, v, causal, window, scale, block_q):
+    """q: [B,Hkv,G,S,D]; k/v: [B,Hkv,Skv,D] -> (out [B,Hkv,G,S,Dv],
+    lse [B,Hkv,G,S])."""
+    b, hkv, g, s, d = q.shape
+    skv = k.shape[2]
+    nb = s // block_q
+    q_off = skv - s
+
+    qb = q.reshape(b, hkv, g, nb, block_q, d).transpose(3, 0, 1, 2, 4, 5)
+
+    def one_block(carry, xs):
+        qi_block, qblk = xs                       # [B,Hkv,G,bq,D]
+        logits = jnp.einsum("bkgqd,bktd->bkgqt",
+                            qblk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        qi = qi_block[:, None] + q_off
+        ki = jnp.arange(skv)[None, :]
+        logits = jnp.where(_mask(qi, ki, causal, window)[None, None, None],
+                           logits, NEG_INF)
+        m = jnp.max(logits, axis=-1)
+        p = jnp.exp(logits - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+        o = o / jnp.where(l == 0., 1., l)[..., None]
+        lse = m + jnp.log(jnp.where(l == 0., 1., l))
+        return carry, (o, lse)
+
+    qi_blocks = jnp.arange(s).reshape(nb, block_q)
+    _, (o, lse) = jax.lax.scan(one_block, None, (qi_blocks, qb))
+    dv = v.shape[-1]
+    out = o.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, dv)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(b, hkv, g, s)
+    return out, lse
+
+
+def _bwd_blocks(q, k, v, out, lse, gr, causal, window, scale, block_q):
+    b, hkv, g, s, d = q.shape
+    skv, dv = k.shape[2], v.shape[-1]
+    nb = s // block_q
+    q_off = skv - s
+
+    delta = jnp.sum(gr.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    tr = lambda x: x.reshape(b, hkv, g, nb, block_q, *x.shape[4:]
+                             ).transpose(3, 0, 1, 2, 4,
+                                         *range(5, x.ndim + 1))
+    qb = tr(q)
+    gb = tr(gr)
+    lseb = lse.reshape(b, hkv, g, nb, block_q).transpose(3, 0, 1, 2, 4)
+    deltab = delta.reshape(b, hkv, g, nb, block_q).transpose(3, 0, 1, 2, 4)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def one_block(carry, xs):
+        dk, dvv = carry
+        qi_block, qblk, gblk, lseblk, dblk = xs
+        logits = jnp.einsum("bkgqd,bktd->bkgqt", qblk.astype(jnp.float32),
+                            kf) * scale
+        qi = qi_block[:, None] + q_off
+        ki = jnp.arange(skv)[None, :]
+        logits = jnp.where(_mask(qi, ki, causal, window)[None, None, None],
+                           logits, NEG_INF)
+        p = jnp.exp(logits - lseblk[..., None])
+        gf = gblk.astype(jnp.float32)
+        dp = jnp.einsum("bkgqd,bktd->bkgqt", gf, vf)
+        ds = p * (dp - dblk[..., None]) * scale
+        dq = jnp.einsum("bkgqt,bktd->bkgqd", ds, kf)
+        dk = dk + jnp.einsum("bkgqt,bkgqd->bktd", ds,
+                             qblk.astype(jnp.float32))
+        dvv = dvv + jnp.einsum("bkgqt,bkgqd->bktd", p, gf)
+        return (dk, dvv), dq
+
+    qi_blocks = jnp.arange(s).reshape(nb, block_q)
+    zero_k = jnp.zeros((b, hkv, skv, d), jnp.float32)
+    zero_v = jnp.zeros((b, hkv, skv, dv), jnp.float32)
+    (dkacc, dvacc), dqb = jax.lax.scan(one_block, (zero_k, zero_v),
+                                       (qi_blocks, qb, gb, lseb, deltab))
+    dq = dqb.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, d)
+    return dq.astype(q.dtype), dkacc.astype(k.dtype), dvacc.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 6))
+def _chunked(q, k, v, window, causal, scale, block_q):
+    out, _ = _fwd_blocks(q, k, v, causal, window, scale, block_q)
+    return out.astype(q.dtype)
+
+
+def _chunked_fwd(q, k, v, window, causal, scale, block_q):
+    out, lse = _fwd_blocks(q, k, v, causal, window, scale, block_q)
+    return out.astype(q.dtype), (q, k, v, out, lse, window, scale)
+
+
+def _chunked_bwd(causal, block_q, res, g):
+    q, k, v, out, lse, window, scale = res
+    dq, dk, dv = _bwd_blocks(q, k, v, out, lse, g, causal, window, scale,
+                             block_q)
+    return dq, dk, dv, None, None
+
+
+_chunked.defvjp(_chunked_fwd, _chunked_bwd)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """Single-shot attention (identical math, S x S logits materialized).
+    Used by the dry-run cost-extraction variants where while-loops would
+    be undercounted by XLA's cost analysis; never on the training path."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bkgqd,bktd->bkgqt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (skv - sq)
+    ki = jnp.arange(skv)[None, :]
+    if window is not None and not isinstance(window, int):
+        window = jnp.asarray(window, jnp.int32)
+    logits = jnp.where(_mask(qi, ki, causal, window)[None, None, None],
+                       logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, scale=None,
+                      block_q=1024):
+    """q:[B,Hq,Sq,D]; k,v:[B,Hkv,Skv,D] -> [B,Hq,Sq,Dv].
+
+    ``window`` may be None, a Python int, or a traced int32 scalar.
+    GQA kv heads are contracted in grouped form (never expanded).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    block_q = min(block_q, sq)
+    if sq % block_q:                     # ragged tail: fall back to one block
+        block_q = sq
+    if window is not None and not isinstance(window, (int,)):
+        window = jnp.asarray(window, jnp.int32)
+    qg = q.reshape(b, hkv, g, sq, d)
+    out = _chunked(qg, k, v, window, causal, scale, block_q)
+    return out.reshape(b, hq, sq, v.shape[-1])

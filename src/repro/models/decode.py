@@ -1,0 +1,106 @@
+"""Distributed flash-decode: partial softmax + psum combine over a
+sequence-sharded KV cache.
+
+Decode caches are sharded on the *sequence* axis (uniform across archs —
+it works for 4-kv-head GQA and headless MLA latents alike, where head
+sharding cannot split a 16-way model axis). Each model shard computes a
+partial (max, sum, weighted-acc) over its cache slice; the combine is two
+small collectives:
+
+    m* = pmax(m);  l* = psum(l * e^{m-m*});  acc* = psum(acc * e^{m-m*})
+
+This is the flash-decode algorithm across chips instead of across SM
+blocks — the TPU-native mapping of the GPU kernel structure. On-chip, each
+shard's slice streams through repro.kernels.decode_attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map                      # jax >= 0.8
+except ImportError:                                # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.kernels import ref
+from .sharding import ShardCtx
+
+NEG_INF = -1e30
+
+
+def _partial(q, k, v, kv_len, offset, window, scale):
+    """Local partial softmax. q:[B,H,Dk]; k:[B,Hkv,Sl,Dk]; v:[B,Hkv,Sl,Dv].
+    Returns m:[B,H], l:[B,H], acc:[B,H,Dv].
+
+    Grouped-GQA einsums: kv heads are never expanded to query heads — for
+    MLA (Hkv=1, 128 q heads) the expansion would broadcast the whole cache
+    shard x128 (4.8 GB/layer at decode_32k; EXPERIMENTS.md §Perf M1)."""
+    b, hq, dk = q.shape
+    hkv, sl = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dk)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = offset[..., None, :] + jnp.arange(sl)[None, None, None, :]
+    mask = pos < kv_len[:, None, None, None]
+    if window is not None:
+        mask &= pos >= kv_len[:, None, None, None] - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    dv = v.shape[-1]
+    return (m.reshape(b, hq), l.reshape(b, hq), acc.reshape(b, hq, dv))
+
+
+def dist_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                kv_len: jax.Array, *, sh: ShardCtx,
+                window=None, scale: float | None = None) -> jax.Array:
+    """q:[B,Hq,Dk]; k_cache:[B,Hkv,Smax,Dk]; v_cache:[B,Hkv,Smax,Dv];
+    kv_len:int32[B] -> [B,Hq,Dv] (fp32, caller casts).
+
+    With a mesh: cache seq axis sharded over all non-batch mesh axes;
+    without: single-shard reference path.
+    """
+    b, hq, dk = q.shape
+    dv = v_cache.shape[-1]
+    scale = scale if scale is not None else dk ** -0.5
+    if window is not None and not isinstance(window, int):
+        window = jnp.asarray(window, jnp.int32)
+
+    seq_axes = tuple(a for a in ("model",) if a in (sh.names or ()))
+    if getattr(sh, "mesh", None) is None or not seq_axes:
+        m, l, acc = _partial(q, k_cache, v_cache, kv_len,
+                             jnp.zeros((1, 1, 1), jnp.int32), window, scale)
+        return acc / jnp.where(l == 0., 1., l)[..., None]
+
+    batch = sh.batch_axes_for(b)
+    mesh = sh.mesh
+    sl = k_cache.shape[2] // sh.size("model")
+
+    def local(q, k, v, kv_len, window):
+        off = jax.lax.axis_index("model") * sl
+        off = jnp.full((1, 1, 1), off, jnp.int32)
+        m, l, acc = _partial(q, k, v, kv_len, off, window, scale)
+        m_g = jax.lax.pmax(m, "model")
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, "model")
+        acc_g = jax.lax.psum(acc * corr[..., None], "model")
+        return acc_g / jnp.where(l_g == 0., 1., l_g)[..., None]
+
+    win_arg = (jnp.asarray(window, jnp.int32) if window is not None
+               else jnp.asarray(0, jnp.int32))
+    has_window = window is not None
+
+    def wrapped(q, k, v, kv_len, win):
+        return local(q, k, v, kv_len, win if has_window else None)
+
+    fn = shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(P(batch, None, None), P(batch, None, "model", None),
+                  P(batch, None, "model", None), P(batch), P()),
+        out_specs=P(batch, None, None))
+    return fn(q, k_cache, v_cache, kv_len.astype(jnp.int32), win_arg)

@@ -1,0 +1,152 @@
+"""Shared transformer layers: norms, RoPE, SwiGLU, GQA attention.
+
+All functions are pure; parameters are dict pytrees created by
+``transformer.init_params``. Activation dtype follows cfg.adtype with
+fp32 accumulation where it matters (norms, softmax, losses).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .chunked_attention import chunked_attention, naive_attention
+from .config import ModelConfig
+from .sharding import ShardCtx
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] -> (cos, sin) of shape [..., dim/2]."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, D]; cos/sin [S, D/2] (broadcastable)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, p: dict, sh: ShardCtx, adtype) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(adtype))
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(adtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(adtype) * h
+    h = sh.constrain(h, sh.batch_axes, None, sh.model_axis)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(adtype))
+
+
+def gqa_project(cfg: ModelConfig, p: dict, x: jax.Array, adtype):
+    """x [B,S,D] -> q [B,Hq,S,Dh], k/v [B,Hkv,S,Dh]."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(adtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(adtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(adtype))
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def use_context_parallel(cfg: ModelConfig, sh: ShardCtx, b: int, s: int,
+                         budget_bytes: float = 4e9) -> bool:
+    """Context-parallel attention for head counts that don't divide the
+    model axis (musicgen 24H, gemma3 8H, hymba 25H): shard *queries* on
+    the sequence axis instead — attention compute parallelizes dp x tp
+    ways and the S x S logits become S x S/tp transients, at the price of
+    all-gathering K/V over the model axis (EXPERIMENTS.md §Perf M2).
+
+    Only when the per-device logit transient fits ``budget_bytes``
+    (prefill_32k falls back to the chunked q-block path)."""
+    if not (sh.model_axis is not None and not sh.divides(cfg.n_heads)
+            and s % sh.size("model") == 0 and s > 1):
+        return False
+    dp = 1
+    for a in (sh.batch_axes or ()):
+        dp *= sh.size(a)
+    b_loc = b / dp if b % dp == 0 else b
+    logits = b_loc * cfg.n_heads * (s / sh.size("model")) * s * 4.0
+    return logits <= budget_bytes
+
+
+def attention_seq_sharded(cfg: ModelConfig, sh: ShardCtx, q, k, v, window,
+                          scale=None):
+    """q seq-sharded over 'model'; k/v replicated (pjit inserts the
+    gathers). Single-shot logits: [B/dp, H, S/tp, S] per device."""
+    b = sh.batch_axes
+    m = sh.model_axis
+    q = sh.constrain(q, b, None, m, None)
+    k = sh.constrain(k, b, None, None, None)
+    v = sh.constrain(v, b, None, None, None)
+    o = naive_attention(q, k, v, causal=True, window=window, scale=scale)
+    return sh.constrain(o, b, None, m, None)
+
+
+def gqa_attention(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+                  positions: jax.Array, window) -> tuple[jax.Array, dict]:
+    """Full-sequence GQA attention (train / prefill). Returns (out, kv)."""
+    adtype = cfg.adtype
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q, k, v = gqa_project(cfg, p, x, adtype)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if use_context_parallel(cfg, sh, b, s):
+        o = attention_seq_sharded(cfg, sh, q, k, v, window)
+    else:
+        q = sh.act_bhsd(q, cfg.n_heads)
+        k = sh.act_bhsd(k, cfg.n_kv_heads)
+        v = sh.act_bhsd(v, cfg.n_kv_heads)
+        attn_fn = (naive_attention if cfg.attention_impl == "naive"
+                   else chunked_attention)
+        o = attn_fn(q, k, v, causal=True, window=window)
+        o = sh.act_bhsd(o, cfg.n_heads)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(adtype))
+    return out, {"k": k, "v": v}
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jax.Array, sh: ShardCtx
+                 ) -> jax.Array:
+    """Token ids [B,S] -> [B,S,D] (vocab-sharded one-hot matmul keeps the
+    gather local to each vocab shard)."""
+    emb = p["tokens"].astype(cfg.adtype)
+    out = emb[tokens]
+    return sh.act_btd(out)
+
+
+def embed_frames(cfg: ModelConfig, p: dict, frames: jax.Array, sh: ShardCtx
+                 ) -> jax.Array:
+    """Precomputed modality embeddings [B,S,frame_dim] -> [B,S,D].
+    (The modality frontend itself is a stub per the assignment; this is
+    the learned adapter projection.)"""
+    out = jnp.einsum("bsf,fd->bsd", frames.astype(cfg.adtype),
+                     p["frames"].astype(cfg.adtype))
+    return sh.act_btd(out)
+
+
+def lm_logits(cfg: ModelConfig, params: dict, x: jax.Array, sh: ShardCtx
+              ) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"]["tokens"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.adtype))
+    return sh.constrain(logits, sh.batch_axes, None, sh.model_axis)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits [B,S,V] (any dtype), labels int32 [B,S]."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,185 @@
+"""Selective SSM (Mamba) head and the Hymba parallel attention+SSM block
+(arXiv:2411.13676).
+
+Hymba runs attention heads and Mamba heads *in parallel* on the same
+normed input; per-path RMS-normalized outputs are averaged and projected
+once. Most layers use sliding-window attention; layers
+``cfg.hymba_global_layers`` (first / middle / last) stay global — the mix
+that makes the arch viable at long context (long_500k runs for this arch).
+
+The SSM recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is evaluated
+with a sequential lax.scan (state [B, d_inner, N]); its FLOP share is tiny
+next to attention/FFN, so the scan is not on the roofline-critical path
+(chunked parallelization noted as future work in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ShardCtx
+from . import layers
+from .chunked_attention import chunked_attention, naive_attention
+from .decode import dist_decode
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+
+
+def _ssm_params(cfg: ModelConfig, p: dict, x_in: jax.Array):
+    """x_in [B,S,di] (post conv+silu) -> dt [B,S,di], B/C [B,S,N]."""
+    n = cfg.ssm.d_state
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x_in, p["x_proj"].astype(x_in.dtype))
+    dt, bc = proj[..., :r], proj[..., r:]
+    bmat, cmat = bc[..., :n], bc[..., n:]
+    dt = jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"].astype(x_in.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def _conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Causal depthwise conv. x [B,S,di], w [di,K]. state [B,K-1,di] carries
+    the last K-1 inputs for decode; None -> zero history (train/prefill)."""
+    b, s, di = x.shape
+    k = w.shape[1]
+    if state is None:
+        state = jnp.zeros((b, k - 1, di), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + s].astype(jnp.float32) * \
+            w[:, i].astype(jnp.float32)
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return out.astype(x.dtype), new_state
+
+
+def mamba_mix(cfg: ModelConfig, p: dict, xn: jax.Array, sh: ShardCtx,
+              conv_state=None, ssm_state=None):
+    """Mamba path. xn [B,S,D] (normed input) -> (y [B,S,di], new_conv_state,
+    new_ssm_state [B,di,N] fp32)."""
+    adtype = cfg.adtype
+    b, s, d = xn.shape
+    n = cfg.ssm.d_state
+
+    xz = jnp.einsum("bsd,de->bse", xn, p["in_proj"].astype(adtype))
+    di = xz.shape[-1] // 2
+    x, z = xz[..., :di], xz[..., di:]
+    x, new_conv = _conv1d(x, p["conv_w"], conv_state)
+    x = jax.nn.silu(x.astype(jnp.float32)).astype(adtype)
+    x = sh.constrain(x, sh.batch_axes, None, sh.model_axis)
+
+    dt, bmat, cmat = _ssm_params(cfg, p, x)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))        # [di,N], negative
+    xf = x.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs                         # [B,di],[B,N],[B,N],[B,di]
+        decay = jnp.exp(dt_t[..., None] * a[None])       # [B,di,N]
+        h = h * decay + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, di, n), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(xf, 1, 0))
+    new_ssm, ys = jax.lax.scan(step, ssm_state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["d_skip"].astype(jnp.float32)[None, None]
+    y = y.astype(adtype) * jax.nn.silu(z.astype(jnp.float32)).astype(adtype)
+    return y, new_conv, new_ssm
+
+
+def _path_norm(y: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + eps)
+    return (yf * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def hymba_block(cfg: ModelConfig, p: dict, xn: jax.Array, sh: ShardCtx,
+                positions: jax.Array, window) -> tuple[jax.Array, dict]:
+    """Parallel attention + mamba on normed input xn [B,S,D].
+    Returns (out [B,S,D], cache {k, v, conv, ssm})."""
+    adtype = cfg.adtype
+    b, s, d = xn.shape
+    hd = cfg.head_dim_
+
+    q, k, v = layers.gqa_project(cfg, p, xn, adtype)
+    cos, sin = layers.rope_tables(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    if layers.use_context_parallel(cfg, sh, b, s):
+        attn = layers.attention_seq_sharded(cfg, sh, q, k, v, window)
+    else:
+        attn_fn = (naive_attention if cfg.attention_impl == "naive"
+                   else chunked_attention)
+        attn = attn_fn(q, k, v, causal=True, window=window)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+
+    ssm_y, conv_state, ssm_state = mamba_mix(cfg, p["mamba"], xn, sh)
+
+    fused = (_path_norm(attn, p["attn_out_norm"], cfg.norm_eps)
+             + _path_norm(ssm_y, p["ssm_out_norm"], cfg.norm_eps)) * 0.5
+    out = jnp.einsum("bse,ed->bsd", fused, p["wo"].astype(adtype))
+    cache = {"k": k, "v": v, "conv": conv_state, "ssm": ssm_state}
+    return out, cache
+
+
+def hymba_decode(cfg: ModelConfig, p: dict, xn: jax.Array, sh: ShardCtx,
+                 cache: dict, kv_len: jax.Array, eff_len=None
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token Hymba step. xn [B,1,D]; cache holds k/v ring buffers
+    [B,Hkv,size,Dh] (new token already written at slot (kv_len-1) % size),
+    conv [B,K-1,di], ssm [B,di,N]. ``eff_len`` = number of valid ring
+    slots (min(kv_len, size)); ring contents ARE the window, so no
+    further window masking applies (keys carry absolute-position RoPE —
+    attention is slot-order agnostic)."""
+    adtype = cfg.adtype
+    b = xn.shape[0]
+    hd = cfg.head_dim_
+
+    q = jnp.einsum("bsd,dh->bsh", xn, p["wq"].astype(adtype))
+    q = q.reshape(b, cfg.n_heads, hd)
+    pos = (kv_len - 1).astype(jnp.float32)
+    cos, sin = layers.rope_tables(pos[:, None], hd, cfg.rope_theta)
+    q = layers.apply_rope(q[:, :, None], cos[:, None], sin[:, None])[:, :, 0]
+
+    if eff_len is None:
+        eff_len = kv_len
+    attn = dist_decode(q, cache["k"], cache["v"], eff_len, sh=sh)
+    attn = attn.astype(adtype).reshape(b, 1, cfg.n_heads * hd)
+
+    ssm_y, new_conv, new_ssm = mamba_mix(
+        cfg, p["mamba"], xn, sh, conv_state=cache["conv"],
+        ssm_state=cache["ssm"])
+
+    fused = (_path_norm(attn, p["attn_out_norm"], cfg.norm_eps)
+             + _path_norm(ssm_y, p["ssm_out_norm"], cfg.norm_eps)) * 0.5
+    out = jnp.einsum("bse,ed->bsd", fused, p["wo"].astype(adtype))
+    new_cache = dict(cache, conv=new_conv, ssm=new_ssm)
+    return out, new_cache
+
+
+def hymba_write_kv(cfg: ModelConfig, p: dict, xn: jax.Array, cache: dict,
+                   kv_len: jax.Array, slot: jax.Array | None = None) -> dict:
+    """Project and write the new token's k/v (RoPE'd at its absolute
+    position kv_len-1) into ring slot ``slot`` (default: kv_len-1, i.e.
+    a non-wrapping cache)."""
+    adtype = cfg.adtype
+    b = xn.shape[0]
+    hd = cfg.head_dim_
+    k = jnp.einsum("bsd,dh->bsh", xn, p["wk"].astype(adtype))
+    v = jnp.einsum("bsd,dh->bsh", xn, p["wv"].astype(adtype))
+    k = k.reshape(b, cfg.n_kv_heads, hd)
+    v = v.reshape(b, cfg.n_kv_heads, hd)
+    pos = (kv_len - 1).astype(jnp.float32)
+    cos, sin = layers.rope_tables(pos[:, None], hd, cfg.rope_theta)
+    k = layers.apply_rope(k[:, :, None], cos[:, None], sin[:, None])[:, :, 0]
+    if slot is None:
+        slot = kv_len - 1
+    bidx = jnp.arange(b)
+    return dict(cache,
+                k=cache["k"].at[bidx, :, slot].set(k),
+                v=cache["v"].at[bidx, :, slot].set(v))

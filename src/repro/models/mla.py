@@ -1,0 +1,130 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a small latent (kv_lora_rank=512 + 64 shared
+RoPE dims) — the 236B model's decode cache is ~1/16 of an equivalent GQA
+cache. Training materializes per-head K/V from the latent (standard
+attention path); decode uses the *absorbed* formulation: queries are
+mapped into latent space (q @ W_uk) so attention runs directly over the
+cached latents with a single headless "kv head" — which drops straight
+into the sequence-sharded distributed flash-decode (decode.dist_decode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ShardCtx
+from .chunked_attention import chunked_attention, naive_attention
+from .decode import dist_decode
+from . import layers
+
+
+def _project_q(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x [B,S,D] -> q_nope [B,H,S,nope], q_rope [B,H,S,rope]."""
+    m = cfg.mla
+    adtype = cfg.adtype
+    b, s, _ = x.shape
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(adtype))
+    cq = layers.rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"].astype(adtype))
+    q = q.reshape(b, s, cfg.n_heads, m.nope_head_dim + m.rope_head_dim)
+    q = q.transpose(0, 2, 1, 3)
+    return q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+
+def _project_kv_latent(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x [B,S,D] -> c_kv [B,S,R] (normed), k_rope [B,1,S,rope] (unroped)."""
+    m = cfg.mla
+    adtype = cfg.adtype
+    ckr = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(adtype))
+    c_kv, k_rope = ckr[..., :m.kv_lora_rank], ckr[..., m.kv_lora_rank:]
+    c_kv = layers.rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    return c_kv, k_rope[:, None]
+
+
+def mla_attention(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+                  positions: jax.Array, window) -> tuple[jax.Array, dict]:
+    """Training / prefill path (materialized per-head K/V)."""
+    m = cfg.mla
+    adtype = cfg.adtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+
+    q_nope, q_rope = _project_q(cfg, p, x)
+    c_kv, k_rope = _project_kv_latent(cfg, p, x)
+
+    cos, sin = layers.rope_tables(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    k_rope = layers.apply_rope(k_rope, cos, sin)
+
+    k_nope = jnp.einsum("bsr,rhn->bhsn", c_kv,
+                        p["wk_b"].astype(adtype).reshape(
+                            m.kv_lora_rank, h, m.nope_head_dim))
+    v = jnp.einsum("bsr,rhn->bhsn", c_kv,
+                   p["wv_b"].astype(adtype).reshape(
+                       m.kv_lora_rank, h, m.v_head_dim))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, h, s, m.rope_head_dim))], axis=-1)
+    q = sh.act_bhsd(q, h)
+    k = sh.act_bhsd(k, h)
+    v = sh.act_bhsd(v, h)
+
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    attn_fn = (naive_attention if cfg.attention_impl == "naive"
+               else chunked_attention)
+    o = attn_fn(q, k, v, causal=True, window=window, scale=scale)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(adtype))
+    cache = {"c_kv": c_kv, "k_rope": k_rope[:, 0]}
+    return out, cache
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+               cache: dict, kv_len: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed decode. x [B,1,D]; cache {c_kv [B,Smax,R],
+    k_rope [B,Smax,rope]}; the new token is already written at kv_len-1."""
+    m = cfg.mla
+    adtype = cfg.adtype
+    b = x.shape[0]
+    h = cfg.n_heads
+
+    q_nope, q_rope = _project_q(cfg, p, x)          # [B,H,1,*]
+    pos = (kv_len - 1).astype(jnp.float32)
+    cos, sin = layers.rope_tables(pos[:, None], m.rope_head_dim,
+                                  cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos[:, None], sin[:, None])
+
+    # Absorb W_uk into the query: q_lat = q_nope @ W_uk^T per head.
+    wk = p["wk_b"].astype(adtype).reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0], wk)
+    q_cat = jnp.concatenate([q_lat, q_rope[:, :, 0]], axis=-1)  # [B,H,R+rope]
+
+    k_cat = jnp.concatenate([cache["c_kv"], cache["k_rope"]], axis=-1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    ctx = dist_decode(q_cat, k_cat[:, None], cache["c_kv"][:, None],
+                      kv_len, sh=sh, scale=scale)   # [B,H,R] fp32
+
+    wv = p["wv_b"].astype(adtype).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhr,rhn->bhn", ctx.astype(adtype), wv)
+    o = o.reshape(b, 1, h * m.v_head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(adtype))
+    return out, cache
+
+
+def mla_write_cache(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                    kv_len: jax.Array) -> dict:
+    """Project the new token's latent and write it at position kv_len-1."""
+    m = cfg.mla
+    c_kv, k_rope = _project_kv_latent(cfg, p, x)     # [B,1,R], [B,1,1,rope]
+    pos = (kv_len - 1).astype(jnp.float32)
+    cos, sin = layers.rope_tables(pos[:, None], m.rope_head_dim,
+                                  cfg.rope_theta)
+    k_rope = layers.apply_rope(k_rope[:, 0], cos, sin)
+
+    bidx = jnp.arange(x.shape[0])
+    new_c = cache["c_kv"].at[bidx, kv_len - 1].set(c_kv[:, 0])
+    new_r = cache["k_rope"].at[bidx, kv_len - 1].set(k_rope[:, 0])
+    return {"c_kv": new_c, "k_rope": new_r}

@@ -1,0 +1,196 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free linear recurrence with
+data-dependent per-channel decay.
+
+Time-mix recurrence per head (state S in R^{Dk x Dv}):
+
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T ,   w_t = exp(-exp(dd(x_t)))
+
+Training/prefill uses the *chunked parallel* formulation so compute lands
+on the MXU as matmuls instead of a length-S sequential scan: within a
+chunk of C tokens, cumulative log-decays turn the recurrence into masked
+(q' k'^T) V products; a short lax.scan over S/C chunks carries the state.
+Decode is the O(1) single-step update — the reason rwkv6 runs the
+long_500k shape that full-attention archs must skip.
+
+Simplifications vs the reference implementation (documented per DESIGN.md):
+static token-shift mixing coefficients (RWKV6's ddlerp -> learned lerp),
+and RMS-style per-head group norm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import ShardCtx
+from . import layers
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x [B,S,D], prev [B,D] (last token of previous segment) -> shifted x."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu  # lerp(x, shifted, mu)
+
+
+def _decay(cfg: ModelConfig, p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay (the Finch contribution): w in (0,1), [B,S,D]."""
+    dd = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"].astype(xw.dtype))
+    dd = jnp.einsum("bsr,rd->bsd", jnp.tanh(dd.astype(jnp.float32)).astype(xw.dtype),
+                    p["decay_b"].astype(xw.dtype))
+    logw = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32)
+                             + dd.astype(jnp.float32), -8.0, 6.0))
+    return logw  # log w_t (negative)
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h).transpose(0, 2, 1, 3)  # [B,H,S,Dh]
+
+
+def rwkv_chunk_scan(r, k, v, logw, u, chunk: int, unroll: bool = False):
+    """Chunked linear attention. r/k/v [B,H,S,Dh], logw [B,H,S,Dh] (log decay
+    per key channel), u [H,Dh] bonus. Returns out [B,H,S,Dh]."""
+    b, h, s, dk = r.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    n = s // c
+
+    rc = r.reshape(b, h, n, c, dk)
+    kc = k.reshape(b, h, n, c, dk)
+    vc = v.reshape(b, h, n, c, dv)
+    lwc = logw.reshape(b, h, n, c, dk).astype(jnp.float32)
+
+    lw_cum = jnp.cumsum(lwc, axis=3)                      # inclusive
+    lw_tot = lw_cum[:, :, :, -1]                          # [B,H,N,Dk]
+    lw_excl = lw_cum - lwc                                # exclusive
+
+    # q'_t = r_t * A_{t-1};  k'_s = k_s / A_s  (stable in log space).
+    qp = rc.astype(jnp.float32) * jnp.exp(lw_excl)
+    kp = kc.astype(jnp.float32) * jnp.exp(-lw_cum)
+    # inter-chunk key weight: k_s * A_T / A_s
+    kT = kc.astype(jnp.float32) * jnp.exp(lw_tot[:, :, :, None] - lw_cum)
+
+    # Intra-chunk: strictly-lower-triangular (s < t) plus diag u bonus.
+    att = jnp.einsum("bhntk,bhnsk->bhnts", qp, kp)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    diag = jnp.einsum("bhntk,hk->bhnt",
+                      rc.astype(jnp.float32) * kc.astype(jnp.float32),
+                      u.astype(jnp.float32))
+    intra = jnp.einsum("bhnts,bhnsv->bhntv", att, vc.astype(jnp.float32))
+    intra = intra + diag[..., None] * vc.astype(jnp.float32)
+
+    def step(state, xs):
+        qp_n, kT_n, v_n, lw_tot_n, intra_n = xs
+        carry_out = jnp.einsum("bhtk,bhkv->bhtv", qp_n, state)
+        new_state = state * jnp.exp(lw_tot_n)[..., None] + \
+            jnp.einsum("bhsk,bhsv->bhkv", kT_n, v_n.astype(jnp.float32))
+        return new_state, intra_n + carry_out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qp, kT, vc, lw_tot, intra))
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    state, out = jax.lax.scan(step, state0, xs,
+                              unroll=n if unroll else 1)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, h, s, dv)
+    return out, state
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+                  prev: jax.Array):
+    """x [B,S,D]; prev [B,D]. Returns (out [B,S,D], new_prev, new_state
+    [B,H,Dk,Dv]) — the state seeds subsequent decode steps."""
+    adtype = cfg.adtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    xs = _token_shift(x, prev)
+
+    r = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_r"].astype(adtype)),
+                   p["w_r"].astype(adtype))
+    k = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_k"].astype(adtype)),
+                   p["w_k"].astype(adtype))
+    v = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_v"].astype(adtype)),
+                   p["w_v"].astype(adtype))
+    g = jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_g"].astype(adtype)),
+                   p["w_g"].astype(adtype))
+    logw = _decay(cfg, p, _mix(x, xs, p["mu_w"].astype(adtype)))
+
+    rh, kh, vh = _heads(r, h), _heads(k, h), _heads(v, h)
+    lwh = _heads(logw.astype(adtype), h)
+    rh = sh.act_bhsd(rh, h)
+    kh = sh.act_bhsd(kh, h)
+    vh = sh.act_bhsd(vh, h)
+
+    out, new_state = rwkv_chunk_scan(rh, kh, vh, lwh, p["u"], cfg.rwkv_chunk,
+                                     unroll=cfg.rwkv_unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+    # per-head group norm (RMS form) + output gate
+    gn = out.reshape(b, s, h, d // h)
+    gn = gn * jax.lax.rsqrt(jnp.mean(jnp.square(gn), -1, keepdims=True)
+                            + cfg.norm_eps)
+    out = (gn.reshape(b, s, d) * p["gn_w"].astype(jnp.float32))
+    out = out.astype(adtype) * jax.nn.silu(g.astype(jnp.float32)).astype(adtype)
+    out = jnp.einsum("bsd,de->bse", out, p["w_o"].astype(adtype))
+    return out, x[:, -1], new_state
+
+
+def rwkv_decode_step(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+                     prev: jax.Array, state: jax.Array):
+    """Single-token step. x [B,1,D]; state [B,H,Dk,Dv] fp32."""
+    adtype = cfg.adtype
+    b = x.shape[0]
+    h = cfg.n_heads
+    d = x.shape[-1]
+    xs = prev[:, None]
+
+    def proj(mu, w):
+        return jnp.einsum("bsd,de->bse", _mix(x, xs, mu.astype(adtype)),
+                          w.astype(adtype))
+
+    r = proj(p["mu_r"], p["w_r"])[:, 0]
+    k = proj(p["mu_k"], p["w_k"])[:, 0]
+    v = proj(p["mu_v"], p["w_v"])[:, 0]
+    g = proj(p["mu_g"], p["w_g"])[:, 0]
+    logw = _decay(cfg, p, _mix(x, xs, p["mu_w"].astype(adtype)))[:, 0]
+
+    dh = d // h
+    rh = r.reshape(b, h, dh).astype(jnp.float32)
+    kh = k.reshape(b, h, dh).astype(jnp.float32)
+    vh = v.reshape(b, h, dh).astype(jnp.float32)
+    w = jnp.exp(logw.reshape(b, h, dh))
+
+    kv = kh[..., :, None] * vh[..., None, :]            # [B,H,Dk,Dv]
+    out = jnp.einsum("bhk,bhkv->bhv",
+                     rh, state + p["u"].astype(jnp.float32)[None, :, :, None] * kv)
+    new_state = state * w[..., None] + kv
+
+    gn = out.reshape(b, h, dh)
+    gn = gn * jax.lax.rsqrt(jnp.mean(jnp.square(gn), -1, keepdims=True)
+                            + cfg.norm_eps)
+    o = (gn.reshape(b, d) * p["gn_w"].astype(jnp.float32)).astype(adtype)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(adtype)
+    o = jnp.einsum("bd,de->be", o, p["w_o"].astype(adtype))
+    return o[:, None], x[:, 0], new_state
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x: jax.Array, sh: ShardCtx,
+                     prev: jax.Array):
+    """RWKV channel-mix FFN (relu^2) with token shift.
+    x [B,S,D] -> (out, new_prev)."""
+    adtype = cfg.adtype
+    xs = _token_shift(x, prev)
+    xk = _mix(x, xs, p["mu_k"].astype(adtype))
+    xr = _mix(x, xs, p["mu_r"].astype(adtype))
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(adtype))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(adtype)
+    kk = sh.constrain(kk, sh.batch_axes, None, sh.model_axis)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"].astype(adtype))
+    rr = jax.nn.sigmoid(jnp.einsum(
+        "bsd,de->bse", xr, p["w_r"].astype(adtype)).astype(jnp.float32))
+    return vv * rr.astype(adtype), x[:, -1]

@@ -1,0 +1,96 @@
+"""Sharding context threaded through model code.
+
+Models never hardcode mesh shapes: a ``ShardCtx`` carries the mesh axis
+names/sizes and answers "how do I shard this tensor here?". With no mesh
+(CPU smoke tests) every constraint is a no-op.
+
+Conventions (DESIGN.md §4):
+    batch  -> ("pod", "data")   (all DP axes)
+    heads / ffn hidden / experts / vocab -> "model"  (TP/EP)
+    residual seq -> "model"     (sequence parallelism between blocks)
+    decode KV cache seq -> ("data","model") or "model" (flash-decode psum)
+
+Head sharding is per-arch: only if the head count divides the model-axis
+size (gemma3's 8 q heads don't split 16 ways — those archs run attention
+batch-parallel with replicated attention weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    axis_sizes: tuple = ()       # ((name, size), ...) in mesh order; () = no mesh
+    seq_shard: bool = True       # sequence-parallel residual stream
+    mesh: object = None          # jax Mesh (needed by shard_map decode)
+
+    @staticmethod
+    def from_mesh(mesh, seq_shard: bool = True) -> "ShardCtx":
+        return ShardCtx(tuple(zip(mesh.axis_names, mesh.devices.shape)),
+                        seq_shard=seq_shard, mesh=mesh)
+
+    @property
+    def names(self) -> tuple:
+        return tuple(n for n, _ in self.axis_sizes)
+
+    def size(self, name: str) -> int:
+        for n, s in self.axis_sizes:
+            if n == name:
+                return s
+        return 1
+
+    @property
+    def batch_axes(self):
+        ax = tuple(n for n in ("pod", "data") if n in self.names)
+        return ax if ax else None
+
+    def batch_axes_for(self, n: int):
+        """DP axes only when the batch divides them (long_500k has B=1:
+        the batch stays unsharded and the seq axis carries parallelism)."""
+        ax = self.batch_axes
+        if ax is None:
+            return None
+        prod = 1
+        for a in ax:
+            prod *= self.size(a)
+        return ax if n % prod == 0 else None
+
+    @property
+    def model_axis(self):
+        return "model" if "model" in self.names else None
+
+    @property
+    def all_axes(self):
+        """Every mesh axis (for sharding one huge dim, e.g. 500k decode KV)."""
+        return self.names if self.names else None
+
+    def divides(self, n: int, axis: str = "model") -> bool:
+        s = self.size(axis)
+        return s > 1 and n % s == 0
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint if a mesh is active, else identity.
+        spec entries: None, axis name, or tuple of axis names."""
+        if not self.axis_sizes:
+            return x
+        clean = tuple(s if (s is None or isinstance(s, tuple)) else s
+                      for s in spec)
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+
+    # --- common activation constraints ----------------------------------------
+    def act_btd(self, x):
+        """Residual stream [B, S, D]: batch over DP axes, seq over model (SP)."""
+        seq = self.model_axis if self.seq_shard else None
+        return self.constrain(x, self.batch_axes, seq, None)
+
+    def act_bhsd(self, x, n_heads: int):
+        """Attention activations [B, H, S, D]: heads over model if divisible."""
+        h = self.model_axis if self.divides(n_heads) else None
+        return self.constrain(x, self.batch_axes, h, None, None)
+
+    def head_axis(self, n_heads: int):
+        return self.model_axis if self.divides(n_heads) else None

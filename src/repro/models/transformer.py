@@ -1,0 +1,497 @@
+"""Model assembly: init, train forward, prefill, and decode for every
+assigned architecture family.
+
+Layers are scanned with stacked parameters (one compact HLO body even for
+60-layer models) and rematerialized (jax.checkpoint) so training memory is
+O(residual stream). Per-layer heterogeneity (gemma3's 5:1 local:global
+interleave, hymba's global-attention islands) rides through the scan as a
+traced per-layer window scalar, so a single HLO body serves both layer
+kinds.
+
+Cache convention: ``pos`` = number of tokens already in the cache. A
+decode step writes the new token's state at index ``pos`` and attends over
+``pos + 1`` entries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mla as mla_lib, moe as moe_lib, rwkv as rwkv_lib
+from . import mamba as mamba_lib
+from .config import ModelConfig
+from .decode import dist_decode
+from .sharding import ShardCtx
+
+NO_WINDOW = jnp.int32(2 ** 30)   # dynamic-window sentinel: "global"
+
+
+def _unroll(cfg: "ModelConfig") -> int:
+    return cfg.n_layers if cfg.unroll_layers else 1
+
+
+# --------------------------------------------------------------------------- #
+# parameter init
+# --------------------------------------------------------------------------- #
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_attn(cfg: ModelConfig, key, L) -> dict:
+    dt = cfg.pdtype
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.ones((L, d), dt),
+        "wq": _dense(ks[0], (L, d, cfg.n_heads * hd), dt),
+        "wk": _dense(ks[1], (L, d, cfg.n_kv_heads * hd), dt),
+        "wv": _dense(ks[2], (L, d, cfg.n_kv_heads * hd), dt),
+        "wo": _dense(ks[3], (L, cfg.n_heads * hd, d), dt),
+    }
+
+
+def _init_mla(cfg: ModelConfig, key, L) -> dict:
+    dt = cfg.pdtype
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.ones((L, d), dt),
+        "wq_a": _dense(ks[0], (L, d, m.q_lora_rank), dt),
+        "q_norm": jnp.ones((L, m.q_lora_rank), dt),
+        "wq_b": _dense(ks[1], (L, m.q_lora_rank, h * qk), dt),
+        "wkv_a": _dense(ks[2], (L, d, m.kv_lora_rank + m.rope_head_dim), dt),
+        "kv_norm": jnp.ones((L, m.kv_lora_rank), dt),
+        "wk_b": _dense(ks[3], (L, m.kv_lora_rank, h * m.nope_head_dim), dt),
+        "wv_b": _dense(ks[4], (L, m.kv_lora_rank, h * m.v_head_dim), dt),
+        "wo": _dense(ks[5], (L, h * m.v_head_dim, d), dt),
+    }
+
+
+def _init_rwkv(cfg: ModelConfig, key, L) -> dict:
+    dt = cfg.pdtype
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 8)
+    base = jnp.linspace(-6.0, -1.0, d, dtype=jnp.float32)
+    return {
+        "norm": jnp.ones((L, d), dt),
+        "mu_r": jnp.full((L, d), 0.5, dt), "mu_k": jnp.full((L, d), 0.5, dt),
+        "mu_v": jnp.full((L, d), 0.5, dt), "mu_w": jnp.full((L, d), 0.5, dt),
+        "mu_g": jnp.full((L, d), 0.5, dt),
+        "w_r": _dense(ks[0], (L, d, d), dt),
+        "w_k": _dense(ks[1], (L, d, d), dt),
+        "w_v": _dense(ks[2], (L, d, d), dt),
+        "w_g": _dense(ks[3], (L, d, d), dt),
+        "w_o": _dense(ks[4], (L, d, d), dt),
+        "decay_a": _dense(ks[5], (L, d, 64), dt),
+        "decay_b": _dense(ks[6], (L, 64, d), dt),
+        "decay_base": jnp.tile(base, (L, 1)),
+        "u": _dense(ks[7], (L, h, dh), dt, scale=0.1),
+        "gn_w": jnp.ones((L, d), dt),
+    }
+
+
+def _init_mamba(cfg: ModelConfig, key) -> dict:
+    """Sub-dict for the Hymba SSM path (leading L dim added by caller)."""
+    dt = cfg.pdtype
+    d = cfg.d_model
+    di = cfg.n_heads * cfg.head_dim_
+    n = cfg.ssm.d_state
+    r = cfg.ssm.dt_rank or max(1, -(-d // 16))
+    k = cfg.ssm.d_conv
+    ks = jax.random.split(key, 4)
+    a = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, :]
+    return {
+        "in_proj": _dense(ks[0], (d, 2 * di), dt),
+        "conv_w": _dense(ks[1], (di, k), dt, scale=0.2),
+        "x_proj": _dense(ks[2], (di, r + 2 * n), dt),
+        "dt_proj": _dense(ks[3], (r, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),   # softplus^-1(0.01)
+        "a_log": jnp.broadcast_to(a, (di, n)).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _init_hymba(cfg: ModelConfig, key, L) -> dict:
+    dt = cfg.pdtype
+    d = cfg.d_model
+    di = cfg.n_heads * cfg.head_dim_
+    k1, k2, k3 = jax.random.split(key, 3)
+    att = _init_attn(cfg, k1, L)
+    del att["wo"]
+    mam = jax.vmap(lambda k: _init_mamba(cfg, k))(jax.random.split(k2, L))
+    return {
+        **att,
+        "mamba": mam,
+        "attn_out_norm": jnp.ones((L, di), dt),
+        "ssm_out_norm": jnp.ones((L, di), dt),
+        "wo": _dense(k3, (L, di, d), dt),
+    }
+
+
+def _init_mlp(cfg: ModelConfig, key, L) -> dict:
+    dt = cfg.pdtype
+    d = cfg.d_model
+    if cfg.attn_type == "rwkv6":   # rwkv channel mix
+        ks = jax.random.split(key, 3)
+        return {
+            "norm": jnp.ones((L, d), dt),
+            "mu_k": jnp.full((L, d), 0.5, dt),
+            "mu_r": jnp.full((L, d), 0.5, dt),
+            "w_k": _dense(ks[0], (L, d, cfg.d_ff), dt),
+            "w_v": _dense(ks[1], (L, cfg.d_ff, d), dt),
+            "w_r": _dense(ks[2], (L, d, d), dt),
+        }
+    if cfg.moe:
+        e = cfg.moe
+        ks = jax.random.split(key, 7)
+        p = {
+            "norm": jnp.ones((L, d), dt),
+            "router": _dense(ks[0], (L, d, e.n_experts), dt),
+            "w_in": _dense(ks[1], (L, e.n_experts, d, e.d_ff_expert), dt),
+            "w_gate": _dense(ks[2], (L, e.n_experts, d, e.d_ff_expert), dt),
+            "w_out": _dense(ks[3], (L, e.n_experts, e.d_ff_expert, d), dt),
+        }
+        if e.n_shared:
+            p["shared"] = {
+                "w_in": _dense(ks[4], (L, d, e.d_ff_shared), dt),
+                "w_gate": _dense(ks[5], (L, d, e.d_ff_shared), dt),
+                "w_out": _dense(ks[6], (L, e.d_ff_shared, d), dt),
+            }
+        return p
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((L, d), dt),
+        "w_in": _dense(ks[0], (L, d, cfg.d_ff), dt),
+        "w_gate": _dense(ks[1], (L, d, cfg.d_ff), dt),
+        "w_out": _dense(ks[2], (L, cfg.d_ff, d), dt),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = cfg.pdtype
+    k_embed, k_attn, k_mlp, k_head = jax.random.split(key, 4)
+    L = cfg.n_layers
+    if cfg.frontend == "frames":
+        embed = {"frames": _dense(k_embed, (cfg.frame_dim, cfg.d_model), dt),
+                 "tokens": _dense(jax.random.fold_in(k_embed, 1),
+                                  (cfg.vocab, cfg.d_model), dt)}
+    else:
+        embed = {"tokens": _dense(k_embed, (cfg.vocab, cfg.d_model), dt)}
+
+    attn_init = {"gqa": _init_attn, "mla": _init_mla, "rwkv6": _init_rwkv,
+                 "hymba": _init_hymba}[cfg.attn_type]
+    params = {
+        "embed": embed,
+        "layers": {"attn": attn_init(cfg, k_attn, L),
+                   "mlp": _init_mlp(cfg, k_mlp, L)},
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(k_head, (cfg.d_model, cfg.vocab), dt)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# per-layer windows (dynamic local/global interleave)
+# --------------------------------------------------------------------------- #
+
+def layer_windows(cfg: ModelConfig) -> Optional[jax.Array]:
+    """None -> all layers global (no window logic lowered). Otherwise an
+    int32[L] of per-layer window sizes (NO_WINDOW sentinel = global)."""
+    if cfg.window is None:
+        return None
+    L = cfg.n_layers
+    idx = jnp.arange(L)
+    if cfg.attn_type == "hymba":
+        glb = jnp.zeros((L,), bool)
+        for g in cfg.hymba_global_layers:
+            glb = glb | (idx == g)
+    else:
+        glb = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(glb, NO_WINDOW, jnp.int32(cfg.window))
+
+
+# --------------------------------------------------------------------------- #
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------- #
+
+def _seq_block(cfg: ModelConfig, sh: ShardCtx, positions, p, x, window):
+    """One layer over the full sequence. Returns (x, cache_entry, aux)."""
+    h = layers.rms_norm(x, p["attn"]["norm"], cfg.norm_eps)
+    if cfg.attn_type == "gqa":
+        a, cache = layers.gqa_attention(cfg, p["attn"], h, sh, positions,
+                                        window)
+    elif cfg.attn_type == "mla":
+        a, cache = mla_lib.mla_attention(cfg, p["attn"], h, sh, positions,
+                                         window)
+    elif cfg.attn_type == "hymba":
+        a, cache = mamba_lib.hymba_block(cfg, p["attn"], h, sh, positions,
+                                         window)
+    elif cfg.attn_type == "rwkv6":
+        prev = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+        a, prev_att, state = rwkv_lib.rwkv_time_mix(cfg, p["attn"], h, sh,
+                                                    prev)
+        cache = {"state": state, "prev_att": prev_att}
+    else:
+        raise ValueError(cfg.attn_type)
+    x = sh.act_btd(x + a)
+
+    h2 = layers.rms_norm(x, p["mlp"]["norm"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.attn_type == "rwkv6":
+        prev2 = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+        m, prev_ffn = rwkv_lib.rwkv_channel_mix(cfg, p["mlp"], h2, sh, prev2)
+        cache["prev_ffn"] = prev_ffn
+    elif cfg.moe:
+        m, aux = moe_lib.moe_block(cfg, p["mlp"], h2, sh)
+    else:
+        m = layers.swiglu(h2, p["mlp"], sh, cfg.adtype)
+    x = sh.act_btd(x + m)
+    return x, cache, aux
+
+
+def forward_seq(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                sh: ShardCtx, *, collect_cache: bool):
+    """inputs: int32 tokens [B,S] or frames [B,S,frame_dim].
+    Returns (x_final [B,S,D], stacked cache | None, aux_mean)."""
+    if cfg.frontend == "frames" and inputs.ndim == 3:
+        x = layers.embed_frames(cfg, params["embed"], inputs, sh)
+    else:
+        x = layers.embed_tokens(cfg, params["embed"], inputs, sh)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s, dtype=jnp.float32)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        p, window = xs
+        x, cache, aux = _seq_block(cfg, sh, positions, p, x, window)
+        ys = (cache, aux) if collect_cache else (None, aux)
+        return x, ys
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    xs = (params["layers"],
+          windows if windows is not None else jnp.zeros((cfg.n_layers,),
+                                                        jnp.int32))
+    if windows is None:
+        def body_nw(x, p):
+            x, cache, aux = _seq_block(cfg, sh, positions, p, x, None)
+            return x, ((cache, aux) if collect_cache else (None, aux))
+        body_nw = jax.checkpoint(body_nw, prevent_cse=False)
+        x, (cache, aux) = jax.lax.scan(body_nw, x, params["layers"],
+                                       unroll=_unroll(cfg))
+    else:
+        x, (cache, aux) = jax.lax.scan(body, x, xs, unroll=_unroll(cfg))
+    return x, cache, jnp.mean(aux)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, sh: ShardCtx
+            ) -> tuple[jax.Array, dict]:
+    """Next-token CE (+ MoE aux). batch: {"inputs", "labels"}."""
+    x, _, aux = forward_seq(cfg, params, batch["inputs"], sh,
+                            collect_cache=False)
+    logits = layers.lm_logits(cfg, params, x, sh)
+    ce = layers.cross_entropy(logits, batch["labels"])
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params: dict, inputs: jax.Array, sh: ShardCtx,
+            smax: int):
+    """Build a decode cache of capacity ``smax`` from a full prompt.
+    Returns (last_logits [B,V], cache, pos [B])."""
+    x, cache, _ = forward_seq(cfg, params, inputs, sh, collect_cache=True)
+    b, s = x.shape[:2]
+    if cfg.attn_type == "gqa":
+        pad = [(0, 0)] * 5
+        pad[3] = (0, smax - s)
+        cache["k"] = jnp.pad(cache["k"], pad)
+        cache["v"] = jnp.pad(cache["v"], pad)
+    elif cfg.attn_type == "hymba":
+        # restack into per-layer ring buffers (slot = position % size)
+        layers_cache = []
+        for l, size in enumerate(hymba_cache_sizes(cfg, smax)):
+            ck, cv = cache["k"][l], cache["v"][l]       # [B,Hkv,S,hd]
+            if size >= s:
+                ck = jnp.pad(ck, [(0, 0), (0, 0), (0, size - s), (0, 0)])
+                cv = jnp.pad(cv, [(0, 0), (0, 0), (0, size - s), (0, 0)])
+            else:
+                ps = jnp.arange(s - size, s)
+                slots = ps % size                        # permutation of size
+                ck = jnp.zeros((b, cfg.n_kv_heads, size, cfg.head_dim_),
+                               ck.dtype).at[:, :, slots].set(ck[:, :, ps])
+                cv = jnp.zeros((b, cfg.n_kv_heads, size, cfg.head_dim_),
+                               cv.dtype).at[:, :, slots].set(cv[:, :, ps])
+            layers_cache.append({"k": ck, "v": cv,
+                                 "conv": cache["conv"][l],
+                                 "ssm": cache["ssm"][l]})
+        cache = tuple(layers_cache)
+    elif cfg.attn_type == "mla":
+        cache["c_kv"] = jnp.pad(cache["c_kv"], [(0, 0), (0, 0),
+                                                (0, smax - s), (0, 0)])
+        cache["k_rope"] = jnp.pad(cache["k_rope"], [(0, 0), (0, 0),
+                                                    (0, smax - s), (0, 0)])
+    logits = layers.lm_logits(cfg, params, x[:, -1:], sh)[:, 0]
+    pos = jnp.full((b,), s, jnp.int32)
+    return logits, cache, pos
+
+
+# --------------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------------- #
+
+def hymba_cache_sizes(cfg: ModelConfig, smax: int) -> tuple:
+    """Per-layer KV capacities: ring buffers of the sliding window for
+    local layers, full smax for the global-attention layers. At long_500k
+    this is 21 MB vs 1.9 GB/device of mostly-dead full cache (29 of 32
+    layers only ever attend the last 1024 positions)."""
+    w = cfg.window or smax
+    return tuple(smax if l in cfg.hymba_global_layers else min(w, smax)
+                 for l in range(cfg.n_layers))
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int):
+    """Empty decode cache (capacity smax). Stacked over layers, except
+    hymba: a per-layer tuple (ring buffers have heterogeneous sizes)."""
+    L, b = cfg.n_layers, batch
+    dt = cfg.adtype
+    hd = cfg.head_dim_
+    if cfg.attn_type == "gqa":
+        kv = (L, b, cfg.n_kv_heads, smax, hd)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((L, b, smax, m.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((L, b, smax, m.rope_head_dim), dt)}
+    if cfg.attn_type == "rwkv6":
+        h = cfg.n_heads
+        dh = cfg.d_model // h
+        return {"state": jnp.zeros((L, b, h, dh, dh), jnp.float32),
+                "prev_att": jnp.zeros((L, b, cfg.d_model), dt),
+                "prev_ffn": jnp.zeros((L, b, cfg.d_model), dt)}
+    if cfg.attn_type == "hymba":
+        di = cfg.n_heads * hd
+        return tuple(
+            {"k": jnp.zeros((b, cfg.n_kv_heads, size, hd), dt),
+             "v": jnp.zeros((b, cfg.n_kv_heads, size, hd), dt),
+             "conv": jnp.zeros((b, cfg.ssm.d_conv - 1, di), dt),
+             "ssm": jnp.zeros((b, di, cfg.ssm.d_state), jnp.float32)}
+            for size in hymba_cache_sizes(cfg, smax))
+    raise ValueError(cfg.attn_type)
+
+
+def _decode_block(cfg: ModelConfig, sh: ShardCtx, p, x, cache, pos, window):
+    """One layer, one token. x [B,1,D]. Returns (x, new_cache)."""
+    new_len = pos + 1
+    h = layers.rms_norm(x, p["attn"]["norm"], cfg.norm_eps)
+    if cfg.attn_type == "gqa":
+        b = x.shape[0]
+        hd = cfg.head_dim_
+        adtype = cfg.adtype
+        k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"].astype(adtype))
+        v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"].astype(adtype))
+        k = k.reshape(b, cfg.n_kv_heads, hd)
+        v = v.reshape(b, cfg.n_kv_heads, hd)
+        posf = pos.astype(jnp.float32)
+        cos, sin = layers.rope_tables(posf[:, None], hd, cfg.rope_theta)
+        k = layers.apply_rope(k[:, :, None], cos[:, None], sin[:, None])[:, :, 0]
+        bidx = jnp.arange(b)
+        cache = dict(cache,
+                     k=cache["k"].at[bidx, :, pos].set(k),
+                     v=cache["v"].at[bidx, :, pos].set(v))
+        q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"].astype(adtype))
+        q = q.reshape(b, cfg.n_heads, hd)
+        q = layers.apply_rope(q[:, :, None], cos[:, None], sin[:, None])[:, :, 0]
+        o = dist_decode(q, cache["k"], cache["v"], new_len, sh=sh,
+                        window=window)
+        o = o.astype(adtype).reshape(b, 1, cfg.n_heads * hd)
+        a = jnp.einsum("bsh,hd->bsd", o, p["attn"]["wo"].astype(adtype))
+    elif cfg.attn_type == "mla":
+        cache = mla_lib.mla_write_cache(cfg, p["attn"], h, cache, new_len)
+        a, cache = mla_lib.mla_decode(cfg, p["attn"], h, sh, cache, new_len)
+    elif cfg.attn_type == "hymba":
+        # ring-buffer write: slot = pos % capacity; attention then covers
+        # min(new_len, capacity) slots with no further window mask (the
+        # ring *is* the window for local layers).
+        size = cache["k"].shape[2]
+        slot = pos % size
+        cache = mamba_lib.hymba_write_kv(cfg, p["attn"], h, cache, new_len,
+                                         slot=slot)
+        eff_len = jnp.minimum(new_len, size)
+        a, cache = mamba_lib.hymba_decode(cfg, p["attn"], h, sh, cache,
+                                          new_len, eff_len)
+    elif cfg.attn_type == "rwkv6":
+        a, prev_att, state = rwkv_lib.rwkv_decode_step(
+            cfg, p["attn"], h, sh, cache["prev_att"], cache["state"])
+        cache = dict(cache, prev_att=prev_att, state=state)
+    x = x + a
+
+    h2 = layers.rms_norm(x, p["mlp"]["norm"], cfg.norm_eps)
+    if cfg.attn_type == "rwkv6":
+        xs = cache["prev_ffn"][:, None]
+        adtype = cfg.adtype
+        mp = p["mlp"]
+        xk = h2 + (xs - h2) * mp["mu_k"].astype(adtype)
+        xr = h2 + (xs - h2) * mp["mu_r"].astype(adtype)
+        kk = jnp.einsum("bsd,df->bsf", xk, mp["w_k"].astype(adtype))
+        kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(adtype)
+        vv = jnp.einsum("bsf,fd->bsd", kk, mp["w_v"].astype(adtype))
+        rr = jax.nn.sigmoid(jnp.einsum(
+            "bsd,de->bse", xr, mp["w_r"].astype(adtype)).astype(jnp.float32))
+        m = vv * rr.astype(adtype)
+        cache = dict(cache, prev_ffn=h2[:, 0])
+    elif cfg.moe:
+        m, _ = moe_lib.moe_block(cfg, p["mlp"], h2, sh)
+    else:
+        m = layers.swiglu(h2, p["mlp"], sh, cfg.adtype)
+    x = x + m
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                cache: dict, pos: jax.Array, sh: ShardCtx):
+    """One new token for every sequence in the batch.
+
+    inputs: int32 [B] token ids (or [B, frame_dim] frames); cache: stacked
+    pytree from init_cache/prefill; pos: int32[B] tokens already cached.
+    Returns (logits [B,V], new_cache, pos+1).
+    """
+    if cfg.frontend == "frames" and inputs.ndim == 2:
+        x = layers.embed_frames(cfg, params["embed"], inputs[:, None], sh)
+    else:
+        x = layers.embed_tokens(cfg, params["embed"], inputs[:, None], sh)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        p, cache, window = xs
+        x, new_cache = _decode_block(cfg, sh, p, x, cache, pos, window)
+        return x, new_cache
+
+    if cfg.attn_type == "hymba":
+        # heterogeneous ring-buffer capacities -> unrolled per-layer loop
+        # (decode blocks are small; 32 unrolled bodies compile fine)
+        new_cache = []
+        for l in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[l], params["layers"])
+            x, nc = _decode_block(cfg, sh, p_l, x, cache[l], pos, None)
+            new_cache.append(nc)
+        new_cache = tuple(new_cache)
+    elif windows is None:
+        def body_nw(x, xs):
+            p, cache = xs
+            x, new_cache = _decode_block(cfg, sh, p, x, cache, pos, None)
+            return x, new_cache
+        x, new_cache = jax.lax.scan(body_nw, x, (params["layers"], cache),
+                                    unroll=_unroll(cfg))
+    else:
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["layers"], cache, windows),
+                                    unroll=_unroll(cfg))
+    logits = layers.lm_logits(cfg, params, x, sh)[:, 0]
+    return logits, new_cache, pos + 1

@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW with ZeRO-1-sharded moments, global-norm
+clipping, warmup-cosine schedules, and optional int8 gradient compression
+for the slow cross-pod all-reduce."""
+from .adamw import (AdamWConfig, init_opt_state, adamw_update,
+                    warmup_cosine, clip_by_global_norm)
+from .compress import compress_int8, decompress_int8, compressed_psum_spec
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "warmup_cosine",
+           "clip_by_global_norm", "compress_int8", "decompress_int8",
+           "compressed_psum_spec"]

@@ -1,0 +1,12 @@
+"""Software-simulator baselines (the role gem5 / ChampSim play in the paper).
+
+``trace_sim``  — per-request sequential Python simulator ("ChampSim-class").
+                 Implements *exactly* the chunk=1 semantics of the JAX
+                 emulator, so it doubles as the correctness oracle.
+``cycle_sim``  — event-driven cycle-level simulator ("gem5-class"): every
+                 pipeline stage, bank occupancy window and DMA sub-block is
+                 a discrete event on a heap. Slowest, most detailed.
+"""
+from . import trace_sim, cycle_sim
+
+__all__ = ["trace_sim", "cycle_sim"]

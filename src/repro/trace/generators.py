@@ -1,0 +1,130 @@
+"""Synthetic memory-trace generators.
+
+The paper drives its platform with real SPEC CPU 2017 binaries on the hard
+ARM cores. Without a host CPU, we synthesize post-cache-filter request
+streams with the access-pattern families that dominate those benchmarks:
+zipfian reuse (pointer-heavy codes like mcf/omnetpp), sequential streaming
+(lbm, x264), strided (namd), and pointer-chasing (xalancbmk). ``mixed``
+composes them with per-workload ratios (see workloads.py).
+
+Generators are jit-compiled JAX so trace production runs at "native"
+speed — the role the real application plays on the paper's platform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.emulator import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """Recipe for a synthetic request stream."""
+    n_requests: int
+    footprint_pages: int         # working-set size in pages
+    write_frac: float = 0.3
+    pattern: str = "zipfian"     # zipfian | sequential | strided | pointer | mixed
+    zipf_alpha: float = 1.1
+    stride_pages: int = 2
+    seq_frac: float = 0.5        # for `mixed`: fraction of sequential traffic
+    line: int = 64
+    page_size: int = 4096
+    seed: int = 0
+
+
+def _writes(key, spec) -> jax.Array:
+    return jax.random.uniform(key, (spec.n_requests,)) < spec.write_frac
+
+
+def _offsets(key, spec) -> jax.Array:
+    lines = spec.page_size // spec.line
+    return (jax.random.randint(key, (spec.n_requests,), 0, lines)
+            * spec.line).astype(jnp.int32)
+
+
+def _zipf_pages(key, n, footprint, alpha) -> jax.Array:
+    """Zipfian page popularity via inverse-CDF sampling on ranks."""
+    ranks = jnp.arange(1, footprint + 1, dtype=jnp.float32)
+    w = ranks ** -alpha
+    cdf = jnp.cumsum(w) / jnp.sum(w)
+    u = jax.random.uniform(key, (n,))
+    pages = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    # Scatter ranks over the footprint so hot pages aren't contiguous.
+    perm_key = jax.random.fold_in(key, 7)
+    perm = jax.random.permutation(perm_key, footprint)
+    return perm[jnp.clip(pages, 0, footprint - 1)].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def zipfian(spec: TraceSpec) -> Trace:
+    k = jax.random.PRNGKey(spec.seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return Trace(
+        page=_zipf_pages(k1, spec.n_requests, spec.footprint_pages, spec.zipf_alpha),
+        offset=_offsets(k2, spec),
+        is_write=_writes(k3, spec),
+        size=jnp.full(spec.n_requests, spec.line, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def sequential(spec: TraceSpec) -> Trace:
+    k = jax.random.PRNGKey(spec.seed)
+    k2, k3 = jax.random.split(k)
+    lines = spec.page_size // spec.line
+    idx = jnp.arange(spec.n_requests)
+    page = ((idx // lines) % spec.footprint_pages).astype(jnp.int32)
+    return Trace(page=page,
+                 offset=((idx % lines) * spec.line).astype(jnp.int32),
+                 is_write=_writes(k3, spec),
+                 size=jnp.full(spec.n_requests, spec.line, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def strided(spec: TraceSpec) -> Trace:
+    k = jax.random.PRNGKey(spec.seed)
+    k2, k3 = jax.random.split(k)
+    idx = jnp.arange(spec.n_requests)
+    page = ((idx * spec.stride_pages) % spec.footprint_pages).astype(jnp.int32)
+    return Trace(page=page, offset=_offsets(k2, spec),
+                 is_write=_writes(k3, spec),
+                 size=jnp.full(spec.n_requests, spec.line, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def pointer_chase(spec: TraceSpec) -> Trace:
+    """Random-walk page chain: each access determined by a hash of the
+    previous page — no locality, worst case for any placement policy."""
+    k = jax.random.PRNGKey(spec.seed)
+    k2, k3 = jax.random.split(k)
+
+    def step(p, i):
+        nxt = (p * 1103515245 + 12345 + i) % spec.footprint_pages
+        return nxt, nxt
+
+    _, page = jax.lax.scan(step, jnp.int32(1),
+                           jnp.arange(spec.n_requests, dtype=jnp.int32))
+    return Trace(page=page.astype(jnp.int32), offset=_offsets(k2, spec),
+                 is_write=_writes(k3, spec),
+                 size=jnp.full(spec.n_requests, spec.line, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def mixed(spec: TraceSpec) -> Trace:
+    """Interleave sequential streaming with zipfian reuse traffic."""
+    z = zipfian(spec)
+    s = sequential(spec)
+    k = jax.random.fold_in(jax.random.PRNGKey(spec.seed), 99)
+    pick_seq = jax.random.uniform(k, (spec.n_requests,)) < spec.seq_frac
+    return Trace(*(jnp.where(pick_seq, a, b) for a, b in zip(s, z)))
+
+
+_PATTERNS = {"zipfian": zipfian, "sequential": sequential, "strided": strided,
+             "pointer": pointer_chase, "mixed": mixed}
+
+
+def generate(spec: TraceSpec) -> Trace:
+    return _PATTERNS[spec.pattern](spec)

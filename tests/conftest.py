@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — unit tests and
+# benches must see the real single device; only the dry-run (and the
+# subprocess-based integration tests) force 512/4 devices.
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_trace_arrays(cfg, n, rng, hot_fraction=0.4, n_hot=4):
+    """Random trace with a hot set in the slow tier (exercises migration)."""
+    page = rng.integers(0, cfg.n_pages, n).astype(np.int32)
+    hot = rng.random(n) < hot_fraction
+    page[hot] = (cfg.n_fast_pages + rng.integers(0, n_hot, hot.sum())
+                 ).astype(np.int32)
+    offset = (rng.integers(0, cfg.page_size // 64, n) * 64).astype(np.int32)
+    is_write = rng.random(n) < 0.35
+    size = np.full(n, 64, np.int32)
+    return page, offset, is_write, size

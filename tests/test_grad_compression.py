@@ -1,0 +1,52 @@
+"""Cross-pod int8 gradient compression: the compressed exchange inside
+shard_map must approximate the exact psum within quantization error."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from repro.optim import compressed_psum_spec
+
+mesh = jax.make_mesh((2,), ("pod",))
+rng = np.random.default_rng(0)
+grads = {"a": jnp.asarray(rng.standard_normal((2, 512)) * 1e-2, jnp.float32),
+         "b": jnp.asarray(rng.standard_normal((2, 33, 9)) * 1e-3, jnp.float32)}
+
+def exact(g):
+    return jax.tree.map(lambda x: jax.lax.psum(x, "pod"), g)
+
+def compressed(g):
+    return compressed_psum_spec(g, "pod", jax.random.PRNGKey(0))
+
+for name, fn in (("exact", exact), ("compressed", compressed)):
+    specs = jax.tree.map(lambda _: P("pod"), grads)
+    out = shard_map(fn, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                    check_vma=False)(grads)
+    if name == "exact":
+        ref = out
+    else:
+        got = out
+for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+    scale = np.abs(np.asarray(a)).max() + 1e-12
+    err = np.abs(np.asarray(a) - np.asarray(b)).max() / scale
+    assert err < 0.02, err   # <2% relative error on the wire-compressed sum
+print("COMPRESS_OK")
+"""
+
+
+def test_compressed_psum_close_to_exact():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=560, env=env, cwd="/root/repo")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "COMPRESS_OK" in r.stdout

@@ -1,0 +1,119 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+sweeping shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hmmu_lookup import hmmu_lookup
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,s,d,bq,bk", [
+    (1, 2, 2, 128, 32, 64, 64),
+    (2, 4, 2, 256, 64, 128, 128),     # GQA 2:1
+    (1, 8, 1, 128, 64, 64, 32),       # MQA
+    (2, 2, 2, 192, 16, 64, 64),       # ragged-ish seq (192 = 3 blocks)
+])
+def test_flash_attention_matches_ref(dtype, b, hq, hkv, s, d, bq, bk):
+    rng = np.random.default_rng(hash((b, hq, s)) % 2**32)
+    q = _rand(rng, (b, hq, s, d), dtype)
+    k = _rand(rng, (b, hkv, s, d), dtype)
+    v = _rand(rng, (b, hkv, s, d), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window, block_q=64,
+                          block_k=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,smax,d,bk", [
+    (2, 4, 2, 512, 64, 128),
+    (1, 8, 8, 256, 32, 64),
+    (3, 4, 1, 384, 128, 128),
+])
+def test_decode_attention_matches_ref(dtype, b, hq, hkv, smax, d, bk):
+    rng = np.random.default_rng(hash((b, hq, smax)) % 2**32)
+    q = _rand(rng, (b, hq, d), dtype)
+    kc = _rand(rng, (b, hkv, smax, d), dtype)
+    vc = _rand(rng, (b, hkv, smax, d), dtype)
+    kv_len = jnp.asarray(rng.integers(1, smax + 1, b), jnp.int32)
+    got = decode_attention(q, kc, vc, kv_len, block_k=bk, interpret=True)
+    want = ref.decode_attention(q, kc, vc, kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_decode_attention_window():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (2, 4, 64), jnp.float32)
+    kc = _rand(rng, (2, 2, 512, 64), jnp.float32)
+    vc = _rand(rng, (2, 2, 512, 64), jnp.float32)
+    kv_len = jnp.asarray([200, 512], jnp.int32)
+    got = decode_attention(q, kc, vc, kv_len, window=128, block_k=128,
+                           interpret=True)
+    want = ref.decode_attention(q, kc, vc, kv_len, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("n_pages,chunk", [(64, 16), (1000, 128), (37, 5)])
+def test_hmmu_lookup_matches_ref(n_pages, chunk):
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.integers(0, 2**20, (n_pages, 8)), jnp.int32)
+    pages = jnp.asarray(rng.integers(0, n_pages, chunk), jnp.int32)
+    got = hmmu_lookup(table, pages, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.hmmu_lookup(table, pages)))
+
+
+@pytest.mark.parametrize("chunk", [8, 32])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv_chunk_scan_matches_ref(chunk, dtype):
+    from repro.kernels.rwkv_scan import rwkv_chunk_scan as pallas_scan
+    from repro.models.rwkv import rwkv_chunk_scan as ref_scan
+    rng = np.random.default_rng(5)
+    b, h, s, d = 2, 2, 64, 16
+    mk = lambda: jnp.asarray(rng.standard_normal((b, h, s, d)), dtype)
+    r, k, v = mk(), mk(), mk()
+    logw = jnp.asarray(-np.exp(rng.standard_normal((b, h, s, d)) - 1.5),
+                       dtype)
+    u = jnp.asarray(rng.standard_normal((h, d)) * 0.3, jnp.float32)
+    got = pallas_scan(r, k, v, logw, u, chunk=chunk, interpret=True)
+    want, _ = ref_scan(r, k, v, logw, u, chunk)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)

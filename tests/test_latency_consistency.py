@@ -1,0 +1,70 @@
+"""Property tests (hypothesis) for the associative-scan timing machinery —
+the parts whose parallel formulations must exactly equal the sequential
+definitions."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import in_order_returns
+from repro.core.latency import maxplus_scan, resolve_bank_queues
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.tuples(st.integers(0, 10_000), st.integers(0, 500)),
+                min_size=1, max_size=64))
+@_settings
+def test_maxplus_scan_equals_sequential(pairs):
+    arrival = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    service = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    got = np.asarray(maxplus_scan(arrival, service))
+    t = -10**9
+    exp = []
+    for a, s in pairs:
+        t = max(a, t) + s
+        exp.append(t)
+    np.testing.assert_array_equal(got, np.asarray(exp))
+
+
+@given(st.data())
+@_settings
+def test_bank_queues_equal_sequential(data):
+    # fixed shape menu bounds jit-compile variants (speed)
+    n = data.draw(st.sampled_from([8, 32]))
+    n_banks = data.draw(st.sampled_from([2, 8]))
+    arrival = np.sort(data.draw(st.lists(
+        st.integers(0, 5000), min_size=n, max_size=n)))
+    service = data.draw(st.lists(st.integers(1, 300), min_size=n, max_size=n))
+    bank = data.draw(st.lists(st.integers(0, n_banks - 1),
+                              min_size=n, max_size=n))
+    free0 = data.draw(st.lists(st.integers(0, 2000),
+                               min_size=n_banks, max_size=n_banks))
+
+    done, new_free = resolve_bank_queues(
+        jnp.asarray(arrival, jnp.int32), jnp.asarray(service, jnp.int32),
+        jnp.asarray(bank, jnp.int32), n_banks, jnp.asarray(free0, jnp.int32))
+
+    free = list(free0)
+    exp = []
+    for a, s, b in zip(arrival, service, bank):
+        t = max(a, free[b]) + s
+        free[b] = t
+        exp.append(t)
+    np.testing.assert_array_equal(np.asarray(done), np.asarray(exp))
+    np.testing.assert_array_equal(np.asarray(new_free), np.asarray(free))
+
+
+@given(st.lists(st.integers(0, 100_000), min_size=1, max_size=64),
+       st.integers(0, 100_000))
+@_settings
+def test_in_order_returns_properties(completions, last):
+    c = jnp.asarray(completions, jnp.int32)
+    r = np.asarray(in_order_returns(c, jnp.int32(last)))
+    # 1. in-order (monotone nondecreasing)
+    assert np.all(np.diff(r) >= 0)
+    # 2. never before the media completes, nor before the previous chunk
+    assert np.all(r >= np.asarray(completions))
+    assert np.all(r >= last)
+    # 3. exactly the running max (tag matching holds, never delays more)
+    np.testing.assert_array_equal(
+        r, np.maximum.accumulate(np.maximum(np.asarray(completions), last)))

@@ -1,0 +1,111 @@
+"""Per-architecture smoke + decode-consistency tests (reduced configs,
+one forward/train step on CPU, shapes + finiteness + cache correctness)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import (ShardCtx, decode_step, init_params, loss_fn,
+                          prefill)
+from repro.models import layers
+from repro.models import transformer as T
+
+SH = ShardCtx()
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 12
+
+
+def _inputs(cfg, rng, s=S, b=B):
+    if cfg.frontend == "frames":
+        return jnp.asarray(rng.standard_normal((b, s, cfg.frame_dim)),
+                           jnp.float32)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+
+def _uncapped(cfg):
+    if cfg.moe:
+        return cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                 capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_train_step_shapes_and_grads_finite(arch):
+    cfg = C.get_smoke(arch)
+    params = init_params(cfg, KEY)
+    rng = np.random.default_rng(0)
+    batch = {"inputs": _inputs(cfg, rng),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, SH), has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), arch
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+    # at least one grad is nonzero for every top-level param group
+    gsum = jax.tree.map(lambda g: float(jnp.sum(jnp.abs(g))), grads)
+    assert sum(jax.tree.leaves(gsum)) > 0
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_decode_matches_teacher_forced(arch):
+    cfg = _uncapped(C.get_smoke(arch))
+    params = init_params(cfg, KEY)
+    rng = np.random.default_rng(1)
+    full = _inputs(cfg, rng, s=S + 3)
+
+    x, _, _ = T.forward_seq(cfg, params, full, SH, collect_cache=False)
+    ref_logits = layers.lm_logits(cfg, params, x, SH)
+
+    logits, cache, pos = prefill(cfg, params, full[:, :S], SH, S + 3)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(ref_logits[:, S - 1]), atol=2e-4)
+    for t in range(3):
+        nxt = full[:, S + t]
+        logits, cache, pos = decode_step(cfg, params, nxt, cache, pos, SH)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref_logits[:, S + t]),
+                                   atol=2e-4, err_msg=f"{arch} step {t}")
+
+
+def test_gemma3_window_pattern():
+    cfg = C.get_smoke("gemma3_4b")        # 3 layers, global_every=3
+    w = T.layer_windows(cfg)
+    assert w is not None
+    w = np.asarray(w)
+    assert w[2] == int(T.NO_WINDOW)        # every 3rd layer global
+    assert w[0] == w[1] == cfg.window
+
+
+def test_hymba_global_layers():
+    cfg = C.get_smoke("hymba_1p5b")       # globals at (0, 2)
+    w = np.asarray(T.layer_windows(cfg))
+    assert w[0] == int(T.NO_WINDOW) and w[2] == int(T.NO_WINDOW)
+    assert w[1] == cfg.window
+
+
+def test_long_context_flags():
+    assert C.get("rwkv6-7b").supports_long_context
+    assert C.get("hymba-1.5b").supports_long_context
+    for a in ("phi3-mini-3.8b", "gemma3-4b", "deepseek-v2-236b"):
+        assert not C.get(a).supports_long_context
+
+
+def test_param_counts_match_published_class():
+    """n_params() should land within ~15% of each model's nameplate."""
+    targets = {"phi3-mini-3.8b": 3.8e9, "rwkv6-7b": 7.6e9,
+               "minitron-8b": 8e9, "internlm2-1.8b": 1.9e9,
+               "deepseek-v2-236b": 236e9, "phi3.5-moe-42b-a6.6b": 42e9,
+               "hymba-1.5b": 1.5e9, "gemma3-4b": 4e9,
+               "musicgen-medium": 1.5e9, "phi-3-vision-4.2b": 4.2e9}
+    for arch, want in targets.items():
+        got = C.get(arch).n_params()
+        assert 0.7 * want < got < 1.4 * want, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = C.get("deepseek-v2-236b")
+    assert cfg.n_active_params() < 0.15 * cfg.n_params()

@@ -1,0 +1,51 @@
+"""shard_map expert-parallel MoE (M3): sharded execution must match the
+dense path numerically when capacity is not binding."""
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+import repro.configs as C
+from repro.models import init_params, loss_fn, ShardCtx
+from repro.launch.mesh import make_dev_mesh
+
+cfg = C.get_smoke("phi35_moe_42b")
+# capacity not binding -> no drops -> paths must agree exactly
+cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0),
+                n_heads=4, n_kv_heads=2)
+params = init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+batch = {"inputs": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)}
+
+ref, refm = jax.jit(lambda p, b: loss_fn(cfg, p, b, ShardCtx()))(params, batch)
+
+mesh = make_dev_mesh(model=2)
+sh = ShardCtx.from_mesh(mesh)
+with mesh:
+    got, gotm = jax.jit(lambda p, b: loss_fn(cfg, p, b, sh))(params, batch)
+np.testing.assert_allclose(float(ref), float(got), rtol=2e-4)
+np.testing.assert_allclose(float(refm["aux"]), float(gotm["aux"]), rtol=2e-4)
+
+# gradients must agree too (all-to-all + shard_map autodiff)
+g1 = jax.jit(jax.grad(lambda p: loss_fn(cfg, p, batch, ShardCtx())[0]))(params)
+with mesh:
+    g2 = jax.jit(jax.grad(lambda p: loss_fn(cfg, p, batch, sh)[0]))(params)
+for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+print("MOE_SM_OK", float(ref), float(got))
+"""
+
+
+def test_moe_shardmap_matches_dense():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=560, env=env, cwd="/root/repo")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "MOE_SM_OK" in r.stdout

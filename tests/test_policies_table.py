@@ -1,0 +1,132 @@
+"""Policy behaviour + redirection-table/allocator invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_trace_arrays
+from repro.core import (HybridAllocator, Trace, check_table, init_table,
+                        run_trace, small_platform)
+from repro.core.config import FAST, SLOW
+
+
+def test_hot_page_gets_promoted():
+    cfg = small_platform(chunk=8, policy="hotness", hot_threshold=3,
+                         decay_every=64)
+    hot_page = cfg.n_fast_pages + 2   # lives in NVM initially
+    n = 256
+    page = np.full(n, hot_page, np.int32)
+    t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
+              jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
+    state, outs, _ = run_trace(cfg, t)
+    assert int(state.dma.swaps_done) >= 1
+    assert int(state.table_device[hot_page]) == FAST
+    # later accesses hit the fast tier
+    dev = np.asarray(outs["device"])
+    assert dev[-1] == FAST
+
+
+def test_static_never_migrates():
+    cfg = small_platform(chunk=8, policy="static")
+    rng = np.random.default_rng(0)
+    page, off, w, sz = make_trace_arrays(cfg, 256, rng, hot_fraction=0.8)
+    t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
+              jnp.asarray(sz))
+    state, _, _ = run_trace(cfg, t)
+    assert int(state.dma.swaps_done) == 0
+    dev0, frm0 = init_table(cfg)
+    np.testing.assert_array_equal(np.asarray(state.table_device),
+                                  np.asarray(dev0))
+
+
+def test_table_bijection_preserved_after_many_swaps():
+    cfg = small_platform(chunk=8, policy="hotness", hot_threshold=2,
+                         decay_every=32)
+    rng = np.random.default_rng(1)
+    page, off, w, sz = make_trace_arrays(cfg, 1024, rng, hot_fraction=0.7,
+                                         n_hot=6)
+    t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
+              jnp.asarray(sz))
+    state, _, _ = run_trace(cfg, t)
+    assert int(state.dma.swaps_done) >= 2
+    check_table(cfg, np.asarray(state.table_device),
+                np.asarray(state.table_frame))
+    # fast_owner inverse map consistent with the table
+    owner = np.asarray(state.fast_owner)
+    dev = np.asarray(state.table_device)
+    frm = np.asarray(state.table_frame)
+    for f in range(cfg.n_fast_pages):
+        p = owner[f]
+        assert dev[p] == FAST and frm[p] == f
+
+
+def test_stream_policy_prefetches():
+    cfg = small_platform(chunk=16, policy="stream", hot_threshold=100)
+    # pure sequential walk through NVM pages: stream detector should trigger
+    n = 256
+    page = (cfg.n_fast_pages + np.arange(n) % 24).astype(np.int32)
+    t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
+              jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
+    state, _, _ = run_trace(cfg, t)
+    assert int(state.dma.swaps_done) >= 1
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_allocator_roundtrip(data):
+    cfg = small_platform()
+    alloc = HybridAllocator(cfg)
+    total = dict(alloc.free_pages)
+    handles = []
+    for _ in range(data.draw(st.integers(1, 8))):
+        n = data.draw(st.integers(1, 6))
+        hint = data.draw(st.sampled_from([FAST, SLOW]))
+        h, pages = alloc.alloc(n, hint=hint)
+        assert len(set(pages.tolist())) == n
+        handles.append(h)
+    for h in handles:
+        alloc.free(h)
+    assert alloc.free_pages == total
+
+
+def test_allocator_hint_honoured_then_spills():
+    cfg = small_platform()           # 8 fast pages
+    alloc = HybridAllocator(cfg)
+    _, p1 = alloc.alloc(8, hint=FAST)
+    assert all(p < cfg.n_fast_pages for p in p1)
+    _, p2 = alloc.alloc(4, hint=FAST)    # fast exhausted -> spills to slow
+    assert all(p >= cfg.n_fast_pages for p in p2)
+    with pytest.raises(MemoryError):
+        alloc.alloc(cfg.n_pages, hint=SLOW)
+
+
+def test_write_bias_flattens_nvm_wear():
+    """Endurance (paper Table I): the write_bias policy must reduce peak
+    NVM frame wear vs static placement on a write-hot working set."""
+    import jax.numpy as jnp
+    base = small_platform(chunk=8, hot_threshold=2, decay_every=64,
+                          n_fast_pages=8, n_slow_pages=56)
+    n = 1024
+    rng2 = np.random.default_rng(7)
+    # write-hot pages resident in NVM
+    page = (base.n_fast_pages + rng2.integers(0, 4, n)).astype(np.int32)
+    t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
+              jnp.ones(n, bool), jnp.full(n, 64, jnp.int32))
+
+    s_static, _, _ = run_trace(base.with_(policy="static"), t)
+    s_wb, _, _ = run_trace(base.with_(policy="write_bias", write_weight=4), t)
+    assert int(s_wb.dma.swaps_done) > 0
+    assert int(jnp.max(s_wb.wear)) < int(jnp.max(s_static.wear))
+
+
+def test_wear_counts_writes_only():
+    import jax.numpy as jnp
+    cfg = small_platform(chunk=8, policy="static")
+    n = 64
+    page = np.full(n, cfg.n_fast_pages + 3, np.int32)   # one slow page
+    t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
+              jnp.asarray(np.arange(n) % 2 == 0),       # half writes
+              jnp.full(n, 64, jnp.int32))
+    state, _, _ = run_trace(cfg, t)
+    assert int(jnp.sum(state.wear)) == n // 2
+    assert int(state.wear[3]) == n // 2                 # frame 3 of NVM
