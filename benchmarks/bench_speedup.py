@@ -17,7 +17,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import paper_platform, run_trace, emulate, pad_trace
+from repro.core import paper_platform, emulate, pad_trace
 from repro.sims import cycle_sim, trace_sim
 from repro.trace import workload_trace
 

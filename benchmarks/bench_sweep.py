@@ -1,0 +1,95 @@
+"""Design-space exploration throughput: the paper's Fig 8 / Table III
+study — technologies x tier ratios x policies x link latencies — as ONE
+compiled, vmapped emulation (repro.sweep).
+
+Reports per-point summaries (AMAT, fast-tier hit rate, migrations, NVM
+wear, held responses, energy) plus the executor's compile count: the
+entire grid shares a single ``emulate`` compilation, which is what makes
+sweeping cheap enough to be the default workflow.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import paper_platform
+from repro.sweep import SweepSpec, build_points, run_sweep
+from repro.sweep.runner import compile_count
+from repro.trace import TraceSpec, generate
+
+
+def make_spec(base=None) -> SweepSpec:
+    """2 technologies x 2 tier ratios x 2 policies x 2 link latencies =
+    16 design points, all sharing one static geometry."""
+    if base is None:
+        # paper Table II geometry scaled to a laptop-size page table:
+        # 72 K pages total; the tier split itself is a sweep axis.
+        base = paper_platform().with_(
+            n_fast_pages=8192,
+            n_slow_pages=65536,
+            chunk=512,
+            hot_threshold=4,
+            decay_every=32,
+            write_weight=4,
+        )
+    return SweepSpec(
+        base=base,
+        technologies=("3dxpoint", "stt-ram"),
+        fast_fractions=(1 / 9, 2 / 9),
+        policies=("hotness", "static"),
+        link_lats=(600, 1200),
+    )
+
+
+def run(verbose=True, n_requests=100_000, sharded=None):
+    spec = make_spec()
+    points = build_points(spec)
+    trace = generate(
+        TraceSpec(
+            n_requests=n_requests,
+            footprint_pages=60_000,
+            write_frac=0.4,
+            pattern="zipfian",
+            zipf_alpha=1.05,
+        )
+    )
+
+    mesh = "auto" if sharded or len(jax.devices()) > 1 else None
+    before = compile_count()
+    t0 = time.time()
+    res = run_sweep(points, trace, mesh=mesh)
+    jax.block_until_ready(res.states.clock)
+    first_s = time.time() - t0
+    compiles = None if before is None else compile_count() - before
+    if compiles is not None:
+        assert compiles == 1, f"sweep must compile once, got {compiles}"
+
+    t0 = time.time()
+    res = run_sweep(points, trace, mesh=mesh)
+    jax.block_until_ready(res.states.clock)
+    steady_s = time.time() - t0
+
+    rows = res.rows()
+    best = res.best()
+    summary = {
+        "n_points": len(points),
+        "compiles": compiles,
+        "first_call_s": first_s,
+        "steady_s": steady_s,
+        "us_per_point_req": steady_s / (len(points) * n_requests) * 1e6,
+        "best_label": best["label"],
+        "best_amat": best["amat_cyc"],
+        "rows": rows,
+    }
+    if verbose:
+        print(res.table())
+        msg = (
+            f"  {len(points)} design points, {compiles} compilation(s); "
+            f"first call {first_s:.2f}s, steady {steady_s:.2f}s "
+            f"({summary['us_per_point_req']:.3f} us/point/request)"
+        )
+        print(msg)
+        print(f"  best AMAT: {best['label']} ({best['amat_cyc']:.1f} cyc)")
+    return summary

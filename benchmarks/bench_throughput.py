@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.core import (Trace, emulate, emulate_channels, pad_trace,
                         paper_platform)

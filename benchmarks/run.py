@@ -16,7 +16,7 @@ def main() -> None:
 
     from benchmarks import (bench_latency_fidelity, bench_policies,
                             bench_request_volume, bench_speedup,
-                            bench_throughput)
+                            bench_sweep, bench_throughput)
 
     csv = []
 
@@ -50,6 +50,12 @@ def main() -> None:
     csv.append(("policy_exploration", "0",
                 f"best={best['policy']};"
                 f"latency_gain={static['mean_read_latency']/best['mean_read_latency']:.2f}x"))
+
+    print("== Design-space sweep (one compiled vmapped emulation) ==")
+    sw = bench_sweep.run(n_requests=20_000 if args.quick else 100_000)
+    csv.append(("design_space_sweep", f"{sw['us_per_point_req']:.3f}",
+                f"points={sw['n_points']};compiles={sw['compiles']};"
+                f"best={sw['best_label']};best_amat={sw['best_amat']:.1f}"))
 
     print("== Emulator throughput (chunk width / channels) ==")
     thr = bench_throughput.run(n=16_384 if args.quick else 65_536)

@@ -5,8 +5,9 @@
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import paper_platform, run_trace, TECHNOLOGIES
-from repro.trace import workload_trace
+from repro.core import paper_platform, run_trace   # noqa: E402
+from repro.sweep import SweepSpec, run_sweep       # noqa: E402
+from repro.trace import workload_trace             # noqa: E402
 
 # The paper's platform: 128MB DRAM + 1GB 3D-XPoint behind a PCIe link.
 cfg = paper_platform().with_(chunk=512, policy="hotness", hot_threshold=4)
@@ -22,9 +23,10 @@ print(f"emulated time: {int(state.clock)/1e6:.2f} ms "
 for k, v in summary.items():
     print(f"  {k:24s} {v}")
 
-# Swap the NVM technology (paper §III-F: arbitrary stall cycles).
-for tech in ("3dxpoint", "stt-ram", "flash"):
-    cfg2 = cfg.with_(slow=TECHNOLOGIES[tech])
-    _, _, s = run_trace(cfg2, trace)
-    print(f"NVM={tech:9s} mean read latency "
-          f"{s['mean_read_latency_cyc']:8.1f} cycles")
+# Swap the NVM technology (paper §III-F: arbitrary stall cycles). All
+# three design points run in ONE compiled, vmapped emulation (repro.sweep).
+res = run_sweep(SweepSpec(base=cfg, technologies=("3dxpoint", "stt-ram",
+                                                  "flash")), trace)
+for row in res.rows():
+    print(f"NVM={row['tech']:9s} mean read latency "
+          f"{row['amat_cyc']:10.1f} cycles | migrations {row['swaps']}")

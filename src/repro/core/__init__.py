@@ -5,16 +5,18 @@ Public API:
     Trace, emulate, emulate_channels, run_trace, pad_trace
     policies (register your own), counters.summary
 """
-from .config import (EmulatorConfig, TechnologyParams, TECHNOLOGIES,
-                     paper_platform, small_platform, FAST, SLOW)
+from .config import (EmulatorConfig, RuntimeParams, TechnologyParams,
+                     TECHNOLOGIES, paper_platform, small_platform, static_key,
+                     FAST, SLOW)
 from .emulator import (Trace, EmulatorState, emulate, emulate_channels,
                        run_trace, pad_trace, init_state)
 from .table import HybridAllocator, init_table, check_table
 from . import policies, counters, dma, latency, consistency
 
 __all__ = [
-    "EmulatorConfig", "TechnologyParams", "TECHNOLOGIES", "paper_platform",
-    "small_platform", "FAST", "SLOW", "Trace", "EmulatorState", "emulate",
+    "EmulatorConfig", "RuntimeParams", "TechnologyParams", "TECHNOLOGIES",
+    "paper_platform", "small_platform", "static_key",
+    "FAST", "SLOW", "Trace", "EmulatorState", "emulate",
     "emulate_channels", "run_trace", "pad_trace", "init_state",
     "HybridAllocator", "init_table", "check_table", "policies", "counters",
     "dma", "latency", "consistency",

@@ -8,7 +8,10 @@ scaling cycle counts from the DRAM round trip, not by modelling devices.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 
 # Device ids used throughout the platform.
 FAST = 0  # "DRAM"  — the fast tier
@@ -97,6 +100,108 @@ class EmulatorConfig:
 
     def with_(self, **kw) -> "EmulatorConfig":
         return dataclasses.replace(self, **kw)
+
+    def runtime(self) -> "RuntimeParams":
+        return RuntimeParams.from_config(self)
+
+
+def static_key(cfg: EmulatorConfig) -> tuple:
+    """The fields of ``cfg`` that determine compiled shapes and program
+    structure. Two configs with equal ``static_key`` share one ``emulate``
+    compilation; everything else lives in ``RuntimeParams`` and is traced.
+
+    Note the *total* page count is static but the fast/slow split is not:
+    the redirection table is initialized from a traced boundary, so tier
+    ratios are a batchable design axis.
+    """
+    return (cfg.page_size, cfg.subblock, cfg.n_pages, cfg.line_size,
+            cfg.n_banks, cfg.chunk, cfg.max_inflight, cfg.dma_buffer_bytes)
+
+
+def canonical_config(cfg: EmulatorConfig) -> EmulatorConfig:
+    """A representative config carrying only ``cfg``'s static fields, with
+    every runtime field left at its class default. Configs with equal
+    :func:`static_key` canonicalize identically, so jit caches keyed on
+    the canonical config are shared across sweeps that differ only in
+    runtime parameters. Only meaningful where ``params`` is always
+    supplied explicitly (the sweep executor) — the runtime defaults of
+    the result are arbitrary."""
+    return EmulatorConfig(
+        page_size=cfg.page_size, subblock=cfg.subblock,
+        n_fast_pages=1, n_slow_pages=cfg.n_pages - 1,
+        line_size=cfg.line_size, n_banks=cfg.n_banks, chunk=cfg.chunk,
+        max_inflight=cfg.max_inflight, dma_buffer_bytes=cfg.dma_buffer_bytes)
+
+
+class RuntimeParams(NamedTuple):
+    """Traced runtime parameters of the platform — a JAX pytree.
+
+    Everything the emulation pipeline reads per design point (technology
+    timings, bandwidths, link/issue timing, policy knobs, the fast-tier
+    boundary, the policy selector) lives here as a scalar array, so
+    ``emulate`` compiles once per :func:`static_key` and any number of
+    design points run through the same XLA computation — vmapping over a
+    stacked ``RuntimeParams`` batch is the sweep engine's core mechanism.
+
+    Field names deliberately mirror ``EmulatorConfig`` (flattened for the
+    two ``TechnologyParams``), so helpers that only touch shared fields
+    accept either object.
+    """
+
+    # device timing (cfg.fast / cfg.slow, flattened)
+    fast_read_lat: jax.Array       # int32 cycles
+    fast_write_lat: jax.Array
+    fast_bytes_per_cycle: jax.Array  # float32
+    slow_read_lat: jax.Array
+    slow_write_lat: jax.Array
+    slow_bytes_per_cycle: jax.Array
+    # interconnect + host issue model
+    link_lat: jax.Array            # int32
+    link_bytes_per_cycle: jax.Array  # float32
+    issue_gap: jax.Array           # int32
+    # DMA engine bandwidth (pre-divided: cycles per 512B sub-block move)
+    dma_cycles_per_subblock: jax.Array  # int32
+    # tier geometry: fast/slow boundary within the static n_pages space
+    n_fast_pages: jax.Array        # int32
+    # policy knobs + selector (index into policies.POLICIES order)
+    hot_threshold: jax.Array       # int32
+    hotness_decay_shift: jax.Array
+    decay_every: jax.Array
+    write_weight: jax.Array
+    policy_id: jax.Array
+    # power model coefficients
+    power_pj_per_bit_fast: jax.Array        # float32
+    power_pj_per_bit_slow_read: jax.Array
+    power_pj_per_bit_slow_write: jax.Array
+
+    @classmethod
+    def from_config(cls, cfg: EmulatorConfig) -> "RuntimeParams":
+        from . import policies  # deferred; policies imports this module
+        i32, f32 = jnp.int32, jnp.float32
+        return cls(
+            fast_read_lat=i32(cfg.fast.read_lat),
+            fast_write_lat=i32(cfg.fast.write_lat),
+            fast_bytes_per_cycle=f32(cfg.fast.bytes_per_cycle),
+            slow_read_lat=i32(cfg.slow.read_lat),
+            slow_write_lat=i32(cfg.slow.write_lat),
+            slow_bytes_per_cycle=f32(cfg.slow.bytes_per_cycle),
+            link_lat=i32(cfg.link_lat),
+            link_bytes_per_cycle=f32(cfg.link_bytes_per_cycle),
+            issue_gap=i32(cfg.issue_gap),
+            dma_cycles_per_subblock=i32(cfg.dma_cycles_per_subblock),
+            n_fast_pages=i32(cfg.n_fast_pages),
+            hot_threshold=i32(cfg.hot_threshold),
+            hotness_decay_shift=i32(cfg.hotness_decay_shift),
+            decay_every=i32(cfg.decay_every),
+            write_weight=i32(cfg.write_weight),
+            policy_id=i32(policies.policy_id(cfg.policy)),
+            power_pj_per_bit_fast=f32(cfg.power_pj_per_bit_fast),
+            power_pj_per_bit_slow_read=f32(cfg.power_pj_per_bit_slow_read),
+            power_pj_per_bit_slow_write=f32(cfg.power_pj_per_bit_slow_write),
+        )
+
+    def with_(self, **kw) -> "RuntimeParams":
+        return self._replace(**kw)
 
 
 # Paper Table I, converted to cycles (ns) and bytes/cycle. Bandwidths are

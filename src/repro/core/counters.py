@@ -13,7 +13,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .config import EmulatorConfig, SLOW
+from .config import SLOW
 
 
 class Counters(NamedTuple):
@@ -38,10 +38,12 @@ class Counters(NamedTuple):
         return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f)
 
 
-def update(cfg: EmulatorConfig, c: Counters, *, device: jax.Array,
+def update(p, c: Counters, *, device: jax.Array,
            is_write: jax.Array, size: jax.Array, valid: jax.Array,
            latency: jax.Array, held: jax.Array) -> Counters:
-    """Accumulate one chunk. All request fields are int32[chunk]."""
+    """Accumulate one chunk. All request fields are int32[chunk]. ``p`` is
+    an ``EmulatorConfig`` or traced ``RuntimeParams`` (shared power
+    coefficients)."""
     v = valid
     w = is_write & v
     r = (~is_write) & v
@@ -55,9 +57,9 @@ def update(cfg: EmulatorConfig, c: Counters, *, device: jax.Array,
         return jnp.sum(jnp.where(mask, fsize, 0.0))
 
     bits_fast = 8.0 * (byt(r & ~slow) + byt(w & ~slow))
-    energy = (bits_fast * cfg.power_pj_per_bit_fast
-              + 8.0 * byt(r & slow) * cfg.power_pj_per_bit_slow_read
-              + 8.0 * byt(w & slow) * cfg.power_pj_per_bit_slow_write)
+    energy = (bits_fast * p.power_pj_per_bit_fast
+              + 8.0 * byt(r & slow) * p.power_pj_per_bit_slow_read
+              + 8.0 * byt(w & slow) * p.power_pj_per_bit_slow_write)
 
     read_lat = jnp.where(r, latency, 0)
     return Counters(

@@ -20,7 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .config import EmulatorConfig
+from .config import EmulatorConfig, RuntimeParams
 
 
 class DMAState(NamedTuple):
@@ -37,19 +37,23 @@ class DMAState(NamedTuple):
                         start=z, swaps_done=z)
 
 
-def exchange_cycles_per_subblock(cfg: EmulatorConfig) -> int:
-    # One exchanged sub-block = A->buffer, B->A, buffer->B transfers.
-    return 3 * cfg.dma_cycles_per_subblock
+def exchange_cycles_per_subblock(cfg: EmulatorConfig,
+                                 params: RuntimeParams | None = None):
+    """Cycles to exchange one sub-block (A->buffer, B->A, buffer->B).
+    Returns a python int from ``cfg`` alone (host-side simulators), or a
+    traced int32 when ``params`` carries the DMA bandwidth."""
+    eff = cfg if params is None else params
+    return 3 * eff.dma_cycles_per_subblock
 
 
-def swap_duration(cfg: EmulatorConfig) -> int:
-    return cfg.subblocks_per_page * exchange_cycles_per_subblock(cfg)
+def swap_duration(cfg: EmulatorConfig, params: RuntimeParams | None = None):
+    return cfg.subblocks_per_page * exchange_cycles_per_subblock(cfg, params)
 
 
-def progress_subblocks(cfg: EmulatorConfig, dma: DMAState,
-                       t: jax.Array) -> jax.Array:
+def progress_subblocks(cfg: EmulatorConfig, dma: DMAState, t: jax.Array,
+                       params: RuntimeParams | None = None) -> jax.Array:
     """Number of fully exchanged sub-blocks at time ``t`` (int32, clamped)."""
-    raw = (t - dma.start) // exchange_cycles_per_subblock(cfg)
+    raw = (t - dma.start) // exchange_cycles_per_subblock(cfg, params)
     raw = jnp.where(dma.active == 1, raw, 0)
     return jnp.clip(raw, 0, cfg.subblocks_per_page)
 
@@ -58,7 +62,8 @@ def redirect(cfg: EmulatorConfig, dma: DMAState,
              page: jax.Array, offset: jax.Array, t: jax.Array,
              device: jax.Array, frame: jax.Array,
              dev_a: jax.Array, frame_a: jax.Array,
-             dev_b: jax.Array, frame_b: jax.Array
+             dev_b: jax.Array, frame_b: jax.Array,
+             params: RuntimeParams | None = None
              ) -> tuple[jax.Array, jax.Array]:
     """Apply swap-progress redirection to a chunk of requests.
 
@@ -68,7 +73,7 @@ def redirect(cfg: EmulatorConfig, dma: DMAState,
 
     Returns (device, frame) actually accessed by each request.
     """
-    prog = progress_subblocks(cfg, dma, t)            # int32[chunk]
+    prog = progress_subblocks(cfg, dma, t, params)    # int32[chunk]
     blk = offset // cfg.subblock
     transferred = blk < prog                           # sub-block already moved
 
@@ -84,12 +89,13 @@ def redirect(cfg: EmulatorConfig, dma: DMAState,
 
 
 def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
-                   table_device: jax.Array, table_frame: jax.Array
+                   table_device: jax.Array, table_frame: jax.Array,
+                   params: RuntimeParams | None = None
                    ) -> tuple["DMAState", jax.Array, jax.Array, jax.Array]:
     """At a chunk boundary: if the in-flight swap has finished by ``now``,
     commit it to the redirection table (exchange the two entries).
     Returns (state, table_device, table_frame, done_flag)."""
-    done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg))
+    done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg, params))
 
     a, b = dma.page_a, dma.page_b
     # Gather both entries, swap them where `done`.

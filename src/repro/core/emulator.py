@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from . import consistency, counters as counters_lib, dma as dma_lib
 from . import latency, policies as policies_lib, table as table_lib
-from .config import EmulatorConfig, FAST, SLOW
+from .config import EmulatorConfig, RuntimeParams, FAST, SLOW
 
 
 class Trace(NamedTuple):
@@ -59,14 +59,19 @@ class EmulatorState(NamedTuple):
     counters: counters_lib.Counters
 
 
-def init_state(cfg: EmulatorConfig) -> EmulatorState:
-    device, frame = table_lib.init_table(cfg)
+def init_state(cfg: EmulatorConfig,
+               params: RuntimeParams | None = None) -> EmulatorState:
+    """Fresh platform state. ``wear`` and ``fast_owner`` are sized by the
+    static total page count (the fast/slow split is a runtime parameter);
+    entries beyond the active tier are never read."""
+    nf = None if params is None else params.n_fast_pages
+    device, frame = table_lib.init_table(cfg, nf)
     z = jnp.int32(0)
     return EmulatorState(
         table_device=device, table_frame=frame,
         hotness=jnp.zeros(cfg.n_pages, jnp.int32),
-        wear=jnp.zeros(cfg.n_slow_pages, jnp.int32),
-        fast_owner=jnp.arange(cfg.n_fast_pages, dtype=jnp.int32),
+        wear=jnp.zeros(cfg.n_pages, jnp.int32),
+        fast_owner=jnp.arange(cfg.n_pages, dtype=jnp.int32),
         clock_ptr=z, chunk_idx=z,
         dma=dma_lib.DMAState.idle(),
         clock=z,
@@ -86,7 +91,8 @@ def pad_trace(cfg: EmulatorConfig, t: Trace) -> tuple[Trace, jax.Array]:
     return t, valid
 
 
-def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
+def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
+                registry: tuple[str, ...], state: EmulatorState,
                 chunk: tuple[Trace, jax.Array]):
     trace, valid = chunk
     page, offset, is_write, size = trace
@@ -94,14 +100,14 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
     size = jnp.where(valid, size, 0)
 
     # --- stage 1: RX link (host -> HMMU). Writes carry payload, reads a header.
-    issue = state.clock + cfg.issue_gap * (1 + jnp.arange(n, dtype=jnp.int32))
+    issue = state.clock + params.issue_gap * (1 + jnp.arange(n, dtype=jnp.int32))
     issue = jnp.where(valid, issue, latency._NEG)
     rx_bytes = jnp.where(is_write, size, 16)
-    rx_srv = jnp.where(valid, latency.link_service_cycles(cfg, rx_bytes), 0)
+    rx_srv = jnp.where(valid, latency.link_service_cycles(params, rx_bytes), 0)
     rx_done = latency.maxplus_scan(
         jnp.maximum(issue, jnp.where(valid, state.link_free_rx, latency._NEG)),
         rx_srv)
-    arrive = rx_done + jnp.where(valid, cfg.link_lat // 2, 0)
+    arrive = rx_done + jnp.where(valid, params.link_lat // 2, 0)
 
     # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
     dev = state.table_device[page]
@@ -111,11 +117,12 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
     dev, frm = dma_lib.redirect(
         cfg, state.dma, page, offset, arrive, dev, frm,
         state.table_device[a], state.table_frame[a],
-        state.table_device[b], state.table_frame[b])
+        state.table_device[b], state.table_frame[b], params)
 
     # --- stage 3: per-device bank queues + media access.
     bank = dev * cfg.n_banks + frm % cfg.n_banks
-    med_srv = jnp.where(valid, latency.device_service_cycles(cfg, dev, is_write, size), 0)
+    med_srv = jnp.where(
+        valid, latency.device_service_cycles(params, dev, is_write, size), 0)
     med_done, bank_free = latency.resolve_bank_queues(
         arrive, med_srv, bank, 2 * cfg.n_banks, state.bank_free)
 
@@ -126,20 +133,20 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
 
     # --- stage 5: ... then TX link serialization (responses leave in order).
     tx_bytes = jnp.where(is_write, 16, size)
-    tx_srv = jnp.where(valid, latency.link_service_cycles(cfg, tx_bytes), 0)
+    tx_srv = jnp.where(valid, latency.link_service_cycles(params, tx_bytes), 0)
     returns = latency.maxplus_scan(
         jnp.maximum(ordered, jnp.where(valid, state.link_free_tx, latency._NEG)),
-        tx_srv) + jnp.where(valid, cfg.link_lat // 2, 0)
+        tx_srv) + jnp.where(valid, params.link_lat // 2, 0)
 
     lat = jnp.where(valid, returns - issue, 0)
 
     # --- chunk boundary: counters, hotness, DMA completion, policy commit.
-    ctr = counters_lib.update(cfg, state.counters, device=dev,
+    ctr = counters_lib.update(params, state.counters, device=dev,
                               is_write=is_write, size=size, valid=valid,
                               latency=lat, held=held)
-    do_decay = (state.chunk_idx % cfg.decay_every) == (cfg.decay_every - 1)
-    hotness = policies_lib.update_hotness(cfg, state.hotness, page, is_write,
-                                          valid, do_decay)
+    do_decay = (state.chunk_idx % params.decay_every) == (params.decay_every - 1)
+    hotness = policies_lib.update_hotness(params, state.hotness, page,
+                                          is_write, valid, do_decay)
     # NVM endurance: count writes per slow frame (DMA migration writes the
     # whole page once too — charged at swap commit below is negligible vs
     # demand writes, so we charge demand traffic only).
@@ -150,11 +157,12 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
     any_valid = jnp.any(valid)
     last_ret = jnp.where(any_valid, jnp.max(jnp.where(valid, returns, state.last_return)),
                          state.last_return)
-    now = jnp.maximum(state.clock + cfg.issue_gap * n, last_ret)
+    now = jnp.maximum(state.clock + params.issue_gap * n, last_ret)
 
     swap_a = jnp.maximum(state.dma.page_a, 0)  # pre-completion swap pair
     dma, tdev, tfrm = state.dma, state.table_device, state.table_frame
-    dma, tdev, tfrm, done = dma_lib.maybe_complete(cfg, dma, now, tdev, tfrm)
+    dma, tdev, tfrm, done = dma_lib.maybe_complete(cfg, dma, now, tdev, tfrm,
+                                                   params)
     # Maintain the frame -> page inverse map: the promoted page (swap_a, now
     # FAST) owns its new frame.
     own_idx = jnp.where(done & (tdev[swap_a] == FAST), tfrm[swap_a], 0)
@@ -162,8 +170,19 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
                         state.fast_owner[0])
     fast_owner = state.fast_owner.at[own_idx].set(own_val)
 
-    want, cand, victim, clock_ptr = policy(
-        cfg, hotness, tdev, fast_owner, state.clock_ptr, page, is_write, valid)
+    # Policy dispatch on the *traced* policy id: lax.switch over the
+    # (static) registry slice makes the policy itself a batchable design
+    # axis. params.policy_id indexes ``registry``; a single-policy
+    # registry skips the switch so vmapped non-policy sweeps never pay
+    # for branches they don't use.
+    branches = [functools.partial(policies_lib.POLICIES[name], cfg, params)
+                for name in registry]
+    ops = (hotness, tdev, fast_owner, state.clock_ptr, page, is_write, valid)
+    if len(branches) == 1:
+        want, cand, victim, clock_ptr = branches[0](*ops)
+    else:
+        want, cand, victim, clock_ptr = jax.lax.switch(
+            params.policy_id, branches, *ops)
     want = want & any_valid & (tdev[cand] == SLOW) & (tdev[victim] == FAST)
     dma = dma_lib.maybe_start(dma, want, cand, victim, now)
 
@@ -184,31 +203,57 @@ def _chunk_step(cfg: EmulatorConfig, policy, state: EmulatorState,
     return new_state, out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg", "registry"))
+def _emulate(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
+             valid: jax.Array | None = None,
+             state: EmulatorState | None = None,
+             params: RuntimeParams | None = None
+             ) -> tuple[EmulatorState, dict]:
+    if params is None:
+        params = RuntimeParams.from_config(cfg)
+    n = len(trace)
+    assert n % cfg.chunk == 0, "pad the trace to a chunk multiple first"
+    if valid is None:
+        valid = jnp.ones(n, bool)
+    if state is None:
+        state = init_state(cfg, params)
+    chunks = jax.tree.map(lambda x: x.reshape(n // cfg.chunk, cfg.chunk),
+                          (trace, valid))
+    state, outs = jax.lax.scan(
+        functools.partial(_chunk_step, cfg, params, registry), state, chunks)
+    outs = jax.tree.map(lambda x: x.reshape(n), outs)
+    return state, outs
+
+
 def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
-            state: EmulatorState | None = None
+            state: EmulatorState | None = None,
+            params: RuntimeParams | None = None,
+            registry: tuple[str, ...] | None = None
             ) -> tuple[EmulatorState, dict]:
     """Run a trace through the platform. Returns the final state and
     per-request outputs (in-order return time, device accessed, latency).
 
     The trace length must be a multiple of ``cfg.chunk`` (use
     ``pad_trace``). Pass ``state`` to continue a previous emulation (the
-    serving integration feeds traces incrementally). jit-compiled;
-    vmap-able over a leading channel axis via ``emulate_channels``.
+    serving integration feeds traces incrementally).
+
+    ``cfg`` contributes only static geometry (see ``config.static_key``) to
+    the compiled program; every timing/policy knob is read from ``params``
+    (default: ``RuntimeParams.from_config(cfg)``). Compilation is therefore
+    shared across design points: vmap over a stacked ``params`` batch
+    (``repro.sweep``) evaluates many technologies / tier ratios / policies /
+    link latencies in one XLA computation, and ``emulate_channels`` vmaps
+    over a leading trace axis for FPGA-style spatial parallelism.
+
+    ``registry`` is the (static) tuple of policy names ``params.policy_id``
+    indexes — default: the full registration order, snapshotted at call
+    time so late ``@register`` calls can never hit a stale compilation.
+    Sweeps pass the subset of policies actually present in the batch,
+    keeping vmapped non-policy sweeps at single-branch cost.
     """
-    policy = policies_lib.get(cfg.policy)
-    n = len(trace)
-    assert n % cfg.chunk == 0, "pad the trace to a chunk multiple first"
-    if valid is None:
-        valid = jnp.ones(n, bool)
-    if state is None:
-        state = init_state(cfg)
-    chunks = jax.tree.map(lambda x: x.reshape(n // cfg.chunk, cfg.chunk),
-                          (trace, valid))
-    state, outs = jax.lax.scan(
-        functools.partial(_chunk_step, cfg, policy), state, chunks)
-    outs = jax.tree.map(lambda x: x.reshape(n), outs)
-    return state, outs
+    if registry is None:
+        registry = tuple(policies_lib.POLICIES)
+    return _emulate(cfg, registry, trace, valid, state, params)
 
 
 def emulate_channels(cfg: EmulatorConfig, traces: Trace):
@@ -218,8 +263,9 @@ def emulate_channels(cfg: EmulatorConfig, traces: Trace):
     return fn(traces)
 
 
-def run_trace(cfg: EmulatorConfig, trace: Trace):
+def run_trace(cfg: EmulatorConfig, trace: Trace,
+              params: RuntimeParams | None = None):
     """Convenience wrapper: pad, emulate, return (state, outputs, summary)."""
     padded, valid = pad_trace(cfg, trace)
-    state, outs = emulate(cfg, padded, valid)
+    state, outs = emulate(cfg, padded, valid, None, params)
     return state, outs, counters_lib.summary(state.counters)

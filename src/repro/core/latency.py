@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .config import EmulatorConfig, FAST, SLOW
+from .config import EmulatorConfig, RuntimeParams, SLOW
 
 
 def maxplus_scan(arrival: jax.Array, service: jax.Array) -> jax.Array:
@@ -69,18 +69,25 @@ def resolve_bank_queues(arrival: jax.Array, service: jax.Array,
     return done, new_free
 
 
-def device_service_cycles(cfg: EmulatorConfig, device: jax.Array,
+def device_service_cycles(p: EmulatorConfig | RuntimeParams, device: jax.Array,
                           is_write: jax.Array, size: jax.Array) -> jax.Array:
-    """Media access time (latency + transfer) per request, int32 cycles."""
-    f, s = cfg.fast, cfg.slow
-    lat_fast = jnp.where(is_write, f.write_lat, f.read_lat)
-    lat_slow = jnp.where(is_write, s.write_lat, s.read_lat)
-    xfer_fast = jnp.ceil(size / f.bytes_per_cycle).astype(jnp.int32)
-    xfer_slow = jnp.ceil(size / s.bytes_per_cycle).astype(jnp.int32)
+    """Media access time (latency + transfer) per request, int32 cycles.
+
+    ``p`` is a traced ``RuntimeParams`` on the hot path; a plain
+    ``EmulatorConfig`` is accepted for host-side/diagnostic use.
+    """
+    if isinstance(p, EmulatorConfig):
+        p = RuntimeParams.from_config(p)
+    lat_fast = jnp.where(is_write, p.fast_write_lat, p.fast_read_lat)
+    lat_slow = jnp.where(is_write, p.slow_write_lat, p.slow_read_lat)
+    xfer_fast = jnp.ceil(size / p.fast_bytes_per_cycle).astype(jnp.int32)
+    xfer_slow = jnp.ceil(size / p.slow_bytes_per_cycle).astype(jnp.int32)
     slow = device == SLOW
     return jnp.where(slow, lat_slow + xfer_slow, lat_fast + xfer_fast)
 
 
-def link_service_cycles(cfg: EmulatorConfig, size: jax.Array) -> jax.Array:
-    """Serialization time on the host<->HMMU link (PCIe analogue)."""
-    return jnp.ceil(size / cfg.link_bytes_per_cycle).astype(jnp.int32)
+def link_service_cycles(p: EmulatorConfig | RuntimeParams,
+                        size: jax.Array) -> jax.Array:
+    """Serialization time on the host<->HMMU link (PCIe analogue).
+    ``p`` may be an ``EmulatorConfig`` or ``RuntimeParams`` (shared field)."""
+    return jnp.ceil(size / p.link_bytes_per_cycle).astype(jnp.int32)

@@ -16,10 +16,16 @@ design-space studies.
 
 Policy interface::
 
-    propose(cfg, hotness, table_device, fast_owner, ptr, pages, is_write, valid)
+    propose(cfg, params, hotness, table_device, fast_owner, ptr,
+            pages, is_write, valid)
         -> (want: bool[], slow_page: int32[], fast_victim: int32[], new_ptr)
 
-New policies register via ``@register("name")``.
+``cfg`` carries static geometry, ``params`` the traced knobs
+(``hot_threshold``, ``n_fast_pages``, ...). New policies register via
+``@register("name")``; the emulator dispatches on the traced
+``params.policy_id`` with ``jax.lax.switch`` over the registration order,
+which makes the policy itself a batchable design axis (sweeps evaluate
+several policies in one compiled computation).
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .config import EmulatorConfig, FAST, SLOW
+from .config import FAST, SLOW
 
 POLICIES: dict[str, Callable] = {}
 
@@ -46,20 +52,29 @@ def get(name: str) -> Callable:
     return POLICIES[name]
 
 
-def update_hotness(cfg: EmulatorConfig, hotness: jax.Array, pages: jax.Array,
+def policy_id(name: str) -> int:
+    """Index of ``name`` in registration order — the ``lax.switch`` branch
+    index carried by ``RuntimeParams.policy_id``."""
+    get(name)
+    return list(POLICIES).index(name)
+
+
+
+def update_hotness(p, hotness: jax.Array, pages: jax.Array,
                    is_write: jax.Array, valid: jax.Array,
                    do_decay: jax.Array) -> jax.Array:
     """Scatter-add chunk accesses (writes weighted), then decay-by-shift on
-    ``do_decay`` boundaries (hardware aging counters)."""
-    w = 1 + (cfg.write_weight - 1) * is_write.astype(jnp.int32)
+    ``do_decay`` boundaries (hardware aging counters). ``p`` is an
+    ``EmulatorConfig`` or traced ``RuntimeParams`` (shared field names)."""
+    w = 1 + (p.write_weight - 1) * is_write.astype(jnp.int32)
     w = jnp.where(valid, w, 0)
     hotness = hotness.at[pages].add(w, mode="drop")
     return jax.lax.cond(do_decay,
-                        lambda h: h >> cfg.hotness_decay_shift,
+                        lambda h: h >> p.hotness_decay_shift,
                         lambda h: h, hotness)
 
 
-def _chunk_candidate(cfg, hotness, table_device, pages, valid):
+def _chunk_candidate(hotness, table_device, pages, valid):
     """Hottest slow-resident page among this chunk's accesses."""
     heat = jnp.where(valid & (table_device[pages] == SLOW), hotness[pages], -1)
     j = jnp.argmax(heat)
@@ -71,7 +86,7 @@ def _clock_victim(fast_owner, ptr):
 
 
 @register("static")
-def static_policy(cfg, hotness, table_device, fast_owner, ptr,
+def static_policy(cfg, params, hotness, table_device, fast_owner, ptr,
                   pages, is_write, valid):
     """Placement fixed at initialization; never migrate (the baseline the
     paper's users compare their designs against)."""
@@ -80,31 +95,31 @@ def static_policy(cfg, hotness, table_device, fast_owner, ptr,
 
 
 @register("hotness")
-def hotness_policy(cfg, hotness, table_device, fast_owner, ptr,
+def hotness_policy(cfg, params, hotness, table_device, fast_owner, ptr,
                    pages, is_write, valid):
     """Promote the hottest slow page seen in this chunk once it crosses
     ``hot_threshold``; victim = CLOCK pointer over DRAM frames, skipped if
     the victim is hotter than the candidate."""
-    cand, heat = _chunk_candidate(cfg, hotness, table_device, pages, valid)
+    cand, heat = _chunk_candidate(hotness, table_device, pages, valid)
     victim = _clock_victim(fast_owner, ptr)
-    want = (heat >= cfg.hot_threshold) & (heat > hotness[victim])
-    new_ptr = jnp.where(want, (ptr + 1) % fast_owner.shape[0], ptr)
+    want = (heat >= params.hot_threshold) & (heat > hotness[victim])
+    new_ptr = jnp.where(want, (ptr + 1) % params.n_fast_pages, ptr)
     return want, cand, victim, new_ptr
 
 
 @register("write_bias")
-def write_bias_policy(cfg, hotness, table_device, fast_owner, ptr,
+def write_bias_policy(cfg, params, hotness, table_device, fast_owner, ptr,
                       pages, is_write, valid):
     """Same promotion rule, but hotness accumulation weights writes by
     ``cfg.write_weight`` (configure > 1): NVM writes are the expensive,
     endurance-limited operation (paper Table I), so write-heavy pages
     should live in DRAM."""
-    return hotness_policy(cfg, hotness, table_device, fast_owner, ptr,
-                          pages, is_write, valid)
+    return hotness_policy(cfg, params, hotness, table_device, fast_owner,
+                          ptr, pages, is_write, valid)
 
 
 @register("stream")
-def stream_policy(cfg, hotness, table_device, fast_owner, ptr,
+def stream_policy(cfg, params, hotness, table_device, fast_owner, ptr,
                   pages, is_write, valid):
     """Access-pattern recognition: detect a dominant small stride in the
     chunk's page stream and *pre-promote* the stream's next page before
@@ -124,18 +139,18 @@ def stream_policy(cfg, hotness, table_device, fast_owner, ptr,
     target = jnp.clip(last + stride, 0, table_device.shape[0] - 1)
     target_is_slow = table_device[target] == SLOW
 
-    hw, hc, hv, _ = hotness_policy(cfg, hotness, table_device, fast_owner,
-                                   ptr, pages, is_write, valid)
+    hw, hc, hv, _ = hotness_policy(cfg, params, hotness, table_device,
+                                   fast_owner, ptr, pages, is_write, valid)
     want_stream = streaming & target_is_slow
     want = want_stream | hw
     cand = jnp.where(want_stream, target, hc)
     victim = hv
-    new_ptr = jnp.where(want, (ptr + 1) % fast_owner.shape[0], ptr)
+    new_ptr = jnp.where(want, (ptr + 1) % params.n_fast_pages, ptr)
     return want, cand, victim, new_ptr
 
 
 @register("hotness_global")
-def hotness_global_policy(cfg, hotness, table_device, fast_owner, ptr,
+def hotness_global_policy(cfg, params, hotness, table_device, fast_owner, ptr,
                           pages, is_write, valid):
     """Idealized reference: global hottest-slow / coldest-fast scan each
     chunk. No RTL implements this in a cycle — kept for design-space
@@ -145,5 +160,5 @@ def hotness_global_policy(cfg, hotness, table_device, fast_owner, ptr,
     heat = heat_all[cand]
     cold = jnp.where(table_device == FAST, hotness, jnp.int32(2 ** 30))
     victim = jnp.argmin(cold).astype(jnp.int32)
-    want = (heat >= cfg.hot_threshold) & (heat > hotness[victim])
+    want = (heat >= params.hot_threshold) & (heat > hotness[victim])
     return want, cand, victim, ptr

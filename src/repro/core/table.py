@@ -19,33 +19,40 @@ import numpy as np
 from .config import EmulatorConfig, FAST, SLOW
 
 
-def init_table(cfg: EmulatorConfig) -> tuple[jax.Array, jax.Array]:
+def init_table(cfg: EmulatorConfig, n_fast_pages=None
+               ) -> tuple[jax.Array, jax.Array]:
     """Initial placement: first ``n_fast_pages`` of the flat space map to
     DRAM frames, the rest to NVM frames (paper's BAR window layout maps the
-    two DIMMs contiguously)."""
+    two DIMMs contiguously).
+
+    ``n_fast_pages`` may be a traced int32 (``RuntimeParams.n_fast_pages``)
+    — the total space is static but the tier boundary is a runtime design
+    axis. Defaults to ``cfg.n_fast_pages``.
+    """
     n = cfg.n_pages
-    device = jnp.where(jnp.arange(n) < cfg.n_fast_pages, FAST, SLOW
-                       ).astype(jnp.int32)
-    frame = jnp.where(jnp.arange(n) < cfg.n_fast_pages,
-                      jnp.arange(n), jnp.arange(n) - cfg.n_fast_pages
-                      ).astype(jnp.int32)
+    nf = cfg.n_fast_pages if n_fast_pages is None else n_fast_pages
+    ar = jnp.arange(n)
+    device = jnp.where(ar < nf, FAST, SLOW).astype(jnp.int32)
+    frame = jnp.where(ar < nf, ar, ar - nf).astype(jnp.int32)
     return device, frame
 
 
 def check_table(cfg: EmulatorConfig, device: np.ndarray,
-                frame: np.ndarray) -> None:
+                frame: np.ndarray, n_fast_pages: int | None = None) -> None:
     """Invariant: the mapping is a bijection onto device frames — every
     fast frame and slow frame is owned by exactly one page. Raises on
     violation (used by tests and by the emulator's debug mode)."""
+    nf = cfg.n_fast_pages if n_fast_pages is None else int(n_fast_pages)
+    ns = cfg.n_pages - nf
     device = np.asarray(device)
     frame = np.asarray(frame)
     fast_frames = np.sort(frame[device == FAST])
     slow_frames = np.sort(frame[device == SLOW])
-    if fast_frames.size != cfg.n_fast_pages or \
-            not np.array_equal(fast_frames, np.arange(cfg.n_fast_pages)):
+    if fast_frames.size != nf or \
+            not np.array_equal(fast_frames, np.arange(nf)):
         raise AssertionError("fast-frame mapping is not a bijection")
-    if slow_frames.size != cfg.n_slow_pages or \
-            not np.array_equal(slow_frames, np.arange(cfg.n_slow_pages)):
+    if slow_frames.size != ns or \
+            not np.array_equal(slow_frames, np.arange(ns)):
         raise AssertionError("slow-frame mapping is not a bijection")
 
 

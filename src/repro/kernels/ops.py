@@ -16,7 +16,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from . import flash_attention as _fa

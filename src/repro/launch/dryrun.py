@@ -163,11 +163,20 @@ def build_cell(arch: str, shape_name: str, mesh, cfg: ModelConfig | None = None,
     return (fn, (params_shapes, tokens, cache_shapes, pos)), None
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict on current jax, a one-element
+    list of dicts on older releases — normalize."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _compile_metrics(fn, args, mesh) -> dict:
     with mesh:
         lowered = fn.lower(*args)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -219,7 +228,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         lowered = fn.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         coll = collective_bytes(compiled.as_text())
     rec.update(
         status="ok",

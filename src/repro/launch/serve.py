@@ -18,7 +18,7 @@ import repro.configs as configs
 from repro.core import EmulatorConfig
 from repro.memtier import ServeEngine
 from repro.memtier.engine import Request
-from repro.models import ShardCtx, init_params
+from repro.models import init_params
 
 
 def run(argv=None):

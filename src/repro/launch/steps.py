@@ -6,8 +6,6 @@ activation-memory lever for the biggest train cells — and returns
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

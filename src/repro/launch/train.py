@@ -22,7 +22,6 @@ import statistics
 import time
 
 import jax
-import numpy as np
 
 import repro.configs as configs
 from repro.ckpt import CheckpointManager, latest_step, load_checkpoint

@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (EmulatorConfig, HybridAllocator, Trace, counters,
                         emulator as emu, FAST, SLOW)

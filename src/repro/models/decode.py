@@ -23,7 +23,6 @@ try:
 except ImportError:                                # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
-from repro.kernels import ref
 from .sharding import ShardCtx
 
 NEG_INF = -1e30

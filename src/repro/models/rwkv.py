@@ -24,7 +24,6 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .sharding import ShardCtx
-from . import layers
 
 
 def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:

@@ -14,8 +14,7 @@ decode step writes the new token's state at index ``pos`` and attends over
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

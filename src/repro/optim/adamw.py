@@ -9,7 +9,6 @@ dim where divisible (launch.shardings.zero1_specs).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import NamedTuple
 
 import jax

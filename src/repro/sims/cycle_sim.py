@@ -13,7 +13,6 @@ refresh modelling — extra fidelity the flat simulators lack.
 from __future__ import annotations
 
 import heapq
-import math
 
 import numpy as np
 

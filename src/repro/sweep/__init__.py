@@ -1,0 +1,23 @@
+"""Design-space exploration engine: batched (vmapped) parameter sweeps.
+
+The paper's platform exists to evaluate many hybrid-memory designs
+quickly; this package turns the design axis into a batch axis. Build a
+grid with :class:`SweepSpec`, expand it with :func:`build_points`, and
+:func:`run_sweep` evaluates every point against one trace in a single
+compiled, vmapped ``emulate`` call — optionally sharded across devices.
+"""
+
+from .results import SweepResult
+from .runner import run_sweep, stack_params, sweep_mesh
+from .spec import RUNTIME_FIELDS, DesignPoint, SweepSpec, build_points
+
+__all__ = [
+    "SweepSpec",
+    "DesignPoint",
+    "RUNTIME_FIELDS",
+    "build_points",
+    "stack_params",
+    "run_sweep",
+    "sweep_mesh",
+    "SweepResult",
+]

@@ -1,0 +1,102 @@
+"""Sweep results table: per-design-point summaries of the batched state.
+
+The executor returns one ``EmulatorState`` with a leading point axis;
+this module reduces it to the host-side numbers a design study reads —
+AMAT, fast-tier hit rate, migration count, NVM wear, held-response and
+energy statistics — one row per point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Batched outcome of :func:`repro.sweep.run_sweep`.
+
+    ``states``/``outs`` carry a leading point axis aligned with
+    ``points``; :meth:`rows` reduces them to one summary dict per point.
+    """
+
+    points: list
+    states: object
+    outs: dict
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def rows(self) -> list[dict]:
+        c = self.states.counters
+        reads_fast = np.asarray(c.reads_fast)
+        writes_fast = np.asarray(c.writes_fast)
+        reads_slow = np.asarray(c.reads_slow)
+        writes_slow = np.asarray(c.writes_slow)
+        sum_read_lat = np.asarray(c.sum_read_latency)
+        n_reads = np.asarray(c.n_reads)
+        max_lat = np.asarray(c.max_latency)
+        held = np.asarray(c.reorder_held)
+        energy = np.asarray(c.energy_pj)
+        clock = np.asarray(self.states.clock)
+        swaps = np.asarray(self.states.dma.swaps_done)
+        wear = np.asarray(self.states.wear)
+
+        rows = []
+        for i, pt in enumerate(self.points):
+            fast = int(reads_fast[i]) + int(writes_fast[i])
+            slow = int(reads_slow[i]) + int(writes_slow[i])
+            total = max(1, fast + slow)
+            rows.append(
+                {
+                    "index": pt.index,
+                    "label": pt.label,
+                    **dict(pt.coords),
+                    "amat_cyc": float(sum_read_lat[i]) / max(1, int(n_reads[i])),
+                    "fast_hit_rate": fast / total,
+                    "swaps": int(swaps[i]),
+                    "nvm_peak_wear": int(wear[i].max()),
+                    "nvm_total_writes": int(wear[i].sum()),
+                    "reorder_held": int(held[i]),
+                    "max_latency_cyc": int(max_lat[i]),
+                    "energy_mJ": float(energy[i]) / 1e9,
+                    "emulated_ms": int(clock[i]) / 1e6,
+                }
+            )
+        return rows
+
+    def best(self, key: str = "amat_cyc") -> dict:
+        """The row minimizing ``key`` (AMAT by default)."""
+        return min(self.rows(), key=lambda r: r[key])
+
+    def table(self, keys: tuple[str, ...] | None = None) -> str:
+        """Fixed-width text table of per-point summaries."""
+        rows = self.rows()
+        if keys is None:
+            keys = (
+                "label",
+                "amat_cyc",
+                "fast_hit_rate",
+                "swaps",
+                "nvm_peak_wear",
+                "reorder_held",
+                "energy_mJ",
+                "emulated_ms",
+            )
+
+        def fmt(v):
+            if isinstance(v, float):
+                return f"{v:.3f}"
+            return str(v)
+
+        def width(j, k):
+            return max(len(k), *(len(row[j]) for row in cells))
+
+        cells = [[fmt(r.get(k, "")) for k in keys] for r in rows]
+        widths = [width(j, k) for j, k in enumerate(keys)]
+        header = "  ".join(k.ljust(w) for k, w in zip(keys, widths))
+        lines = [header, "-" * len(header)]
+        for row in cells:
+            lines.append("  ".join(v.rjust(w) for v, w in zip(row, widths)))
+        return "\n".join(lines)

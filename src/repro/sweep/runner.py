@@ -1,0 +1,129 @@
+"""Vmapped sweep executor: many design points, one compiled emulation.
+
+``run_sweep`` stacks each point's ``RuntimeParams`` into a single pytree
+with a leading point axis and vmaps ``emulate`` over it, so N design
+points cost one XLA compilation and one fused device computation — the
+paper's core value proposition (fast design exploration) as a batch axis.
+
+For multi-chip fan-out, pass a mesh (or ``mesh="auto"``): the stacked
+params are placed with a ``NamedSharding`` over the point axis and XLA
+partitions the batch across devices — the same spatial-parallelism story
+as ``emulate_channels``, but over *designs* instead of traces.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.config import RuntimeParams, canonical_config, static_key
+from repro.core.emulator import Trace, emulate, pad_trace
+
+from .results import SweepResult
+from .spec import DesignPoint, SweepSpec, build_points
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "registry"))
+def _emulate_batch(cfg, registry, trace, valid, params):
+    """The sweep engine's single compiled computation: ``emulate`` vmapped
+    over a stacked ``RuntimeParams`` batch (fresh per-point state)."""
+    def one(p):
+        return emulate(cfg, trace, valid, None, p, registry)
+
+    return jax.vmap(one)(params)
+
+
+def compile_count():
+    """Number of compiled sweep computations held by the executor (one per
+    static geometry x policy set x trace shape x point count). None if
+    the runtime doesn't expose jit cache sizes."""
+    try:
+        return _emulate_batch._cache_size()
+    except AttributeError:
+        return None
+
+
+def stack_params(points: list[DesignPoint]) -> RuntimeParams:
+    """Stack per-point RuntimeParams into one pytree with a leading
+    point axis (the vmap axis)."""
+    ps = [p.params for p in points]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def sweep_mesh():
+    """A 1-D device mesh over every local device, for sharded sweeps."""
+    from repro.launch.mesh import make_dev_mesh
+
+    return make_dev_mesh(model=1)
+
+
+def _pad_to_multiple(params: RuntimeParams, n: int, mult: int):
+    pad = (-n) % mult
+    if pad == 0:
+        return params, 0
+    padded = jax.tree.map(
+        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+        params,
+    )
+    return padded, pad
+
+
+def run_sweep(
+    spec: SweepSpec | list[DesignPoint],
+    trace: Trace,
+    *,
+    mesh=None,
+) -> SweepResult:
+    """Evaluate every design point of ``spec`` on ``trace``.
+
+    All points share one ``emulate`` compilation (they must agree on
+    ``config.static_key``; :func:`build_points` enforces this). Each
+    point starts from a fresh per-point initial state — the tier split is
+    a runtime parameter, so the redirection table differs per point.
+
+    ``mesh``: None runs on the default device; ``"auto"`` builds a 1-D
+    mesh over all local devices; an explicit ``jax.sharding.Mesh`` shards
+    the point axis over its first axis. The point count is padded to a
+    multiple of the mesh size (padding replicates the last point and is
+    dropped from the results).
+    """
+    points = spec if isinstance(spec, (list, tuple)) else build_points(spec)
+    points = list(points)
+    if not points:
+        raise ValueError("empty sweep")
+    keys = {static_key(p.cfg) for p in points}
+    if len(keys) > 1:
+        raise ValueError(f"points disagree on static geometry: {keys}")
+    # Key the compilation on static geometry only: sweeps whose bases
+    # differ in runtime fields share one executable.
+    cfg = canonical_config(points[0].cfg)
+
+    # Compile the policy switch only over policies actually present;
+    # remap each point's policy_id into that restricted registry.
+    registry = []
+    for p in points:
+        if p.cfg.policy not in registry:
+            registry.append(p.cfg.policy)
+    registry = tuple(registry)
+    ids = jnp.asarray([registry.index(p.cfg.policy) for p in points], jnp.int32)
+
+    padded, valid = pad_trace(cfg, trace)
+    params = stack_params(points)._replace(policy_id=ids)
+
+    n = len(points)
+    n_padded = 0
+    if mesh == "auto":
+        mesh = sweep_mesh()
+    if mesh is not None:
+        axis = mesh.axis_names[0]
+        params, n_padded = _pad_to_multiple(params, n, mesh.devices.shape[0])
+        sharding = NamedSharding(mesh, PartitionSpec(axis))
+        params = jax.device_put(params, sharding)
+
+    states, outs = _emulate_batch(cfg, registry, padded, valid, params)
+    if n_padded:
+        states, outs = jax.tree.map(lambda x: x[:n], (states, outs))
+    return SweepResult(points=points, states=states, outs=outs)

@@ -1,0 +1,145 @@
+"""Design-space sweep specification (paper Fig 8 / Table III studies).
+
+A sweep is a cartesian grid over *runtime* design axes — NVM technology,
+fast-tier share, placement policy, link latency, plus any
+``RuntimeParams``-backed ``EmulatorConfig`` field — expanded into a list
+of :class:`DesignPoint`. Every point must agree on the static geometry
+(``config.static_key``): that is what lets the executor stack the
+per-point ``RuntimeParams`` and evaluate the whole grid in one compiled,
+vmapped ``emulate`` call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.config import (
+    TECHNOLOGIES,
+    EmulatorConfig,
+    RuntimeParams,
+    static_key,
+)
+
+# EmulatorConfig fields that map 1:1 onto RuntimeParams and are therefore
+# sweepable via ``extra_axes`` without recompilation.
+RUNTIME_FIELDS = frozenset(
+    {
+        "link_lat",
+        "link_bytes_per_cycle",
+        "issue_gap",
+        "dma_bytes_per_cycle",
+        "hot_threshold",
+        "hotness_decay_shift",
+        "decay_every",
+        "write_weight",
+        "power_pj_per_bit_fast",
+        "power_pj_per_bit_slow_read",
+        "power_pj_per_bit_slow_write",
+    }
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One evaluated configuration: its coordinates on the sweep axes and
+    the fully-resolved ``EmulatorConfig``."""
+
+    index: int
+    coords: tuple[tuple[str, object], ...]
+    cfg: EmulatorConfig
+
+    @property
+    def label(self) -> str:
+        return "/".join(f"{k}={v}" for k, v in self.coords)
+
+    @property
+    def params(self) -> RuntimeParams:
+        return RuntimeParams.from_config(self.cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Cartesian sweep recipe over the platform's runtime design axes.
+
+    ``technologies`` names entries of ``TECHNOLOGIES`` for the slow tier;
+    ``fast_fractions`` are fast-tier shares of the (static) total page
+    space; ``policies`` are registered policy names; ``link_lats`` are
+    link round-trip cycle counts. ``extra_axes`` sweeps any field in
+    ``RUNTIME_FIELDS``, e.g. ``(("hot_threshold", (2, 8)),)``. Axes left
+    empty stay at the ``base`` value.
+    """
+
+    base: EmulatorConfig
+    technologies: tuple[str, ...] = ()
+    fast_fractions: tuple[float, ...] = ()
+    policies: tuple[str, ...] = ()
+    link_lats: tuple[int, ...] = ()
+    extra_axes: tuple[tuple[str, tuple], ...] = ()
+
+
+def _with_fast_fraction(cfg: EmulatorConfig, frac: float) -> EmulatorConfig:
+    n = cfg.n_pages
+    nf = min(max(int(round(n * frac)), 1), n - 1)
+    return cfg.with_(n_fast_pages=nf, n_slow_pages=n - nf)
+
+
+def _set_tech(name: str):
+    return lambda c: c.with_(slow=TECHNOLOGIES[name])
+
+
+def _set_fast_fraction(frac: float):
+    return lambda c: _with_fast_fraction(c, frac)
+
+
+def _set_field(field: str, value):
+    return lambda c: c.with_(**{field: value})
+
+
+def _axes(spec: SweepSpec) -> list[tuple[str, list[tuple[object, object]]]]:
+    """Each axis is (name, [(coordinate value, cfg transform), ...])."""
+    axes = []
+    if spec.technologies:
+        axes.append(("tech", [(t, _set_tech(t)) for t in spec.technologies]))
+    if spec.fast_fractions:
+        pairs = [(round(f, 4), _set_fast_fraction(f)) for f in spec.fast_fractions]
+        axes.append(("fast_frac", pairs))
+    if spec.policies:
+        pairs = [(p, _set_field("policy", p)) for p in spec.policies]
+        axes.append(("policy", pairs))
+    if spec.link_lats:
+        pairs = [(v, _set_field("link_lat", v)) for v in spec.link_lats]
+        axes.append(("link_lat", pairs))
+    for field, values in spec.extra_axes:
+        if field not in RUNTIME_FIELDS:
+            msg = (
+                f"{field!r} is not a runtime-sweepable field; choose from "
+                f"{sorted(RUNTIME_FIELDS)} (static geometry changes require "
+                "a separate compilation)"
+            )
+            raise ValueError(msg)
+        axes.append((field, [(v, _set_field(field, v)) for v in values]))
+    return axes
+
+
+def build_points(spec: SweepSpec) -> list[DesignPoint]:
+    """Expand the cartesian grid; validates static-geometry agreement."""
+    axes = _axes(spec)
+    base_key = static_key(spec.base)
+    points = []
+    choices = [axis_vals for _, axis_vals in axes]
+    names = [name for name, _ in axes]
+    for i, combo in enumerate(itertools.product(*choices)):
+        cfg = spec.base
+        coords = []
+        for name, (value, transform) in zip(names, combo):
+            cfg = transform(cfg)
+            coords.append((name, value))
+        if static_key(cfg) != base_key:
+            msg = (
+                f"design point {coords} changed static geometry "
+                f"({static_key(cfg)} != {base_key})"
+            )
+            raise ValueError(msg)
+        points.append(DesignPoint(index=i, coords=tuple(coords), cfg=cfg))
+    return points

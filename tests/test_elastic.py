@@ -32,9 +32,10 @@ print("ELASTIC_OK", loss_elastic, loss_ref)
 def test_elastic_restart_different_mesh():
     import os
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=560, env=env, cwd="/root/repo")
+                       text=True, timeout=560, env=env, cwd=root)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ELASTIC_OK" in r.stdout

@@ -14,6 +14,14 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 from repro.optim import compressed_psum_spec
 
+import inspect
+_kw = {}
+_sig = inspect.signature(shard_map).parameters
+if "check_vma" in _sig:        # jax >= 0.6 renamed check_rep -> check_vma
+    _kw["check_vma"] = False
+elif "check_rep" in _sig:
+    _kw["check_rep"] = False
+
 mesh = jax.make_mesh((2,), ("pod",))
 rng = np.random.default_rng(0)
 grads = {"a": jnp.asarray(rng.standard_normal((2, 512)) * 1e-2, jnp.float32),
@@ -28,7 +36,7 @@ def compressed(g):
 for name, fn in (("exact", exact), ("compressed", compressed)):
     specs = jax.tree.map(lambda _: P("pod"), grads)
     out = shard_map(fn, mesh=mesh, in_specs=(specs,), out_specs=specs,
-                    check_vma=False)(grads)
+                    **_kw)(grads)
     if name == "exact":
         ref = out
     else:
@@ -43,10 +51,11 @@ print("COMPRESS_OK")
 
 def test_compressed_psum_close_to_exact():
     import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=560, env=env, cwd="/root/repo")
+                       text=True, timeout=560, env=env, cwd=root)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "COMPRESS_OK" in r.stdout

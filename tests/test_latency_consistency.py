@@ -3,10 +3,16 @@ the parts whose parallel formulations must exactly equal the sequential
 definitions."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.consistency import in_order_returns
-from repro.core.latency import maxplus_scan, resolve_bank_queues
+pytest.importorskip(
+    "hypothesis",
+    reason="property-test suite needs hypothesis (installed in CI via the "
+           "'test' extra)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.consistency import in_order_returns  # noqa: E402
+from repro.core.latency import maxplus_scan, resolve_bank_queues  # noqa: E402
 
 _settings = settings(max_examples=25, deadline=None)
 

@@ -43,9 +43,10 @@ print("MOE_SM_OK", float(ref), float(got))
 def test_moe_shardmap_matches_dense():
     import os
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=560, env=env, cwd="/root/repo")
+                       text=True, timeout=560, env=env, cwd=root)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "MOE_SM_OK" in r.stdout

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 import repro.configs as C
-from repro.core import Trace, paper_platform, run_trace
+from repro.core import paper_platform, run_trace
 from repro.launch import train as train_mod
 from repro.memtier import ServeEngine
 from repro.memtier.engine import Request
@@ -79,11 +79,12 @@ def test_dryrun_smoke_subprocess():
     XLA_FLAGS before jax init): one arch x shape on the 16x16 mesh."""
     import os
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
     env.pop("XLA_FLAGS", None)
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch",
            "internlm2-1.8b", "--shape", "decode_32k"]
     r = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
-                       env=env, cwd="/root/repo")
+                       env=env, cwd=root)
     assert r.returncode == 0, r.stdout + r.stderr
     assert '"status": "ok"' in r.stdout
