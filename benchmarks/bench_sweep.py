@@ -6,10 +6,21 @@ Reports per-point summaries (AMAT, fast-tier hit rate, migrations, NVM
 wear, held responses, energy) plus the executor's compile count: the
 entire grid shares a single ``emulate`` compilation, which is what makes
 sweeping cheap enough to be the default workflow.
+
+Runnable standalone for the perf trajectory::
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep --quick \
+        --out sweep.csv --out sweep.jsonl --summary-out summary.json
+
+``--out`` persists the per-point rows (format keyed by extension, see
+``repro.sweep.load_rows``); ``--summary-out`` writes the run summary
+(timings, compile count, best point) as JSON.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -43,7 +54,7 @@ def make_spec(base=None) -> SweepSpec:
     )
 
 
-def run(verbose=True, n_requests=100_000, sharded=None):
+def run(verbose=True, n_requests=100_000, sharded=None, out=None):
     spec = make_spec()
     points = build_points(spec)
     trace = generate(
@@ -73,6 +84,10 @@ def run(verbose=True, n_requests=100_000, sharded=None):
 
     rows = res.rows()
     best = res.best()
+    written = []
+    for path in [out] if isinstance(out, str) else (out or []):
+        write = res.to_jsonl if str(path).endswith(".jsonl") else res.to_csv
+        written.append(write(path))
     summary = {
         "n_points": len(points),
         "compiles": compiles,
@@ -82,6 +97,7 @@ def run(verbose=True, n_requests=100_000, sharded=None):
         "best_label": best["label"],
         "best_amat": best["amat_cyc"],
         "rows": rows,
+        "out": written,
     }
     if verbose:
         print(res.table())
@@ -92,4 +108,35 @@ def run(verbose=True, n_requests=100_000, sharded=None):
         )
         print(msg)
         print(f"  best AMAT: {best['label']} ({best['amat_cyc']:.1f} cyc)")
+        for path in written:
+            print(f"  rows written to {path}")
     return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true", help="20k requests instead of 100k")
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=None,
+        help="explicit request count (overrides --quick)",
+    )
+    ap.add_argument(
+        "--out",
+        action="append",
+        default=[],
+        help="persist per-point rows (.jsonl -> JSONL, else CSV); repeatable",
+    )
+    ap.add_argument("--summary-out", default=None, help="write the run summary dict as JSON")
+    args = ap.parse_args()
+    n = args.requests or (20_000 if args.quick else 100_000)
+    summary = run(n_requests=n, out=args.out)
+    if args.summary_out:
+        with open(args.summary_out, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        print(f"  summary written to {args.summary_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,28 +1,73 @@
 """Design-space exploration — what the paper built its platform for:
-sweep (placement policy x NVM technology) and compare outcomes quickly.
+sweep placement policies, NVM technologies and policy knobs, compare
+outcomes quickly, and persist the results for cross-run comparison.
 
-    PYTHONPATH=src python examples/policy_exploration.py
+Both studies below run through ``repro.sweep``: every grid is ONE
+compiled, vmapped emulation (the packed redirection-table rows of all
+design points are gathered by one batched kernel launch per chunk).
+
+    PYTHONPATH=src python examples/policy_exploration.py \
+        [--out policy_heatmap.csv] [--requests 40000]
 """
+import argparse
 import sys
+
 sys.path.insert(0, "src")
 
-from repro.core import TECHNOLOGIES, paper_platform, run_trace  # noqa: E402
-from repro.trace import TraceSpec, generate                      # noqa: E402
+from repro.core import paper_platform                 # noqa: E402
+from repro.sweep import SweepSpec, run_sweep          # noqa: E402
+from repro.trace import TraceSpec, generate           # noqa: E402
 
-trace = generate(TraceSpec(n_requests=40_000, footprint_pages=100_000,
-                           write_frac=0.4, pattern="zipfian",
-                           zipf_alpha=1.05))
 
-print(f"{'policy':12s} {'NVM':10s} {'read lat (cyc)':>14s} "
-      f"{'fast hit %':>10s} {'migrations':>10s} {'energy mJ':>10s}")
-for tech in ("3dxpoint", "stt-ram"):
-    for policy in ("static", "hotness", "write_bias", "stream"):
-        cfg = paper_platform().with_(
-            policy=policy, slow=TECHNOLOGIES[tech], chunk=512,
-            hot_threshold=4, write_weight=4, decay_every=32)
-        state, _, s = run_trace(cfg, trace)
-        fast = s["reads_fast"] + s["writes_fast"]
-        slow = s["reads_slow"] + s["writes_slow"]
-        print(f"{policy:12s} {tech:10s} {s['mean_read_latency_cyc']:14.1f} "
-              f"{fast/(fast+slow)*100:10.1f} {int(state.dma.swaps_done):10d} "
-              f"{s['energy_mJ']:10.2f}")
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="policy_heatmap.csv",
+                    help="CSV path for the hot_threshold x decay_every "
+                         "heatmap rows (repro.sweep.load_rows reads it back)")
+    ap.add_argument("--requests", type=int, default=40_000)
+    args = ap.parse_args()
+
+    trace = generate(TraceSpec(n_requests=args.requests,
+                               footprint_pages=100_000, write_frac=0.4,
+                               pattern="zipfian", zipf_alpha=1.05))
+    base = paper_platform().with_(chunk=512, hot_threshold=4,
+                                  write_weight=4, decay_every=32)
+
+    # --- study 1: policy x NVM technology (paper Fig 8-style comparison)
+    res = run_sweep(SweepSpec(
+        base=base,
+        technologies=("3dxpoint", "stt-ram"),
+        policies=("static", "hotness", "write_bias", "stream"),
+    ), trace)
+    print("policy x technology (one compiled sweep):")
+    print(res.table())
+    print()
+
+    # --- study 2: hotness-policy knob heatmap, persisted to CSV
+    # Zipfian hot pages accumulate hotness fast (writes weighted 4x), so
+    # the interesting threshold range spans orders of magnitude: the top
+    # end effectively disables migration and converges to the static
+    # baseline.
+    thresholds = (2, 32, 512, 8192)
+    decays = (8, 32, 128)
+    res2 = run_sweep(SweepSpec(
+        base=base.with_(policy="hotness"),
+        extra_axes=(("hot_threshold", thresholds),
+                    ("decay_every", decays)),
+    ), trace)
+    rows = {(r["hot_threshold"], r["decay_every"]): r for r in res2.rows()}
+
+    print("AMAT (cycles) heatmap — hot_threshold (rows) x decay_every (cols):")
+    label_w = max(len(f"hot_threshold={th}") for th in thresholds)
+    print(" " * label_w + "".join(f"{d:>10d}" for d in decays))
+    for th in thresholds:
+        cells = "".join(f"{rows[(th, d)]['amat_cyc']:10.1f}" for d in decays)
+        print(f"hot_threshold={th}".ljust(label_w) + cells)
+
+    path = res2.to_csv(args.out)
+    print(f"\nheatmap rows written to {path} "
+          "(load with repro.sweep.load_rows for cross-run comparison)")
+
+
+if __name__ == "__main__":
+    main()

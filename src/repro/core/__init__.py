@@ -11,7 +11,7 @@ from .config import (EmulatorConfig, RuntimeParams, TechnologyParams,
 from .emulator import (Trace, EmulatorState, emulate, emulate_channels,
                        run_trace, pad_trace, init_state)
 from .table import HybridAllocator, init_table, check_table
-from . import policies, counters, dma, latency, consistency
+from . import policies, counters, dma, latency, consistency, table
 
 __all__ = [
     "EmulatorConfig", "RuntimeParams", "TechnologyParams", "TECHNOLOGIES",
@@ -19,5 +19,5 @@ __all__ = [
     "FAST", "SLOW", "Trace", "EmulatorState", "emulate",
     "emulate_channels", "run_trace", "pad_trace", "init_state",
     "HybridAllocator", "init_table", "check_table", "policies", "counters",
-    "dma", "latency", "consistency",
+    "dma", "latency", "consistency", "table",
 ]

@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import table as table_lib
 from .config import EmulatorConfig, RuntimeParams
 
 
@@ -61,15 +62,14 @@ def progress_subblocks(cfg: EmulatorConfig, dma: DMAState, t: jax.Array,
 def redirect(cfg: EmulatorConfig, dma: DMAState,
              page: jax.Array, offset: jax.Array, t: jax.Array,
              device: jax.Array, frame: jax.Array,
-             dev_a: jax.Array, frame_a: jax.Array,
-             dev_b: jax.Array, frame_b: jax.Array,
+             row_a: jax.Array, row_b: jax.Array,
              params: RuntimeParams | None = None
              ) -> tuple[jax.Array, jax.Array]:
     """Apply swap-progress redirection to a chunk of requests.
 
     page/offset/t/device/frame: int32[chunk] — request fields and the
-    *pre-swap* table lookup results. (dev_a, frame_a)/(dev_b, frame_b) are
-    the pre-swap locations of the in-flight swap pair.
+    *pre-swap* table lookup results. ``row_a``/``row_b`` are the packed
+    table rows (pre-swap) of the in-flight swap pair.
 
     Returns (device, frame) actually accessed by each request.
     """
@@ -81,38 +81,40 @@ def redirect(cfg: EmulatorConfig, dma: DMAState,
     hit_b = (dma.active == 1) & (page == dma.page_b)
 
     # Transferred sub-blocks live at the counterpart's (pre-swap) location.
-    device = jnp.where(hit_a & transferred, dev_b, device)
-    frame = jnp.where(hit_a & transferred, frame_b, frame)
-    device = jnp.where(hit_b & transferred, dev_a, device)
-    frame = jnp.where(hit_b & transferred, frame_a, frame)
+    device = jnp.where(hit_a & transferred, table_lib.device(row_b), device)
+    frame = jnp.where(hit_a & transferred, table_lib.frame(row_b), frame)
+    device = jnp.where(hit_b & transferred, table_lib.device(row_a), device)
+    frame = jnp.where(hit_b & transferred, table_lib.frame(row_a), frame)
     return device, frame
 
 
 def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
-                   table_device: jax.Array, table_frame: jax.Array,
-                   params: RuntimeParams | None = None
-                   ) -> tuple["DMAState", jax.Array, jax.Array, jax.Array]:
+                   table: jax.Array, params: RuntimeParams | None = None
+                   ) -> tuple["DMAState", jax.Array, jax.Array]:
     """At a chunk boundary: if the in-flight swap has finished by ``now``,
-    commit it to the redirection table (exchange the two entries).
-    Returns (state, table_device, table_frame, done_flag)."""
+    commit it to the redirection table (exchange the two pages' DEVICE and
+    FRAME lanes, stamp their EPOCH lane with the commit cycle).
+    Returns (state, table, done_flag)."""
     done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg, params))
 
     a, b = dma.page_a, dma.page_b
-    # Gather both entries, swap them where `done`.
-    da, db = table_device[a], table_device[b]
-    fa, fb = table_frame[a], table_frame[b]
-    sa = jnp.where(done, db, da)
-    sb = jnp.where(done, da, db)
-    ga = jnp.where(done, fb, fa)
-    gb = jnp.where(done, fa, fb)
     # `a`/`b` are -1 when idle; mod-index write would corrupt the last page,
-    # so guard indices.
+    # so guard indices (writes at the guard index rewrite its own value).
     ia = jnp.where(a >= 0, a, 0)
     ib = jnp.where(b >= 0, b, 0)
-    table_device = table_device.at[ia].set(jnp.where(a >= 0, sa, table_device[0]))
-    table_device = table_device.at[ib].set(jnp.where(b >= 0, sb, table_device[0]))
-    table_frame = table_frame.at[ia].set(jnp.where(a >= 0, ga, table_frame[0]))
-    table_frame = table_frame.at[ib].set(jnp.where(b >= 0, gb, table_frame[0]))
+    # Gather both rows, swap DEVICE/FRAME where `done`.
+    da, db = table[ia, table_lib.DEVICE], table[ib, table_lib.DEVICE]
+    fa, fb = table[ia, table_lib.FRAME], table[ib, table_lib.FRAME]
+    commit_a = done & (a >= 0)
+    commit_b = done & (b >= 0)
+    table = table.at[ia, table_lib.DEVICE].set(jnp.where(commit_a, db, da))
+    table = table.at[ib, table_lib.DEVICE].set(jnp.where(commit_b, da, db))
+    table = table.at[ia, table_lib.FRAME].set(jnp.where(commit_a, fb, fa))
+    table = table.at[ib, table_lib.FRAME].set(jnp.where(commit_b, fa, fb))
+    table = table.at[ia, table_lib.EPOCH].set(
+        jnp.where(commit_a, now, table[ia, table_lib.EPOCH]))
+    table = table.at[ib, table_lib.EPOCH].set(
+        jnp.where(commit_b, now, table[ib, table_lib.EPOCH]))
 
     new = DMAState(
         active=jnp.where(done, 0, dma.active).astype(jnp.int32),
@@ -121,7 +123,7 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
         start=dma.start,
         swaps_done=dma.swaps_done + done.astype(jnp.int32),
     )
-    return new, table_device, table_frame, done
+    return new, table, done
 
 
 def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,

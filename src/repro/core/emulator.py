@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from . import consistency, counters as counters_lib, dma as dma_lib
 from . import latency, policies as policies_lib, table as table_lib
 from .config import EmulatorConfig, RuntimeParams, FAST, SLOW
+from repro.kernels import ops as kernel_ops
 
 
 class Trace(NamedTuple):
@@ -41,13 +42,14 @@ class Trace(NamedTuple):
 
 
 class EmulatorState(NamedTuple):
-    table_device: jax.Array   # int32[n_pages]
-    table_frame: jax.Array    # int32[n_pages]
-    hotness: jax.Array        # int32[n_pages]
-    wear: jax.Array           # int32[n_slow_pages] — writes per NVM frame
-    #   (endurance tracking, paper Table I row; policies like write_bias
-    #    exist to flatten exactly this histogram)
-    fast_owner: jax.Array     # int32[n_fast_pages] — inverse map frame -> page
+    table: jax.Array          # int32[n_pages, table.ROW_W] — the packed
+    #   per-page metadata store (core.table): redirection mapping
+    #   (DEVICE/FRAME lanes), policy hotness, NVM wear histogram (WEAR
+    #   lane keyed by slow frame — the endurance row of paper Table I;
+    #   policies like write_bias exist to flatten exactly this histogram),
+    #   the CLOCK inverse map (OWNER lane keyed by fast frame), and the
+    #   last-migration EPOCH stamp. Same row format the Pallas lookup
+    #   kernel serves on the hot path.
     clock_ptr: jax.Array      # int32 — CLOCK victim pointer over fast frames
     chunk_idx: jax.Array      # int32 — chunks processed (decay ticks)
     dma: dma_lib.DMAState
@@ -61,17 +63,13 @@ class EmulatorState(NamedTuple):
 
 def init_state(cfg: EmulatorConfig,
                params: RuntimeParams | None = None) -> EmulatorState:
-    """Fresh platform state. ``wear`` and ``fast_owner`` are sized by the
-    static total page count (the fast/slow split is a runtime parameter);
-    entries beyond the active tier are never read."""
+    """Fresh platform state. The table's WEAR and OWNER lanes are sized by
+    the static total page count (the fast/slow split is a runtime
+    parameter); rows beyond the active tier are never read."""
     nf = None if params is None else params.n_fast_pages
-    device, frame = table_lib.init_table(cfg, nf)
     z = jnp.int32(0)
     return EmulatorState(
-        table_device=device, table_frame=frame,
-        hotness=jnp.zeros(cfg.n_pages, jnp.int32),
-        wear=jnp.zeros(cfg.n_pages, jnp.int32),
-        fast_owner=jnp.arange(cfg.n_pages, dtype=jnp.int32),
+        table=table_lib.init_table(cfg, nf),
         clock_ptr=z, chunk_idx=z,
         dma=dma_lib.DMAState.idle(),
         clock=z,
@@ -110,14 +108,18 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     arrive = rx_done + jnp.where(valid, params.link_lat // 2, 0)
 
     # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
-    dev = state.table_device[page]
-    frm = state.table_frame[page]
+    # One packed-row fetch through the lookup engine (Pallas on TPU, jnp
+    # gather elsewhere) replaces per-field gathers — the BRAM read per
+    # cycle of the paper's pipeline. Under a vmapped sweep the kernel
+    # batches over the design-point axis (one launch for all points).
+    rows = kernel_ops.hmmu_lookup(state.table, page)
+    dev = table_lib.device(rows)
+    frm = table_lib.frame(rows)
     a = jnp.maximum(state.dma.page_a, 0)
     b = jnp.maximum(state.dma.page_b, 0)
     dev, frm = dma_lib.redirect(
         cfg, state.dma, page, offset, arrive, dev, frm,
-        state.table_device[a], state.table_frame[a],
-        state.table_device[b], state.table_frame[b], params)
+        state.table[a], state.table[b], params)
 
     # --- stage 3: per-device bank queues + media access.
     bank = dev * cfg.n_banks + frm % cfg.n_banks
@@ -145,13 +147,14 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
                               is_write=is_write, size=size, valid=valid,
                               latency=lat, held=held)
     do_decay = (state.chunk_idx % params.decay_every) == (params.decay_every - 1)
-    hotness = policies_lib.update_hotness(params, state.hotness, page,
-                                          is_write, valid, do_decay)
-    # NVM endurance: count writes per slow frame (DMA migration writes the
-    # whole page once too — charged at swap commit below is negligible vs
-    # demand writes, so we charge demand traffic only).
+    table = policies_lib.update_hotness(params, state.table, page,
+                                        is_write, valid, do_decay)
+    # NVM endurance: count writes per slow frame in the WEAR lane (DMA
+    # migration writes the whole page once too — charged at swap commit
+    # below is negligible vs demand writes, so we charge demand traffic
+    # only).
     slow_wr = is_write & valid & (dev == SLOW)
-    wear = state.wear.at[jnp.where(slow_wr, frm, 0)].add(
+    table = table.at[jnp.where(slow_wr, frm, 0), table_lib.WEAR].add(
         slow_wr.astype(jnp.int32), mode="drop")
 
     any_valid = jnp.any(valid)
@@ -160,15 +163,15 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     now = jnp.maximum(state.clock + params.issue_gap * n, last_ret)
 
     swap_a = jnp.maximum(state.dma.page_a, 0)  # pre-completion swap pair
-    dma, tdev, tfrm = state.dma, state.table_device, state.table_frame
-    dma, tdev, tfrm, done = dma_lib.maybe_complete(cfg, dma, now, tdev, tfrm,
-                                                   params)
-    # Maintain the frame -> page inverse map: the promoted page (swap_a, now
-    # FAST) owns its new frame.
-    own_idx = jnp.where(done & (tdev[swap_a] == FAST), tfrm[swap_a], 0)
-    own_val = jnp.where(done & (tdev[swap_a] == FAST), swap_a,
-                        state.fast_owner[0])
-    fast_owner = state.fast_owner.at[own_idx].set(own_val)
+    dma, table, done = dma_lib.maybe_complete(cfg, state.dma, now, table,
+                                              params)
+    # Maintain the frame -> page inverse map (OWNER lane): the promoted
+    # page (swap_a, now FAST) owns its new frame.
+    row_a = table[swap_a]
+    promoted = done & (table_lib.device(row_a) == FAST)
+    own_idx = jnp.where(promoted, table_lib.frame(row_a), 0)
+    own_val = jnp.where(promoted, swap_a, table[0, table_lib.OWNER])
+    table = table.at[own_idx, table_lib.OWNER].set(own_val)
 
     # Policy dispatch on the *traced* policy id: lax.switch over the
     # (static) registry slice makes the policy itself a batchable design
@@ -177,18 +180,18 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     # for branches they don't use.
     branches = [functools.partial(policies_lib.POLICIES[name], cfg, params)
                 for name in registry]
-    ops = (hotness, tdev, fast_owner, state.clock_ptr, page, is_write, valid)
+    ops = (table, state.clock_ptr, page, is_write, valid)
     if len(branches) == 1:
         want, cand, victim, clock_ptr = branches[0](*ops)
     else:
         want, cand, victim, clock_ptr = jax.lax.switch(
             params.policy_id, branches, *ops)
-    want = want & any_valid & (tdev[cand] == SLOW) & (tdev[victim] == FAST)
+    want = want & any_valid & (table[cand, table_lib.DEVICE] == SLOW) & \
+        (table[victim, table_lib.DEVICE] == FAST)
     dma = dma_lib.maybe_start(dma, want, cand, victim, now)
 
     new_state = EmulatorState(
-        table_device=tdev, table_frame=tfrm, hotness=hotness, wear=wear,
-        fast_owner=fast_owner, clock_ptr=clock_ptr,
+        table=table, clock_ptr=clock_ptr,
         chunk_idx=state.chunk_idx + 1, dma=dma,
         clock=now,
         bank_free=bank_free,

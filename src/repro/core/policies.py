@@ -6,22 +6,27 @@ access stream plus the policy state, and proposing (at most) one page swap
 for the single DMA engine — exactly the three policy aspects the paper
 names: access-pattern recognition, data placement, data migration.
 
+Policy state is the packed redirection table (``core.table``): hotness
+counters ride the HOTNESS lane, the CLOCK inverse map rides the OWNER
+lane, placement is the DEVICE lane — policies read named lanes, never raw
+columns.
+
 Hardware faithfulness note: policies only use O(chunk) work plus O(1)
-state lookups — promotion candidates come from the *current* access stream
+row lookups — promotion candidates come from the *current* access stream
 (what the RTL pipeline sees), and victims come from a CLOCK-style
-round-robin pointer over DRAM frames (``fast_owner`` inverse map), not
+round-robin pointer over DRAM frames (the OWNER lane inverse map), not
 from a global argmin no RTL could compute in a cycle. A global-scan
 variant ("hotness_global") is kept as an idealized reference policy for
 design-space studies.
 
 Policy interface::
 
-    propose(cfg, params, hotness, table_device, fast_owner, ptr,
-            pages, is_write, valid)
+    propose(cfg, params, table, ptr, pages, is_write, valid)
         -> (want: bool[], slow_page: int32[], fast_victim: int32[], new_ptr)
 
 ``cfg`` carries static geometry, ``params`` the traced knobs
-(``hot_threshold``, ``n_fast_pages``, ...). New policies register via
+(``hot_threshold``, ``n_fast_pages``, ...), ``table`` the packed
+``int32[n_pages, ROW_W]`` metadata store. New policies register via
 ``@register("name")``; the emulator dispatches on the traced
 ``params.policy_id`` with ``jax.lax.switch`` over the registration order,
 which makes the policy itself a batchable design axis (sweeps evaluate
@@ -34,6 +39,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from . import table as table_lib
 from .config import FAST, SLOW
 
 POLICIES: dict[str, Callable] = {}
@@ -60,34 +66,38 @@ def policy_id(name: str) -> int:
 
 
 
-def update_hotness(p, hotness: jax.Array, pages: jax.Array,
+def update_hotness(p, table: jax.Array, pages: jax.Array,
                    is_write: jax.Array, valid: jax.Array,
                    do_decay: jax.Array) -> jax.Array:
-    """Scatter-add chunk accesses (writes weighted), then decay-by-shift on
-    ``do_decay`` boundaries (hardware aging counters). ``p`` is an
-    ``EmulatorConfig`` or traced ``RuntimeParams`` (shared field names)."""
+    """Scatter-add chunk accesses (writes weighted) into the HOTNESS lane,
+    then decay-by-shift on ``do_decay`` boundaries (hardware aging
+    counters). ``p`` is an ``EmulatorConfig`` or traced ``RuntimeParams``
+    (shared field names)."""
     w = 1 + (p.write_weight - 1) * is_write.astype(jnp.int32)
     w = jnp.where(valid, w, 0)
-    hotness = hotness.at[pages].add(w, mode="drop")
-    return jax.lax.cond(do_decay,
-                        lambda h: h >> p.hotness_decay_shift,
-                        lambda h: h, hotness)
+    table = table.at[pages, table_lib.HOTNESS].add(w, mode="drop")
+    return jax.lax.cond(
+        do_decay,
+        lambda t: t.at[:, table_lib.HOTNESS].set(
+            t[:, table_lib.HOTNESS] >> p.hotness_decay_shift),
+        lambda t: t, table)
 
 
-def _chunk_candidate(hotness, table_device, pages, valid):
+def _chunk_candidate(table, pages, valid):
     """Hottest slow-resident page among this chunk's accesses."""
-    heat = jnp.where(valid & (table_device[pages] == SLOW), hotness[pages], -1)
+    rows = table[pages]
+    heat = jnp.where(valid & (table_lib.device(rows) == SLOW),
+                     table_lib.hotness(rows), -1)
     j = jnp.argmax(heat)
     return pages[j], heat[j]
 
 
-def _clock_victim(fast_owner, ptr):
-    return fast_owner[ptr]
+def _clock_victim(table, ptr):
+    return table_lib.owner(table)[ptr]
 
 
 @register("static")
-def static_policy(cfg, params, hotness, table_device, fast_owner, ptr,
-                  pages, is_write, valid):
+def static_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Placement fixed at initialization; never migrate (the baseline the
     paper's users compare their designs against)."""
     z = jnp.int32(0)
@@ -95,32 +105,29 @@ def static_policy(cfg, params, hotness, table_device, fast_owner, ptr,
 
 
 @register("hotness")
-def hotness_policy(cfg, params, hotness, table_device, fast_owner, ptr,
-                   pages, is_write, valid):
+def hotness_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Promote the hottest slow page seen in this chunk once it crosses
     ``hot_threshold``; victim = CLOCK pointer over DRAM frames, skipped if
     the victim is hotter than the candidate."""
-    cand, heat = _chunk_candidate(hotness, table_device, pages, valid)
-    victim = _clock_victim(fast_owner, ptr)
-    want = (heat >= params.hot_threshold) & (heat > hotness[victim])
+    cand, heat = _chunk_candidate(table, pages, valid)
+    victim = _clock_victim(table, ptr)
+    want = (heat >= params.hot_threshold) & \
+        (heat > table[victim, table_lib.HOTNESS])
     new_ptr = jnp.where(want, (ptr + 1) % params.n_fast_pages, ptr)
     return want, cand, victim, new_ptr
 
 
 @register("write_bias")
-def write_bias_policy(cfg, params, hotness, table_device, fast_owner, ptr,
-                      pages, is_write, valid):
+def write_bias_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Same promotion rule, but hotness accumulation weights writes by
     ``cfg.write_weight`` (configure > 1): NVM writes are the expensive,
     endurance-limited operation (paper Table I), so write-heavy pages
     should live in DRAM."""
-    return hotness_policy(cfg, params, hotness, table_device, fast_owner,
-                          ptr, pages, is_write, valid)
+    return hotness_policy(cfg, params, table, ptr, pages, is_write, valid)
 
 
 @register("stream")
-def stream_policy(cfg, params, hotness, table_device, fast_owner, ptr,
-                  pages, is_write, valid):
+def stream_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Access-pattern recognition: detect a dominant small stride in the
     chunk's page stream and *pre-promote* the stream's next page before
     demand accesses pay NVM latency (prefetch-style migration). Falls back
@@ -136,11 +143,11 @@ def stream_policy(cfg, params, hotness, table_device, fast_owner, ptr,
     streaming = strength > (pages.shape[0] // 4)
 
     last = pages[jnp.argmax(jnp.where(valid, jnp.arange(pages.shape[0]), -1))]
-    target = jnp.clip(last + stride, 0, table_device.shape[0] - 1)
-    target_is_slow = table_device[target] == SLOW
+    target = jnp.clip(last + stride, 0, table.shape[0] - 1)
+    target_is_slow = table[target, table_lib.DEVICE] == SLOW
 
-    hw, hc, hv, _ = hotness_policy(cfg, params, hotness, table_device,
-                                   fast_owner, ptr, pages, is_write, valid)
+    hw, hc, hv, _ = hotness_policy(cfg, params, table, ptr, pages, is_write,
+                                   valid)
     want_stream = streaming & target_is_slow
     want = want_stream | hw
     cand = jnp.where(want_stream, target, hc)
@@ -150,15 +157,16 @@ def stream_policy(cfg, params, hotness, table_device, fast_owner, ptr,
 
 
 @register("hotness_global")
-def hotness_global_policy(cfg, params, hotness, table_device, fast_owner, ptr,
-                          pages, is_write, valid):
+def hotness_global_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Idealized reference: global hottest-slow / coldest-fast scan each
     chunk. No RTL implements this in a cycle — kept for design-space
     comparison against the realizable policies above."""
-    heat_all = jnp.where(table_device == SLOW, hotness, -1)
+    dev = table_lib.device(table)
+    hot = table_lib.hotness(table)
+    heat_all = jnp.where(dev == SLOW, hot, -1)
     cand = jnp.argmax(heat_all).astype(jnp.int32)
     heat = heat_all[cand]
-    cold = jnp.where(table_device == FAST, hotness, jnp.int32(2 ** 30))
+    cold = jnp.where(dev == FAST, hot, jnp.int32(2 ** 30))
     victim = jnp.argmin(cold).astype(jnp.int32)
-    want = (heat >= params.hot_threshold) & (heat > hotness[victim])
+    want = (heat >= params.hot_threshold) & (heat > hot[victim])
     return want, cand, victim, ptr

@@ -1,8 +1,30 @@
-"""Address-redirection table + allocator middleware.
+"""Packed redirection-table store + allocator middleware.
 
 Heterogeneity transparency (paper §III-B): the OS/application sees one flat
 physical space; the HMMU translates physical page -> (device, frame). The
 mapping *is* the placement policy's state and migrations rewrite it.
+
+All per-page metadata lives in ONE packed ``int32[n_pages, ROW_W]`` array
+whose row layout is shared verbatim with the Pallas lookup engine
+(``repro.kernels.hmmu_lookup``) — on the FPGA this is the BRAM word the
+redirection table serves per cycle. Lanes (columns) of row ``i``:
+
+    ======= ===========================================================
+    lane    meaning
+    ======= ===========================================================
+    DEVICE  tier of page ``i`` (FAST=0 / SLOW=1)
+    FRAME   frame of page ``i`` within its device
+    HOTNESS aging access counter of page ``i`` (policy state)
+    WEAR    writes absorbed by *slow frame* ``i`` (endurance histogram)
+    OWNER   inverse map: page owning *fast frame* ``i`` (CLOCK victims)
+    EPOCH   cycle at which row ``i``'s mapping last changed (0 = never)
+    FLAGS   reserved bitfield (pinning, poisoning, ... — future use)
+    ======= ===========================================================
+
+DEVICE/FRAME/HOTNESS/EPOCH/FLAGS are keyed by page number; WEAR and OWNER
+reuse the same rows keyed by frame number (frames < n_pages always).
+Policies, the DMA engine and the counters read named lanes through the
+accessors below — never raw column indices.
 
 The paper's middleware (mem_driver.ko + modified jemalloc, §III-G) becomes
 ``HybridAllocator``: a host-side page allocator over the flat space that
@@ -12,18 +34,88 @@ stack (repro.memtier) allocates KV-cache pages through this API.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .config import EmulatorConfig, FAST, SLOW
 
+# Row layout. ``ROW_W`` is the row width the lookup kernel gathers; it must
+# match ``repro.kernels.hmmu_lookup.ROW_W`` (asserted by the test suite —
+# the kernel itself is layout-agnostic and reads the width off the array).
+ROW_W = 8
+DEVICE, FRAME, HOTNESS, WEAR, OWNER, EPOCH, FLAGS = range(7)
+_PAD = 7  # spare lane keeping the row a power-of-two width
 
-def init_table(cfg: EmulatorConfig, n_fast_pages=None
-               ) -> tuple[jax.Array, jax.Array]:
-    """Initial placement: first ``n_fast_pages`` of the flat space map to
-    DRAM frames, the rest to NVM frames (paper's BAR window layout maps the
-    two DIMMs contiguously).
+LANES = ("device", "frame", "hotness", "wear", "owner", "epoch", "flags")
+
+
+class TableRows(NamedTuple):
+    """Unpacked view of table rows — one array per named lane."""
+    device: jax.Array
+    frame: jax.Array
+    hotness: jax.Array
+    wear: jax.Array
+    owner: jax.Array
+    epoch: jax.Array
+    flags: jax.Array
+
+
+def device(table: jax.Array) -> jax.Array:
+    """Tier of each page (FAST/SLOW). Works on [..., n, ROW_W] and on
+    single rows [..., ROW_W]."""
+    return table[..., DEVICE]
+
+
+def frame(table: jax.Array) -> jax.Array:
+    return table[..., FRAME]
+
+
+def hotness(table: jax.Array) -> jax.Array:
+    return table[..., HOTNESS]
+
+
+def wear(table: jax.Array) -> jax.Array:
+    return table[..., WEAR]
+
+
+def owner(table: jax.Array) -> jax.Array:
+    return table[..., OWNER]
+
+
+def epoch(table: jax.Array) -> jax.Array:
+    return table[..., EPOCH]
+
+
+def flags(table: jax.Array) -> jax.Array:
+    return table[..., FLAGS]
+
+
+def pack_rows(device, frame, hotness=None, wear=None, owner=None,
+              epoch=None, flags=None) -> jax.Array:
+    """Pack per-lane arrays into a table. Unspecified lanes default to
+    zero (the pad lane always does). Inverse of :func:`unpack`."""
+    device = jnp.asarray(device, jnp.int32)
+    z = jnp.zeros_like(device)
+    lanes = [device, jnp.asarray(frame, jnp.int32)]
+    for lane in (hotness, wear, owner, epoch, flags):
+        lanes.append(z if lane is None else jnp.asarray(lane, jnp.int32))
+    lanes.append(z)  # _PAD
+    return jnp.stack(lanes, axis=-1)
+
+
+def unpack(table: jax.Array) -> TableRows:
+    """Split a packed table into named lanes (drops the pad lane)."""
+    return TableRows(*(table[..., lane] for lane in range(len(LANES))))
+
+
+def init_table(cfg: EmulatorConfig, n_fast_pages=None) -> jax.Array:
+    """Initial packed table: the first ``n_fast_pages`` of the flat space
+    map to DRAM frames, the rest to NVM frames (the paper's BAR window
+    layout maps the two DIMMs contiguously). Fast frame ``f`` starts owned
+    by page ``f``; hotness/wear/epoch/flags start at zero.
 
     ``n_fast_pages`` may be a traced int32 (``RuntimeParams.n_fast_pages``)
     — the total space is static but the tier boundary is a runtime design
@@ -32,28 +124,40 @@ def init_table(cfg: EmulatorConfig, n_fast_pages=None
     n = cfg.n_pages
     nf = cfg.n_fast_pages if n_fast_pages is None else n_fast_pages
     ar = jnp.arange(n)
-    device = jnp.where(ar < nf, FAST, SLOW).astype(jnp.int32)
-    frame = jnp.where(ar < nf, ar, ar - nf).astype(jnp.int32)
-    return device, frame
+    dev = jnp.where(ar < nf, FAST, SLOW).astype(jnp.int32)
+    frm = jnp.where(ar < nf, ar, ar - nf).astype(jnp.int32)
+    return pack_rows(dev, frm, owner=ar.astype(jnp.int32))
 
 
-def check_table(cfg: EmulatorConfig, device: np.ndarray,
-                frame: np.ndarray, n_fast_pages: int | None = None) -> None:
-    """Invariant: the mapping is a bijection onto device frames — every
-    fast frame and slow frame is owned by exactly one page. Raises on
-    violation (used by tests and by the emulator's debug mode)."""
+def check_table(cfg: EmulatorConfig, table: np.ndarray,
+                n_fast_pages: int | None = None) -> None:
+    """Invariants of a packed table:
+
+    * the (device, frame) mapping is a bijection onto device frames —
+      every fast and slow frame is owned by exactly one page;
+    * the OWNER lane is the exact inverse of the fast-tier mapping.
+
+    Raises on violation (used by tests and the emulator's debug mode).
+    """
     nf = cfg.n_fast_pages if n_fast_pages is None else int(n_fast_pages)
     ns = cfg.n_pages - nf
-    device = np.asarray(device)
-    frame = np.asarray(frame)
-    fast_frames = np.sort(frame[device == FAST])
-    slow_frames = np.sort(frame[device == SLOW])
+    table = np.asarray(table)
+    dev = table[..., DEVICE]
+    frm = table[..., FRAME]
+    fast_frames = np.sort(frm[dev == FAST])
+    slow_frames = np.sort(frm[dev == SLOW])
     if fast_frames.size != nf or \
             not np.array_equal(fast_frames, np.arange(nf)):
         raise AssertionError("fast-frame mapping is not a bijection")
     if slow_frames.size != ns or \
             not np.array_equal(slow_frames, np.arange(ns)):
         raise AssertionError("slow-frame mapping is not a bijection")
+    own = table[..., OWNER]
+    for f in range(nf):
+        p = own[f]
+        if not 0 <= p < cfg.n_pages or dev[p] != FAST or frm[p] != f:
+            raise AssertionError(
+                f"OWNER lane stale: fast frame {f} claims page {p}")
 
 
 class HybridAllocator:

@@ -16,6 +16,7 @@ import functools
 import os
 
 import jax
+from jax import custom_batching
 
 from . import ref
 from . import flash_attention as _fa
@@ -90,10 +91,31 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 # HMMU table lookup (emulation platform hot loop)
 # --------------------------------------------------------------------------- #
 
+@custom_batching.custom_vmap
+def _hmmu_lookup_pallas(table: jax.Array, pages: jax.Array) -> jax.Array:
+    return _hl.hmmu_lookup(table, pages, interpret=_interpret())
+
+
+@_hmmu_lookup_pallas.def_vmap
+def _hmmu_lookup_vmap(axis_size, in_batched, table, pages):
+    # vmap (the sweep's design-point axis) becomes the kernel's leading
+    # batch/grid axis: one launch gathers every design point's chunk. The
+    # sweep batches the table (per-point state) but shares the trace, so
+    # broadcast whichever operand isn't batched.
+    table_b, pages_b = in_batched
+    if not table_b:
+        table = jax.numpy.broadcast_to(table, (axis_size, *table.shape))
+    if not pages_b:
+        pages = jax.numpy.broadcast_to(pages, (axis_size, *pages.shape))
+    return _hmmu_lookup_pallas(table, pages), True
+
+
 def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
-    """int32[n_pages, W] x int32[chunk] -> int32[chunk, W]."""
+    """int32[*batch, n_pages, W] x int32[*batch, chunk]
+    -> int32[*batch, chunk, W]. Page indices are clamped to the table
+    extent in both paths (bounds safety)."""
     if use_pallas():
-        return _hl.hmmu_lookup(table, pages, interpret=_interpret())
+        return _hmmu_lookup_pallas(table, pages)
     return ref.hmmu_lookup(table, pages)
 
 

@@ -70,6 +70,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
-    """Redirection-table row gather. table: int32[n_pages, W]; pages:
-    int32[chunk] -> int32[chunk, W]."""
-    return table[pages]
+    """Redirection-table row gather, with the same bounds clamp as the
+    Pallas kernel. table: int32[*batch, n_pages, W]; pages:
+    int32[*batch, chunk] -> int32[*batch, chunk, W]."""
+    n_pages = table.shape[-2]
+    pages = jnp.clip(pages, 0, n_pages - 1)
+    idx = jnp.broadcast_to(pages[..., None], pages.shape + table.shape[-1:])
+    return jnp.take_along_axis(table, idx, axis=-2)

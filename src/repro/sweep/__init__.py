@@ -7,7 +7,7 @@ grid with :class:`SweepSpec`, expand it with :func:`build_points`, and
 compiled, vmapped ``emulate`` call — optionally sharded across devices.
 """
 
-from .results import SweepResult
+from .results import SweepResult, load_rows
 from .runner import run_sweep, stack_params, sweep_mesh
 from .spec import RUNTIME_FIELDS, DesignPoint, SweepSpec, build_points
 
@@ -20,4 +20,5 @@ __all__ = [
     "run_sweep",
     "sweep_mesh",
     "SweepResult",
+    "load_rows",
 ]

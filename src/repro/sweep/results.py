@@ -4,13 +4,23 @@ The executor returns one ``EmulatorState`` with a leading point axis;
 this module reduces it to the host-side numbers a design study reads —
 AMAT, fast-tier hit rate, migration count, NVM wear, held-response and
 energy statistics — one row per point.
+
+Results persist for cross-run comparison: :meth:`SweepResult.to_csv` /
+:meth:`SweepResult.to_jsonl` write one row per design point, and
+:func:`load_rows` reads either format back (keyed by extension), so a
+perf trajectory can be assembled from many CI runs.
 """
 
 from __future__ import annotations
 
+import csv
 import dataclasses
+import json
+import os
 
 import numpy as np
+
+from repro.core import table as table_lib
 
 
 @dataclasses.dataclass
@@ -41,7 +51,7 @@ class SweepResult:
         energy = np.asarray(c.energy_pj)
         clock = np.asarray(self.states.clock)
         swaps = np.asarray(self.states.dma.swaps_done)
-        wear = np.asarray(self.states.wear)
+        wear = np.asarray(table_lib.wear(self.states.table))
 
         rows = []
         for i, pt in enumerate(self.points):
@@ -69,6 +79,25 @@ class SweepResult:
     def best(self, key: str = "amat_cyc") -> dict:
         """The row minimizing ``key`` (AMAT by default)."""
         return min(self.rows(), key=lambda r: r[key])
+
+    def to_csv(self, path: str | os.PathLike) -> str:
+        """Write one CSV line per design point (header from the first
+        row; every point of one sweep shares the same keys). Returns the
+        path written."""
+        rows = self.rows()
+        with open(path, "w", newline="") as fh:
+            writer = csv.DictWriter(fh, fieldnames=list(rows[0]))
+            writer.writeheader()
+            writer.writerows(rows)
+        return str(path)
+
+    def to_jsonl(self, path: str | os.PathLike) -> str:
+        """Write one JSON object per line per design point. Returns the
+        path written."""
+        with open(path, "w") as fh:
+            for row in self.rows():
+                fh.write(json.dumps(row) + "\n")
+        return str(path)
 
     def table(self, keys: tuple[str, ...] | None = None) -> str:
         """Fixed-width text table of per-point summaries."""
@@ -100,3 +129,27 @@ class SweepResult:
         for row in cells:
             lines.append("  ".join(v.rjust(w) for v, w in zip(row, widths)))
         return "\n".join(lines)
+
+
+def _coerce(value: str):
+    """CSV cells back to int/float where they parse (labels stay str)."""
+    for cast in (int, float):
+        try:
+            return cast(value)
+        except ValueError:
+            continue
+    return value
+
+
+def load_rows(path: str | os.PathLike) -> list[dict]:
+    """Read rows persisted by :meth:`SweepResult.to_csv` /
+    :meth:`SweepResult.to_jsonl` (format keyed by extension: ``.jsonl``
+    vs anything else = CSV). JSONL round-trips types exactly; CSV cells
+    are coerced back to int/float where they parse."""
+    p = str(path)
+    if p.endswith(".jsonl"):
+        with open(p) as fh:
+            return [json.loads(line) for line in fh if line.strip()]
+    with open(p, newline="") as fh:
+        return [{k: _coerce(v) for k, v in row.items()}
+                for row in csv.DictReader(fh)]

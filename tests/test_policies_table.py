@@ -12,6 +12,7 @@ except ImportError:
 from conftest import make_trace_arrays
 from repro.core import (HybridAllocator, Trace, check_table, init_table,
                         run_trace, small_platform)
+from repro.core import table as table_lib
 from repro.core.config import FAST, SLOW
 
 
@@ -25,7 +26,7 @@ def test_hot_page_gets_promoted():
               jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
     state, outs, _ = run_trace(cfg, t)
     assert int(state.dma.swaps_done) >= 1
-    assert int(state.table_device[hot_page]) == FAST
+    assert int(table_lib.device(state.table)[hot_page]) == FAST
     # later accesses hit the fast tier
     dev = np.asarray(outs["device"])
     assert dev[-1] == FAST
@@ -39,9 +40,10 @@ def test_static_never_migrates():
               jnp.asarray(sz))
     state, _, _ = run_trace(cfg, t)
     assert int(state.dma.swaps_done) == 0
-    dev0, frm0 = init_table(cfg)
-    np.testing.assert_array_equal(np.asarray(state.table_device),
-                                  np.asarray(dev0))
+    table0 = init_table(cfg)
+    np.testing.assert_array_equal(
+        np.asarray(table_lib.device(state.table)),
+        np.asarray(table_lib.device(table0)))
 
 
 def test_table_bijection_preserved_after_many_swaps():
@@ -54,15 +56,12 @@ def test_table_bijection_preserved_after_many_swaps():
               jnp.asarray(sz))
     state, _, _ = run_trace(cfg, t)
     assert int(state.dma.swaps_done) >= 2
-    check_table(cfg, np.asarray(state.table_device),
-                np.asarray(state.table_frame))
-    # fast_owner inverse map consistent with the table
-    owner = np.asarray(state.fast_owner)
-    dev = np.asarray(state.table_device)
-    frm = np.asarray(state.table_frame)
-    for f in range(cfg.n_fast_pages):
-        p = owner[f]
-        assert dev[p] == FAST and frm[p] == f
+    # check_table also validates the OWNER-lane inverse map
+    check_table(cfg, np.asarray(state.table))
+    # migrated pages carry a nonzero EPOCH stamp (2 per committed swap,
+    # minus any pages that migrated more than once)
+    epoch = np.asarray(table_lib.epoch(state.table))
+    assert (epoch > 0).sum() >= 2
 
 
 def test_stream_policy_prefetches():
@@ -126,7 +125,8 @@ def test_write_bias_flattens_nvm_wear():
     s_static, _, _ = run_trace(base.with_(policy="static"), t)
     s_wb, _, _ = run_trace(base.with_(policy="write_bias", write_weight=4), t)
     assert int(s_wb.dma.swaps_done) > 0
-    assert int(jnp.max(s_wb.wear)) < int(jnp.max(s_static.wear))
+    assert int(jnp.max(table_lib.wear(s_wb.table))) < \
+        int(jnp.max(table_lib.wear(s_static.table)))
 
 
 def test_wear_counts_writes_only():
@@ -138,5 +138,6 @@ def test_wear_counts_writes_only():
               jnp.asarray(np.arange(n) % 2 == 0),       # half writes
               jnp.full(n, 64, jnp.int32))
     state, _, _ = run_trace(cfg, t)
-    assert int(jnp.sum(state.wear)) == n // 2
-    assert int(state.wear[3]) == n // 2                 # frame 3 of NVM
+    wear = table_lib.wear(state.table)
+    assert int(jnp.sum(wear)) == n // 2
+    assert int(wear[3]) == n // 2                       # frame 3 of NVM

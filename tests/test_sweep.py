@@ -9,7 +9,7 @@ import pytest
 from conftest import make_trace_arrays
 from repro.core import Trace, emulate, pad_trace, small_platform
 from repro.sims import trace_sim
-from repro.sweep import SweepSpec, build_points, run_sweep
+from repro.sweep import SweepSpec, build_points, load_rows, run_sweep
 from repro.sweep.runner import compile_count
 
 
@@ -110,6 +110,35 @@ def test_sweep_compilation_shared_across_runtime_bases():
     run_sweep(build_points(SweepSpec(base=base2, link_lats=(600, 100))), t)
     if before is not None:
         assert compile_count() - before == 1
+
+
+def test_sweep_persistence_roundtrip(tmp_path):
+    """to_csv / to_jsonl / load_rows: rows survive a disk round-trip
+    (JSONL exactly; CSV up to numeric re-parsing)."""
+    base = small_platform(chunk=8)
+    spec = SweepSpec(
+        base=base,
+        technologies=("3dxpoint", "stt-ram"),
+        extra_axes=(("hot_threshold", (2, 16)),),
+    )
+    res = run_sweep(build_points(spec), _trace(base, 64))
+    rows = res.rows()
+
+    jpath = tmp_path / "sweep.jsonl"
+    res.to_jsonl(jpath)
+    assert load_rows(jpath) == rows
+
+    cpath = tmp_path / "sweep.csv"
+    res.to_csv(cpath)
+    loaded = load_rows(cpath)
+    assert len(loaded) == len(rows)
+    for got, want in zip(loaded, rows):
+        assert set(got) == set(want)
+        for k, v in want.items():
+            if isinstance(v, float):
+                assert got[k] == pytest.approx(v)
+            else:
+                assert got[k] == v
 
 
 def test_sweep_rejects_static_axes():

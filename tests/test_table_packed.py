@@ -1,0 +1,112 @@
+"""Packed redirection-table layout (repro.core.table): lane accessors,
+pack/unpack round-trip, and init/check invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; CI installs it via the "test" extra
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import small_platform
+from repro.core import table as table_lib
+from repro.core.config import FAST, SLOW
+
+I32 = np.iinfo(np.int32)
+
+
+def test_init_table_layout():
+    cfg = small_platform()
+    table = table_lib.init_table(cfg)
+    assert table.shape == (cfg.n_pages, table_lib.ROW_W)
+    assert table.dtype == jnp.int32
+    dev = np.asarray(table_lib.device(table))
+    frm = np.asarray(table_lib.frame(table))
+    assert (dev[:cfg.n_fast_pages] == FAST).all()
+    assert (dev[cfg.n_fast_pages:] == SLOW).all()
+    np.testing.assert_array_equal(frm[:cfg.n_fast_pages],
+                                  np.arange(cfg.n_fast_pages))
+    np.testing.assert_array_equal(
+        frm[cfg.n_fast_pages:], np.arange(cfg.n_pages - cfg.n_fast_pages))
+    # fresh metadata lanes are zero, OWNER is the identity map
+    assert not np.asarray(table_lib.hotness(table)).any()
+    assert not np.asarray(table_lib.wear(table)).any()
+    assert not np.asarray(table_lib.epoch(table)).any()
+    assert not np.asarray(table_lib.flags(table)).any()
+    np.testing.assert_array_equal(np.asarray(table_lib.owner(table)),
+                                  np.arange(cfg.n_pages))
+    table_lib.check_table(cfg, np.asarray(table))
+
+
+def test_traced_tier_boundary():
+    """init_table with a traced n_fast_pages (the sweep's tier-ratio axis)
+    must match the static boundary bit-for-bit."""
+    cfg = small_platform()
+    static = table_lib.init_table(cfg)
+    traced = table_lib.init_table(cfg, jnp.int32(cfg.n_fast_pages))
+    np.testing.assert_array_equal(np.asarray(static), np.asarray(traced))
+
+
+def _roundtrip(device, frame, hotness, wear, owner, epoch, flags):
+    table = table_lib.pack_rows(device, frame, hotness=hotness, wear=wear,
+                                owner=owner, epoch=epoch, flags=flags)
+    assert table.shape == (len(device), table_lib.ROW_W)
+    assert table.dtype == jnp.int32
+    rows = table_lib.unpack(table)
+    for got, want in zip(rows, (device, frame, hotness, wear, owner,
+                                epoch, flags)):
+        np.testing.assert_array_equal(np.asarray(got), want)
+    # accessor views agree with the unpacked tuple
+    np.testing.assert_array_equal(np.asarray(table_lib.device(table)), device)
+    np.testing.assert_array_equal(np.asarray(table_lib.hotness(table)), hotness)
+    np.testing.assert_array_equal(np.asarray(table_lib.flags(table)), flags)
+
+
+if HAVE_HYPOTHESIS:
+    lane = st.integers(int(I32.min), int(I32.max))
+
+    @given(st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_pack_unpack_roundtrip(data):
+        n = data.draw(st.integers(1, 32))
+        draw_lane = lambda: np.asarray(
+            data.draw(st.lists(lane, min_size=n, max_size=n)), np.int32)
+        _roundtrip(*(draw_lane() for _ in range(7)))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_pack_unpack_roundtrip():
+        pass
+
+
+def test_pack_unpack_roundtrip_fixed():
+    rng = np.random.default_rng(0)
+    lanes = rng.integers(I32.min, I32.max, (7, 16)).astype(np.int32)
+    _roundtrip(*lanes)
+
+
+def test_pack_rows_defaults_zero():
+    table = table_lib.pack_rows([1, 0], [5, 6])
+    rows = table_lib.unpack(table)
+    np.testing.assert_array_equal(np.asarray(rows.device), [1, 0])
+    np.testing.assert_array_equal(np.asarray(rows.frame), [5, 6])
+    for lane in ("hotness", "wear", "owner", "epoch", "flags"):
+        assert not np.asarray(getattr(rows, lane)).any()
+
+
+def test_check_table_catches_stale_owner():
+    cfg = small_platform()
+    table = table_lib.init_table(cfg)
+    table_lib.check_table(cfg, np.asarray(table))
+    bad = table.at[0, table_lib.OWNER].set(cfg.n_fast_pages + 1)  # slow page
+    with pytest.raises(AssertionError, match="OWNER lane stale"):
+        table_lib.check_table(cfg, np.asarray(bad))
+
+
+def test_check_table_catches_broken_bijection():
+    cfg = small_platform()
+    table = table_lib.init_table(cfg)
+    bad = table.at[0, table_lib.FRAME].set(1)  # two pages claim fast frame 1
+    with pytest.raises(AssertionError, match="bijection"):
+        table_lib.check_table(cfg, np.asarray(bad))
