@@ -1,0 +1,161 @@
+"""Chunk-step microbenchmark: the everything-path of the platform.
+
+Every request of every design point of every sweep flows through
+``_chunk_step``; this bench isolates the three perf levers this repo
+tunes on it, on the default paper geometry (n_banks=16, chunk=512):
+
+* ``resolver=dense`` vs ``resolver=segmented`` — O(n_banks*chunk) one-hot
+  bank-queue resolution vs the O(chunk log chunk) sort-based segmented
+  max-plus scan (bitwise identical; see core.latency);
+* ``gather=unfused`` vs ``gather=fused`` — separate dynamic-slice reads
+  of the DMA swap pair's table rows vs appending them to the chunk's
+  lookup-kernel launch (chunk + 2 rows, one gather);
+* ``donate=off`` vs ``donate=on`` — continued emulation with the carried
+  state's buffers copied vs donated (the packed table updates in place).
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_chunk_step --quick \
+        --out BENCH_chunk_step.json [--check-against BENCH_chunk_step.json]
+
+``--check-against`` is the CI soft perf-regression gate: it WARNS (GitHub
+``::warning::`` annotation, exit code stays 0) when the default-path
+time exceeds the committed baseline by more than the tolerance — CI
+runners are noisy, so this is a trend signal, not a hard gate.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.bench_throughput import _bench  # shared warm-then-average
+from benchmarks.schema import bench_payload, load_bench_json, write_bench_json
+from repro.core import emulate, pad_trace, paper_platform
+from repro.trace import TraceSpec, generate
+
+# The default hot path: what plain paper_platform() users get.
+_DEFAULT_CASE = "resolver=auto/gather=fused"
+
+
+def run(verbose=True, n=32_768, reps=5, out=None):
+    base = paper_platform().with_(chunk=512)
+    trace = generate(TraceSpec(n_requests=n, footprint_pages=60_000,
+                               write_frac=0.4, pattern="zipfian",
+                               zipf_alpha=1.05))
+    rows = []
+
+    def case(name, cfg, state=None, donate=False):
+        padded, valid = pad_trace(cfg, trace)
+        if state is None:
+            fn = lambda: jax.block_until_ready(  # noqa: E731
+                emulate(cfg, padded, valid)[0].clock)
+            sec = _bench(fn, reps)
+        else:
+            # Continued emulation: each call consumes the previous call's
+            # state — exactly the serving/incremental-sweep access pattern
+            # donation exists for. Warm with the same donate flag (the
+            # donated entry point is its own compilation).
+            s = emulate(cfg, padded, valid, state, donate=donate)[0]
+            jax.block_until_ready(s.clock)
+            t0 = time.time()
+            for _ in range(reps):
+                s = emulate(cfg, padded, valid, s, donate=donate)[0]
+            jax.block_until_ready(s.clock)
+            sec = (time.time() - t0) / reps
+        rows.append({"case": name, "s_per_call": sec,
+                     "us_per_req": sec / n * 1e6})
+        if verbose:
+            print(f"  {name:38s} {sec * 1e3:9.1f} ms/call "
+                  f"{rows[-1]['us_per_req']:8.3f} us/req")
+        return sec
+
+    sec_pre = case("resolver=dense/gather=unfused (pre-PR path)",
+                   base.with_(bank_resolver="dense", fuse_swap_gather=False))
+    sec_dense = case("resolver=dense/gather=fused",
+                     base.with_(bank_resolver="dense"))
+    sec_seg = case("resolver=segmented/gather=fused",
+                   base.with_(bank_resolver="segmented"))
+    sec_unfused = case("resolver=auto/gather=unfused",
+                       base.with_(fuse_swap_gather=False))
+    sec_default = case(_DEFAULT_CASE, base)
+
+    state0 = emulate(base, *pad_trace(base, trace))[0]
+    sec_nodon = case("continued/donate=off", base, state=state0)
+    state0 = emulate(base, *pad_trace(base, trace))[0]
+    sec_don = case("continued/donate=on", base, state=state0, donate=True)
+
+    metrics = {
+        "n_requests": n,
+        "us_per_req_default": sec_default / n * 1e6,
+        "us_per_req_pre_pr_path": sec_pre / n * 1e6,
+        "us_per_req_dense": sec_dense / n * 1e6,
+        "us_per_req_segmented": sec_seg / n * 1e6,
+        "speedup_vs_pre_pr": sec_pre / sec_default,
+        "speedup_segmented_vs_dense": sec_dense / sec_seg,
+        "speedup_fused_vs_unfused": sec_unfused / sec_default,
+        "speedup_donate": sec_nodon / sec_don,
+    }
+    if verbose:
+        print(f"  vs pre-PR path: {metrics['speedup_vs_pre_pr']:.2f}x, "
+              f"segmented vs dense: {metrics['speedup_segmented_vs_dense']:.2f}x, "
+              f"fused vs unfused: {metrics['speedup_fused_vs_unfused']:.2f}x, "
+              f"donated continuation: {metrics['speedup_donate']:.2f}x")
+    summary = bench_payload(
+        "chunk_step", metrics,
+        config={"chunk": base.chunk, "n_banks": base.n_banks,
+                "n_pages": base.n_pages, "reps": reps},
+        cases=rows)
+    if out:
+        path = write_bench_json(out, summary)
+        if verbose:
+            print(f"  written to {path}")
+    return summary
+
+
+def check_against(summary: dict, baseline_path: str, tolerance: float,
+                  metric: str = "us_per_req_default") -> bool:
+    """Soft perf-regression check vs a committed baseline payload.
+    Returns True when within tolerance; prints a GitHub ``::warning::``
+    annotation (never fails) otherwise — including when the baseline is
+    missing or doesn't carry the metric (older schema)."""
+    try:
+        base = load_bench_json(baseline_path)
+        want = base["metrics"][metric]
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"::warning title=chunk-step perf baseline unusable::"
+              f"{baseline_path}: {e!r} — skipping the soft perf check")
+        return True
+    got = summary["metrics"][metric]
+    if got <= want * tolerance:
+        print(f"  perf check OK: {metric} {got:.3f} vs baseline "
+              f"{want:.3f} (x{tolerance:.2f} tolerance)")
+        return True
+    print(f"::warning title=chunk-step perf regression::{metric} "
+          f"{got:.3f} us/req exceeds committed baseline {want:.3f} "
+          f"us/req by more than x{tolerance:.2f}")
+    return False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="8k requests, 2 reps (CI smoke)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the standardized BENCH_chunk_step.json")
+    ap.add_argument("--check-against", default=None,
+                    help="soft perf-regression check vs a committed "
+                         "BENCH_chunk_step.json (warns, never fails)")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="regression threshold multiplier (default 1.5x)")
+    args = ap.parse_args()
+    n = args.requests or (8_192 if args.quick else 32_768)
+    summary = run(n=n, reps=2 if args.quick else 5, out=args.out)
+    if args.check_against:
+        check_against(summary, args.check_against, args.tolerance)
+
+
+if __name__ == "__main__":
+    main()

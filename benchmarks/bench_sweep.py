@@ -10,21 +10,23 @@ sweeping cheap enough to be the default workflow.
 Runnable standalone for the perf trajectory::
 
     PYTHONPATH=src python -m benchmarks.bench_sweep --quick \
-        --out sweep.csv --out sweep.jsonl --summary-out summary.json
+        --out sweep.csv --out sweep.jsonl --summary-out BENCH_sweep.json
 
 ``--out`` persists the per-point rows (format keyed by extension, see
-``repro.sweep.load_rows``); ``--summary-out`` writes the run summary
-(timings, compile count, best point) as JSON.
+``repro.sweep.load_rows``); ``--summary-out`` writes the standardized
+``BENCH_sweep.json`` payload (benchmarks.schema envelope: timings,
+compile count, best point, per-point rows) — committed at the repo root
+when a PR moves the numbers, regenerated as a CI artifact every run.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
 
+from benchmarks.schema import bench_payload, write_bench_json
 from repro.core import paper_platform
 from repro.sweep import SweepSpec, build_points, run_sweep
 from repro.sweep.runner import compile_count
@@ -133,8 +135,21 @@ def main() -> None:
     n = args.requests or (20_000 if args.quick else 100_000)
     summary = run(n_requests=n, out=args.out)
     if args.summary_out:
-        with open(args.summary_out, "w") as fh:
-            json.dump(summary, fh, indent=2)
+        payload = bench_payload(
+            "sweep",
+            metrics={
+                "n_requests": n,
+                "n_points": summary["n_points"],
+                "compiles": summary["compiles"],
+                "first_call_s": summary["first_call_s"],
+                "steady_s": summary["steady_s"],
+                "us_per_point_req": summary["us_per_point_req"],
+                "best_amat": summary["best_amat"],
+            },
+            cases=summary["rows"],
+            best_label=summary["best_label"],
+        )
+        write_bench_json(args.summary_out, payload)
         print(f"  summary written to {args.summary_out}")
 
 

@@ -14,9 +14,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import (bench_latency_fidelity, bench_policies,
-                            bench_request_volume, bench_speedup,
-                            bench_sweep, bench_throughput)
+    from benchmarks import (bench_chunk_step, bench_latency_fidelity,
+                            bench_policies, bench_request_volume,
+                            bench_speedup, bench_sweep, bench_throughput)
 
     csv = []
 
@@ -56,6 +56,15 @@ def main() -> None:
     csv.append(("design_space_sweep", f"{sw['us_per_point_req']:.3f}",
                 f"points={sw['n_points']};compiles={sw['compiles']};"
                 f"best={sw['best_label']};best_amat={sw['best_amat']:.1f}"))
+
+    print("== Chunk-step hot path (resolver / gather fusion / donation) ==")
+    cs = bench_chunk_step.run(n=8_192 if args.quick else 32_768,
+                              reps=2 if args.quick else 5)
+    m = cs["metrics"]
+    csv.append(("chunk_step", f"{m['us_per_req_default']:.3f}",
+                f"seg_vs_dense={m['speedup_segmented_vs_dense']:.2f}x;"
+                f"fused_vs_unfused={m['speedup_fused_vs_unfused']:.2f}x;"
+                f"donate={m['speedup_donate']:.2f}x"))
 
     print("== Emulator throughput (chunk width / channels) ==")
     thr = bench_throughput.run(n=16_384 if args.quick else 65_536)

@@ -1,0 +1,57 @@
+"""Standardized BENCH_*.json payloads for the perf trajectory.
+
+Every benchmark that persists machine-readable results writes the same
+envelope, so cross-PR tooling (and the CI soft-regression check) can diff
+runs without per-bench parsing:
+
+    {
+      "bench": "<name>",            # e.g. "sweep", "chunk_step"
+      "schema_version": 1,
+      "created_unix": <int>,        # wall-clock of the run
+      "jax": "<version>", "backend": "cpu" | "tpu" | ...,
+      "config": {...},              # knobs the numbers depend on
+      "metrics": {...},             # flat name -> number map (the data)
+      "cases": [...],               # optional per-case rows
+    }
+
+Convention: files live at the repo root as ``BENCH_<name>.json`` and are
+committed when a PR moves a number, giving each benchmark a trajectory in
+git history; CI regenerates them as workflow artifacts on every run.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+SCHEMA_VERSION = 1
+
+
+def bench_payload(name: str, metrics: dict, *, config: dict | None = None,
+                  cases: list | None = None, **extra) -> dict:
+    import jax
+
+    payload = {
+        "bench": name,
+        "schema_version": SCHEMA_VERSION,
+        "created_unix": int(time.time()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "config": config or {},
+        "metrics": metrics,
+    }
+    if cases is not None:
+        payload["cases"] = cases
+    payload.update(extra)
+    return payload
+
+
+def write_bench_json(path, payload: dict) -> str:
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    return str(path)
+
+
+def load_bench_json(path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)

@@ -73,6 +73,17 @@ class EmulatorConfig:
     # --- emulation pipeline -----------------------------------------------------
     chunk: int = 256                # requests per pipeline chunk (policy-commit
     #   granularity; chunk=1 reproduces a fully sequential model exactly)
+    bank_resolver: str = "auto"     # bank-queue resolution algorithm:
+    #   "dense"     — one-hot [2*n_banks, chunk] lane matrix, O(n_banks*chunk)
+    #                 (the original formulation; kept as the oracle)
+    #   "segmented" — stable-sort by bank + segmented max-plus scan,
+    #                 O(chunk log chunk) independent of n_banks
+    #   "auto"      — pick by geometry (latency.pick_bank_resolver)
+    #   Both are bitwise-identical (tests/test_latency_consistency.py).
+    fuse_swap_gather: bool = True   # fetch the DMA swap pair's table rows in
+    #   the same lookup-kernel launch as the chunk's pages (chunk+2 rows)
+    #   instead of two separate dynamic-slice gathers
+    scan_unroll: int = 1            # unroll factor of the chunk lax.scan
 
     # --- policy -------------------------------------------------------------------
     policy: str = "hotness"         # one of core.policies.POLICIES
@@ -115,7 +126,8 @@ def static_key(cfg: EmulatorConfig) -> tuple:
     ratios are a batchable design axis.
     """
     return (cfg.page_size, cfg.subblock, cfg.n_pages, cfg.line_size,
-            cfg.n_banks, cfg.chunk, cfg.max_inflight, cfg.dma_buffer_bytes)
+            cfg.n_banks, cfg.chunk, cfg.max_inflight, cfg.dma_buffer_bytes,
+            cfg.bank_resolver, cfg.fuse_swap_gather, cfg.scan_unroll)
 
 
 def canonical_config(cfg: EmulatorConfig) -> EmulatorConfig:
@@ -130,7 +142,9 @@ def canonical_config(cfg: EmulatorConfig) -> EmulatorConfig:
         page_size=cfg.page_size, subblock=cfg.subblock,
         n_fast_pages=1, n_slow_pages=cfg.n_pages - 1,
         line_size=cfg.line_size, n_banks=cfg.n_banks, chunk=cfg.chunk,
-        max_inflight=cfg.max_inflight, dma_buffer_bytes=cfg.dma_buffer_bytes)
+        max_inflight=cfg.max_inflight, dma_buffer_bytes=cfg.dma_buffer_bytes,
+        bank_resolver=cfg.bank_resolver,
+        fuse_swap_gather=cfg.fuse_swap_gather, scan_unroll=cfg.scan_unroll)
 
 
 class RuntimeParams(NamedTuple):

@@ -112,20 +112,32 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     # gather elsewhere) replaces per-field gathers — the BRAM read per
     # cycle of the paper's pipeline. Under a vmapped sweep the kernel
     # batches over the design-point axis (one launch for all points).
-    rows = kernel_ops.hmmu_lookup(state.table, page)
-    dev = table_lib.device(rows)
-    frm = table_lib.frame(rows)
+    # The fused path appends the DMA swap pair to the chunk's page vector
+    # (chunk + 2 rows, one launch) so the conflict redirect consumes
+    # prefetched rows instead of two extra dynamic-slice gathers.
     a = jnp.maximum(state.dma.page_a, 0)
     b = jnp.maximum(state.dma.page_b, 0)
+    if cfg.fuse_swap_gather:
+        rows, swap_rows = kernel_ops.hmmu_lookup_fused(
+            state.table, page, jnp.stack([a, b]))
+        row_a, row_b = swap_rows[..., 0, :], swap_rows[..., 1, :]
+    else:
+        rows = kernel_ops.hmmu_lookup(state.table, page)
+        row_a, row_b = state.table[a], state.table[b]
+    dev = table_lib.device(rows)
+    frm = table_lib.frame(rows)
     dev, frm = dma_lib.redirect(
         cfg, state.dma, page, offset, arrive, dev, frm,
-        state.table[a], state.table[b], params)
+        row_a, row_b, params)
 
     # --- stage 3: per-device bank queues + media access.
     bank = dev * cfg.n_banks + frm % cfg.n_banks
     med_srv = jnp.where(
         valid, latency.device_service_cycles(params, dev, is_write, size), 0)
-    med_done, bank_free = latency.resolve_bank_queues(
+    resolve = (latency.resolve_bank_queues_segmented
+               if latency.pick_bank_resolver(cfg) == "segmented"
+               else latency.resolve_bank_queues)
+    med_done, bank_free = resolve(
         arrive, med_srv, bank, 2 * cfg.n_banks, state.bank_free)
 
     # --- stage 4: tag-match in-order return (paper §III-C) ...
@@ -206,12 +218,11 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     return new_state, out
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "registry"))
-def _emulate(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
-             valid: jax.Array | None = None,
-             state: EmulatorState | None = None,
-             params: RuntimeParams | None = None
-             ) -> tuple[EmulatorState, dict]:
+def _emulate_impl(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
+                  valid: jax.Array | None = None,
+                  state: EmulatorState | None = None,
+                  params: RuntimeParams | None = None
+                  ) -> tuple[EmulatorState, dict]:
     if params is None:
         params = RuntimeParams.from_config(cfg)
     n = len(trace)
@@ -223,16 +234,25 @@ def _emulate(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
     chunks = jax.tree.map(lambda x: x.reshape(n // cfg.chunk, cfg.chunk),
                           (trace, valid))
     state, outs = jax.lax.scan(
-        functools.partial(_chunk_step, cfg, params, registry), state, chunks)
+        functools.partial(_chunk_step, cfg, params, registry), state, chunks,
+        unroll=cfg.scan_unroll)
     outs = jax.tree.map(lambda x: x.reshape(n), outs)
     return state, outs
+
+
+_emulate = jax.jit(_emulate_impl, static_argnames=("cfg", "registry"))
+# Donating the carried state lets XLA alias its buffers into the outputs:
+# a continued emulation updates the packed table in place instead of
+# copying n_pages * ROW_W ints every call. The caller's state is CONSUMED.
+_emulate_donated = jax.jit(_emulate_impl, static_argnames=("cfg", "registry"),
+                           donate_argnums=(4,))
 
 
 def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
             state: EmulatorState | None = None,
             params: RuntimeParams | None = None,
-            registry: tuple[str, ...] | None = None
-            ) -> tuple[EmulatorState, dict]:
+            registry: tuple[str, ...] | None = None,
+            donate: bool = False) -> tuple[EmulatorState, dict]:
     """Run a trace through the platform. Returns the final state and
     per-request outputs (in-order return time, device accessed, latency).
 
@@ -253,16 +273,27 @@ def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
     time so late ``@register`` calls can never hit a stale compilation.
     Sweeps pass the subset of policies actually present in the batch,
     keeping vmapped non-policy sweeps at single-branch cost.
+
+    ``donate=True`` donates ``state``'s buffers to the computation, so a
+    continued emulation updates the packed table in place instead of
+    copying it. The passed-in state is CONSUMED — reading it afterwards
+    raises; keep ``donate=False`` (the default) if you still need it.
     """
     if registry is None:
         registry = tuple(policies_lib.POLICIES)
-    return _emulate(cfg, registry, trace, valid, state, params)
+    fn = _emulate_donated if donate and state is not None else _emulate
+    return fn(cfg, registry, trace, valid, state, params)
 
 
-def emulate_channels(cfg: EmulatorConfig, traces: Trace):
+def emulate_channels(cfg: EmulatorConfig, traces: Trace,
+                     params: RuntimeParams | None = None,
+                     registry: tuple[str, ...] | None = None):
     """FPGA-style spatial parallelism: emulate many independent trace
-    channels at once (vmapped). ``traces`` has a leading channel axis."""
-    fn = jax.vmap(lambda t: emulate(cfg, t))
+    channels at once (vmapped). ``traces`` has a leading channel axis.
+    ``params``/``registry`` apply to every channel (sweeping runtime
+    parameters and restricting the policy registry work exactly as in
+    :func:`emulate`)."""
+    fn = jax.vmap(lambda t: emulate(cfg, t, None, None, params, registry))
     return fn(traces)
 
 

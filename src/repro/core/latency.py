@@ -46,12 +46,17 @@ _NEG = jnp.int32(-(2**30))
 def resolve_bank_queues(arrival: jax.Array, service: jax.Array,
                         bank: jax.Array, n_banks: int,
                         bank_free: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Per-bank queue resolution for one chunk.
+    """Per-bank queue resolution for one chunk — dense one-hot formulation.
 
     arrival, service, bank: int32[chunk]; bank in [0, n_banks).
     bank_free: int32[n_banks] — next-free time of each bank at chunk start.
 
     Returns (done[chunk], new_bank_free[n_banks]).
+
+    Materializes a [n_banks, chunk] lane matrix and scans every lane, so
+    cost is O(n_banks * chunk). Kept as the oracle formulation;
+    :func:`resolve_bank_queues_segmented` is the O(chunk log chunk)
+    equivalent, selected via ``EmulatorConfig.bank_resolver``.
     """
     onehot = bank[None, :] == jnp.arange(n_banks, dtype=bank.dtype)[:, None]
     # Seed each bank's lane with its chunk-start busy time via a virtual
@@ -67,6 +72,77 @@ def resolve_bank_queues(arrival: jax.Array, service: jax.Array,
     saw = jnp.any(onehot, axis=1)
     new_free = jnp.where(saw, new_free, bank_free)
     return done, new_free
+
+
+def _seg_combine(a, b):
+    """Segmented-cummax combine: (value, segment-start flag) pairs. A set
+    flag on the right element blocks the max from crossing the segment
+    boundary — the standard segmented-scan operator, associative."""
+    av, ar = a
+    bv, br = b
+    return jnp.where(br, bv, jnp.maximum(av, bv)), ar | br
+
+
+def segmented_maxplus_scan(arrival: jax.Array, service: jax.Array,
+                           seg_start: jax.Array) -> jax.Array:
+    """:func:`maxplus_scan` with the recurrence reset wherever
+    ``seg_start`` is True — many independent queues laid out contiguously
+    in one array, resolved by a single scan.
+
+    Same closed form as the unsegmented scan: done_i = max_{j<=i, j in
+    seg(i)}(arr_j - CS_{j-1}) + CS_i. The *global* cumsum CS telescopes
+    correctly because j and i share a segment, so only the running max
+    needs segmentation (an associative_scan carrying a reset flag).
+    Requires ``service >= 0``. Exact on int32.
+    """
+    cs = jnp.cumsum(service, axis=-1)
+    m = arrival - (cs - service)
+    v, _ = jax.lax.associative_scan(_seg_combine, (m, seg_start), axis=-1)
+    return v + cs
+
+
+def resolve_bank_queues_segmented(arrival: jax.Array, service: jax.Array,
+                                  bank: jax.Array, n_banks: int,
+                                  bank_free: jax.Array
+                                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-bank queue resolution — sort-based segmented formulation.
+
+    Bitwise-identical to :func:`resolve_bank_queues` (property-tested) but
+    O(chunk log chunk) independent of ``n_banks``: stable-sort requests by
+    bank so each bank's queue is one contiguous segment, fold the bank's
+    chunk-start busy time into its segment head, run ONE segmented
+    max-plus scan, and scatter results back to request order. New
+    ``bank_free`` values are the segment tails — done times are monotone
+    within a queue (service >= 0), so a scatter-max reads them off while
+    leaving request-free banks untouched.
+    """
+    order = jnp.argsort(bank, stable=True)
+    arr_s = jnp.maximum(arrival, _NEG)[order]
+    srv_s = service[order]
+    bank_s = bank[order]
+    head = jnp.concatenate(
+        [jnp.ones((1,), bool), bank_s[1:] != bank_s[:-1]])
+    # Seeding only the segment head with bank_free is enough: done times
+    # never drop below the seed afterwards (service >= 0), exactly as if
+    # every element were seeded (the dense path's formulation).
+    arr_s = jnp.where(head, jnp.maximum(arr_s, bank_free[bank_s]), arr_s)
+    done_s = segmented_maxplus_scan(arr_s, srv_s, head)
+    done = jnp.zeros_like(done_s).at[order].set(done_s)
+    new_free = bank_free.at[bank_s].max(done_s)
+    return done, new_free
+
+
+def pick_bank_resolver(cfg: EmulatorConfig) -> str:
+    """Resolve ``cfg.bank_resolver`` ("auto" uses geometry: the dense
+    one-hot path wins for a handful of lanes, the segmented sort path wins
+    from ~32 lanes up — measured in benchmarks/bench_chunk_step.py)."""
+    if cfg.bank_resolver != "auto":
+        if cfg.bank_resolver not in ("dense", "segmented"):
+            raise ValueError(
+                f"unknown bank_resolver {cfg.bank_resolver!r}; expected "
+                "'auto', 'dense' or 'segmented'")
+        return cfg.bank_resolver
+    return "segmented" if 2 * cfg.n_banks >= 32 else "dense"
 
 
 def device_service_cycles(p: EmulatorConfig | RuntimeParams, device: jax.Array,

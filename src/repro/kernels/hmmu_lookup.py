@@ -82,3 +82,19 @@ def hmmu_lookup(table: jax.Array, pages: jax.Array, *,
         interpret=interpret,
     )(pg, tb)
     return out.reshape(*batch, chunk, w)
+
+
+def hmmu_lookup_fused(table: jax.Array, pages: jax.Array,
+                      extra: jax.Array, *, interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Gather a chunk's rows AND a few extra rows (the DMA swap pair) in
+    ONE kernel launch: the extra page indices ride at the tail of the
+    scalar-prefetch vector, extending the grid to ``chunk + k`` steps.
+
+    table: int32[*batch, n_pages, W]; pages: int32[*batch, chunk];
+    extra: int32[*batch, k] -> (int32[*batch, chunk, W],
+    int32[*batch, k, W]). Same clamp semantics as :func:`hmmu_lookup`.
+    """
+    from .ref import fused_gather
+    return fused_gather(functools.partial(hmmu_lookup, interpret=interpret),
+                        table, pages, extra)

@@ -119,6 +119,19 @@ def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
     return ref.hmmu_lookup(table, pages)
 
 
+def hmmu_lookup_fused(table: jax.Array, pages: jax.Array,
+                      extra: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused gather of a chunk's rows plus ``k`` extra rows (the emulator
+    passes the DMA swap pair, so stage 2 needs exactly one launch per
+    step). The extra indices are appended to the prefetch vector and the
+    combined gather goes through the SAME batched kernel / custom_vmap
+    rule as :func:`hmmu_lookup` — a vmapped sweep still fuses every
+    design point into one launch. Returns (chunk rows, extra rows)."""
+    if use_pallas():
+        return ref.fused_gather(_hmmu_lookup_pallas, table, pages, extra)
+    return ref.hmmu_lookup_fused(table, pages, extra)
+
+
 # --------------------------------------------------------------------------- #
 # rwkv6 chunked linear attention (SSM-family training hot spot)
 # --------------------------------------------------------------------------- #

@@ -77,3 +77,24 @@ def hmmu_lookup(table: jax.Array, pages: jax.Array) -> jax.Array:
     pages = jnp.clip(pages, 0, n_pages - 1)
     idx = jnp.broadcast_to(pages[..., None], pages.shape + table.shape[-1:])
     return jnp.take_along_axis(table, idx, axis=-2)
+
+
+def fused_gather(lookup, table: jax.Array, pages: jax.Array,
+                 extra: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """THE fused chunk+extra gather: append ``extra`` page indices to the
+    chunk's page vector, run ONE ``lookup(table, pages)`` gather over the
+    combined ``chunk + k`` indices, split the rows back. Shared by the
+    Pallas kernel, the jnp reference and the ops dispatcher so the
+    concat/split semantics (and clamping, done inside ``lookup``) can
+    never diverge between the bit-compared paths."""
+    cat = jnp.concatenate([pages, extra], axis=-1)
+    rows = lookup(table, cat)
+    n = pages.shape[-1]
+    return rows[..., :n, :], rows[..., n:, :]
+
+
+def hmmu_lookup_fused(table: jax.Array, pages: jax.Array, extra: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Fused chunk + extra-rows gather (reference for the fused kernel).
+    Same clamp semantics as :func:`hmmu_lookup`."""
+    return fused_gather(hmmu_lookup, table, pages, extra)

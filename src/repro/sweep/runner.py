@@ -13,8 +13,6 @@ as ``emulate_channels``, but over *designs* instead of traces.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec
@@ -26,22 +24,39 @@ from .results import SweepResult
 from .spec import DesignPoint, SweepSpec, build_points
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "registry"))
-def _emulate_batch(cfg, registry, trace, valid, params):
+def _emulate_batch_impl(cfg, registry, trace, valid, params, states=None):
     """The sweep engine's single compiled computation: ``emulate`` vmapped
-    over a stacked ``RuntimeParams`` batch (fresh per-point state)."""
-    def one(p):
-        return emulate(cfg, trace, valid, None, p, registry)
+    over a stacked ``RuntimeParams`` batch. ``states`` is an optional
+    stacked ``EmulatorState`` with the same leading point axis (e.g. a
+    previous ``SweepResult.states``) — fresh per-point state when None."""
+    if states is None:
+        def one(p):
+            return emulate(cfg, trace, valid, None, p, registry)
 
-    return jax.vmap(one)(params)
+        return jax.vmap(one)(params)
+
+    def one(p, s):
+        return emulate(cfg, trace, valid, s, p, registry)
+
+    return jax.vmap(one)(params, states)
+
+
+_emulate_batch = jax.jit(_emulate_batch_impl, static_argnames=("cfg", "registry"))
+# Donated variant for incremental sweeps: the stacked per-point states
+# (notably every point's packed table) alias into the outputs instead of
+# being copied each call. The caller's states are CONSUMED.
+_emulate_batch_donated = jax.jit(
+    _emulate_batch_impl, static_argnames=("cfg", "registry"), donate_argnums=(5,)
+)
 
 
 def compile_count():
     """Number of compiled sweep computations held by the executor (one per
-    static geometry x policy set x trace shape x point count). None if
-    the runtime doesn't expose jit cache sizes."""
+    static geometry x policy set x trace shape x point count, summed over
+    the plain and donated entry points). None if the runtime doesn't
+    expose jit cache sizes."""
     try:
-        return _emulate_batch._cache_size()
+        return _emulate_batch._cache_size() + _emulate_batch_donated._cache_size()
     except AttributeError:
         return None
 
@@ -76,6 +91,8 @@ def run_sweep(
     trace: Trace,
     *,
     mesh=None,
+    states=None,
+    donate: bool = False,
 ) -> SweepResult:
     """Evaluate every design point of ``spec`` on ``trace``.
 
@@ -89,6 +106,13 @@ def run_sweep(
     the point axis over its first axis. The point count is padded to a
     multiple of the mesh size (padding replicates the last point and is
     dropped from the results).
+
+    ``states``: stacked per-point ``EmulatorState`` (a previous run's
+    ``SweepResult.states``) to continue an incremental sweep from instead
+    of fresh state. With ``donate=True`` the states' buffers (every
+    point's packed table) are donated and updated in place rather than
+    copied — the passed-in states are CONSUMED and must not be reused.
+    ``mesh`` is unsupported with ``states`` (shard/pad them yourself).
     """
     points = spec if isinstance(spec, (list, tuple)) else build_points(spec)
     points = list(points)
@@ -117,13 +141,16 @@ def run_sweep(
     n_padded = 0
     if mesh == "auto":
         mesh = sweep_mesh()
+    if mesh is not None and states is not None:
+        raise ValueError("continued sweeps (states=...) don't support mesh=")
     if mesh is not None:
         axis = mesh.axis_names[0]
         params, n_padded = _pad_to_multiple(params, n, mesh.devices.shape[0])
         sharding = NamedSharding(mesh, PartitionSpec(axis))
         params = jax.device_put(params, sharding)
 
-    states, outs = _emulate_batch(cfg, registry, padded, valid, params)
+    fn = _emulate_batch_donated if donate and states is not None else _emulate_batch
+    states, outs = fn(cfg, registry, padded, valid, params, states)
     if n_padded:
         states, outs = jax.tree.map(lambda x: x[:n], (states, outs))
     return SweepResult(points=points, states=states, outs=outs)

@@ -7,7 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.hmmu_lookup import hmmu_lookup
+from repro.kernels.hmmu_lookup import hmmu_lookup, hmmu_lookup_fused
 
 
 def _rand(rng, shape, dtype):
@@ -139,6 +139,64 @@ def test_hmmu_lookup_clamps_out_of_range_pages():
     got_r = ref.hmmu_lookup(table, pages)
     np.testing.assert_array_equal(np.asarray(got_k), want)
     np.testing.assert_array_equal(np.asarray(got_r), want)
+
+
+@pytest.mark.parametrize("n_pages,chunk,k", [(64, 16, 2), (37, 5, 3)])
+def test_hmmu_lookup_fused_matches_per_field_path(n_pages, chunk, k):
+    """The fused chunk+k gather (one launch) must equal the unfused path:
+    a chunk gather plus separate per-row dynamic-slice reads."""
+    rng = np.random.default_rng(7)
+    table = jnp.asarray(rng.integers(0, 2**20, (n_pages, 8)), jnp.int32)
+    pages = jnp.asarray(rng.integers(0, n_pages, chunk), jnp.int32)
+    extra = jnp.asarray(rng.integers(0, n_pages, k), jnp.int32)
+    rows_k, extra_k = hmmu_lookup_fused(table, pages, extra, interpret=True)
+    rows_r, extra_r = ref.hmmu_lookup_fused(table, pages, extra)
+    # vs the unfused formulation the emulator used before the fusion
+    np.testing.assert_array_equal(
+        np.asarray(rows_k), np.asarray(ref.hmmu_lookup(table, pages)))
+    np.testing.assert_array_equal(
+        np.asarray(extra_k), np.asarray(table)[np.asarray(extra)])
+    np.testing.assert_array_equal(np.asarray(rows_k), np.asarray(rows_r))
+    np.testing.assert_array_equal(np.asarray(extra_k), np.asarray(extra_r))
+
+
+def test_hmmu_lookup_fused_clamps_out_of_range():
+    """Regression (PR 2 clamp behavior): out-of-range pages in either the
+    chunk or the fused extra tail fetch the clamped row in both paths."""
+    rng = np.random.default_rng(8)
+    n_pages = 32
+    table = jnp.asarray(rng.integers(0, 2**20, (n_pages, 8)), jnp.int32)
+    pages = jnp.asarray([-1, 0, 31, 900], jnp.int32)
+    extra = jnp.asarray([-5, 32], jnp.int32)
+    want_rows = np.asarray(table)[np.clip(np.asarray(pages), 0, n_pages - 1)]
+    want_extra = np.asarray(table)[np.clip(np.asarray(extra), 0, n_pages - 1)]
+    for rows, extra_rows in (hmmu_lookup_fused(table, pages, extra,
+                                               interpret=True),
+                             ref.hmmu_lookup_fused(table, pages, extra)):
+        np.testing.assert_array_equal(np.asarray(rows), want_rows)
+        np.testing.assert_array_equal(np.asarray(extra_rows), want_extra)
+
+
+def test_hmmu_lookup_fused_vmap_single_launch(monkeypatch):
+    """ops.hmmu_lookup_fused under vmap (the sweep executor's shape with
+    fused swap-pair prefetch) must batch through the same custom_vmap rule
+    and stay bit-identical: table and extra batched, pages shared."""
+    import jax
+
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    rng = np.random.default_rng(9)
+    b, n_pages, chunk = 3, 48, 9
+    tables = jnp.asarray(rng.integers(0, 2**20, (b, n_pages, 8)), jnp.int32)
+    pages = jnp.asarray(rng.integers(0, n_pages, chunk), jnp.int32)
+    extras = jnp.asarray(rng.integers(0, n_pages, (b, 2)), jnp.int32)
+    rows, extra_rows = jax.vmap(ops.hmmu_lookup_fused,
+                                in_axes=(0, None, 0))(tables, pages, extras)
+    for i in range(b):
+        wr, we = ref.hmmu_lookup_fused(tables[i], pages, extras[i])
+        np.testing.assert_array_equal(np.asarray(rows[i]), np.asarray(wr))
+        np.testing.assert_array_equal(np.asarray(extra_rows[i]),
+                                      np.asarray(we))
 
 
 def test_hmmu_lookup_vmap_dispatches_to_batched_kernel(monkeypatch):

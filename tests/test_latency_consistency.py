@@ -12,7 +12,13 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.consistency import in_order_returns  # noqa: E402
-from repro.core.latency import maxplus_scan, resolve_bank_queues  # noqa: E402
+from repro.core.latency import (  # noqa: E402
+    _NEG,
+    maxplus_scan,
+    resolve_bank_queues,
+    resolve_bank_queues_segmented,
+    segmented_maxplus_scan,
+)
 
 _settings = settings(max_examples=25, deadline=None)
 
@@ -58,6 +64,50 @@ def test_bank_queues_equal_sequential(data):
         exp.append(t)
     np.testing.assert_array_equal(np.asarray(done), np.asarray(exp))
     np.testing.assert_array_equal(np.asarray(new_free), np.asarray(free))
+
+
+@given(st.data())
+@_settings
+def test_segmented_resolver_bitwise_equals_dense(data):
+    """The sort-based segmented resolver must be BITWISE identical to the
+    dense one-hot oracle across random bank maps, chunk sizes and
+    pre-seeded bank_free — including zero-service identity elements and
+    _NEG sentinel arrivals (the emulator's invalid-lane encoding)."""
+    n = data.draw(st.sampled_from([1, 7, 32, 128]))
+    n_banks = data.draw(st.sampled_from([1, 2, 16, 48]))
+    arrival = np.asarray(data.draw(st.lists(
+        st.one_of(st.integers(0, 50_000), st.just(int(_NEG))),
+        min_size=n, max_size=n)), np.int64)
+    service = data.draw(st.lists(st.integers(0, 300), min_size=n, max_size=n))
+    bank = data.draw(st.lists(st.integers(0, n_banks - 1),
+                              min_size=n, max_size=n))
+    free0 = data.draw(st.lists(st.integers(0, 20_000),
+                               min_size=n_banks, max_size=n_banks))
+
+    args = (jnp.asarray(arrival, jnp.int32), jnp.asarray(service, jnp.int32),
+            jnp.asarray(bank, jnp.int32), n_banks,
+            jnp.asarray(free0, jnp.int32))
+    done_d, free_d = resolve_bank_queues(*args)
+    done_s, free_s = resolve_bank_queues_segmented(*args)
+    np.testing.assert_array_equal(np.asarray(done_s), np.asarray(done_d))
+    np.testing.assert_array_equal(np.asarray(free_s), np.asarray(free_d))
+
+
+@given(st.lists(st.tuples(st.integers(0, 10_000), st.integers(0, 500),
+                          st.booleans()), min_size=1, max_size=64))
+@_settings
+def test_segmented_maxplus_scan_equals_sequential(items):
+    """Segment starts reset the recurrence to a fresh queue."""
+    arrival = jnp.asarray([i[0] for i in items], jnp.int32)
+    service = jnp.asarray([i[1] for i in items], jnp.int32)
+    starts = [True] + [i[2] for i in items[1:]]
+    got = np.asarray(segmented_maxplus_scan(
+        arrival, service, jnp.asarray(starts)))
+    exp, t = [], None
+    for (a, s, _), reset in zip(items, starts):
+        t = a + s if reset else max(a, t) + s
+        exp.append(t)
+    np.testing.assert_array_equal(got, np.asarray(exp))
 
 
 @given(st.lists(st.integers(0, 100_000), min_size=1, max_size=64),
