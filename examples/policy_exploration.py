@@ -44,10 +44,11 @@ def main() -> None:
     print()
 
     # --- study 2: hotness-policy knob heatmap, persisted to CSV
-    # Zipfian hot pages accumulate hotness fast (writes weighted 4x), so
-    # the interesting threshold range spans orders of magnitude: the top
-    # end effectively disables migration and converges to the static
-    # baseline.
+    # Zipfian hot pages accumulate hotness fast (write_weight is policy-
+    # scoped and only biases write_bias, so this hotness grid counts all
+    # accesses equally), and the interesting threshold range spans orders
+    # of magnitude: the top end effectively disables migration and
+    # converges to the static baseline.
     thresholds = (2, 32, 512, 8192)
     decays = (8, 32, 128)
     res2 = run_sweep(SweepSpec(

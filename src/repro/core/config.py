@@ -90,7 +90,16 @@ class EmulatorConfig:
     hot_threshold: int = 8          # accesses before a slow page is promoted
     hotness_decay_shift: int = 1    # hotness >>= shift at each decay boundary
     decay_every: int = 16           # decay every N chunks (hardware aging tick)
-    write_weight: int = 1           # extra hotness weight for writes ("write_bias")
+    write_weight: int = 1           # extra hotness weight for writes — applied
+    #   ONLY by the "write_bias" policy (policy-scoped; other policies weight
+    #   reads and writes equally so a policy-axis sweep actually compares)
+    wear_slack: int = 64            # "wear_level" destination tolerance: slow
+    #   frames worn more than (chunk minimum + slack) writes are skipped as
+    #   demotion destinations (one full-page migration = page_size/line_size
+    #   = 64 line-writes with the default geometry)
+    pin_fast_fraction: float = 0.0  # fraction of the fast tier pinned
+    #   (FLAGS |= PIN_FAST) at init — pages the paper's §III-G malloc hints
+    #   nail to DRAM; pinned frames are never CLOCK victims
 
     # --- misc ----------------------------------------------------------------------
     power_pj_per_bit_fast: float = 1.2   # dynamic-power estimate coefficients
@@ -182,6 +191,8 @@ class RuntimeParams(NamedTuple):
     hotness_decay_shift: jax.Array
     decay_every: jax.Array
     write_weight: jax.Array
+    wear_slack: jax.Array          # int32 — wear_level destination tolerance
+    pin_fast_fraction: jax.Array   # float32 — fast-tier share pinned at init
     policy_id: jax.Array
     # power model coefficients
     power_pj_per_bit_fast: jax.Array        # float32
@@ -208,6 +219,8 @@ class RuntimeParams(NamedTuple):
             hotness_decay_shift=i32(cfg.hotness_decay_shift),
             decay_every=i32(cfg.decay_every),
             write_weight=i32(cfg.write_weight),
+            wear_slack=i32(cfg.wear_slack),
+            pin_fast_fraction=f32(cfg.pin_fast_fraction),
             policy_id=i32(policies.policy_id(cfg.policy)),
             power_pj_per_bit_fast=f32(cfg.power_pj_per_bit_fast),
             power_pj_per_bit_slow_read=f32(cfg.power_pj_per_bit_slow_read),

@@ -30,20 +30,29 @@ class Counters(NamedTuple):
     max_latency: jax.Array       # int32
     reorder_held: jax.Array      # int32 — responses delayed by tag matching
     energy_pj: jax.Array         # float32 — dynamic energy estimate
+    poison_faults: jax.Array     # int32 — accesses to POISONED pages
+    #   (retired/worn-out frames, table FLAGS lane): the access completes
+    #   — the emulated hardware has no fault path — but the platform
+    #   surfaces the violation the way the paper's counters surface
+    #   traffic, so endurance studies can assert "nothing touched a
+    #   retired page".
 
     @staticmethod
     def zeros() -> "Counters":
         i = jnp.int32(0)
         f = jnp.float32(0.0)
-        return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f)
+        return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f, i)
 
 
 def update(p, c: Counters, *, device: jax.Array,
            is_write: jax.Array, size: jax.Array, valid: jax.Array,
-           latency: jax.Array, held: jax.Array) -> Counters:
+           latency: jax.Array, held: jax.Array,
+           poisoned: jax.Array | None = None) -> Counters:
     """Accumulate one chunk. All request fields are int32[chunk]. ``p`` is
     an ``EmulatorConfig`` or traced ``RuntimeParams`` (shared power
-    coefficients)."""
+    coefficients). ``poisoned`` is a bool[chunk] mask of requests that
+    touched a POISONED page (already masked by validity); None counts
+    none."""
     v = valid
     w = is_write & v
     r = (~is_write) & v
@@ -76,6 +85,8 @@ def update(p, c: Counters, *, device: jax.Array,
         max_latency=jnp.maximum(c.max_latency, jnp.max(jnp.where(v, latency, 0))),
         reorder_held=c.reorder_held + held,
         energy_pj=c.energy_pj + energy,
+        poison_faults=c.poison_faults +
+        (jnp.int32(0) if poisoned is None else cnt(poisoned)),
     )
 
 
@@ -92,4 +103,5 @@ def summary(c: Counters) -> dict:
         "max_latency_cyc": g(c.max_latency),
         "reorder_held": g(c.reorder_held),
         "energy_mJ": g(c.energy_pj) / 1e9,
+        "poison_faults": g(c.poison_faults),
     }

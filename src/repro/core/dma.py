@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import table as table_lib
-from .config import EmulatorConfig, RuntimeParams
+from .config import SLOW, EmulatorConfig, RuntimeParams
 
 
 class DMAState(NamedTuple):
@@ -93,7 +93,10 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
                    ) -> tuple["DMAState", jax.Array, jax.Array]:
     """At a chunk boundary: if the in-flight swap has finished by ``now``,
     commit it to the redirection table (exchange the two pages' DEVICE and
-    FRAME lanes, stamp their EPOCH lane with the commit cycle).
+    FRAME lanes, stamp their EPOCH lane with the commit cycle, and charge
+    the migration's full-page write to the WEAR lane of whichever slow
+    frame received data — endurance accounting for the swap traffic
+    itself, in line-sized units comparable to demand writes).
     Returns (state, table, done_flag)."""
     done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg, params))
 
@@ -116,6 +119,19 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
     table = table.at[ib, table_lib.EPOCH].set(
         jnp.where(commit_b, now, table[ib, table_lib.EPOCH]))
 
+    # WEAR charge: the DMA wrote one whole page into each destination; only
+    # the slow-tier destination has limited endurance. Post-commit, member
+    # `a` sits on device `db` at frame `fb` (and vice versa) — charge the
+    # member that landed on SLOW, in line-size units (one demand write
+    # wears one line's worth; the migration writes the full page).
+    charge = jnp.int32(cfg.page_size // cfg.line_size)
+    chg_a = commit_a & (db == SLOW)   # a demoted into slow frame fb
+    chg_b = commit_b & (da == SLOW)   # b demoted into slow frame fa
+    table = table.at[jnp.where(chg_a, fb, 0), table_lib.WEAR].add(
+        jnp.where(chg_a, charge, 0))
+    table = table.at[jnp.where(chg_b, fa, 0), table_lib.WEAR].add(
+        jnp.where(chg_b, charge, 0))
+
     new = DMAState(
         active=jnp.where(done, 0, dma.active).astype(jnp.int32),
         page_a=jnp.where(done, -1, dma.page_a).astype(jnp.int32),
@@ -127,8 +143,21 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
 
 
 def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,
-                page_b: jax.Array, now: jax.Array) -> DMAState:
-    """Start a new swap if the engine is idle and the policy wants one."""
+                page_b: jax.Array, now: jax.Array,
+                table: jax.Array | None = None
+                ) -> tuple[DMAState, jax.Array]:
+    """Start a new swap if the engine is idle, the policy wants one, and
+    neither swap member is pinned (when ``table`` is given, its FLAGS lane
+    is the engine's own guard — defense in depth below the emulator's
+    post-policy mask, so user-registered policies cannot migrate pinned
+    pages either). Returns ``(state, started)``; callers thread
+    ``started`` back into the CLOCK pointer commit, so a dropped proposal
+    (engine busy, pinned member, re-masked want) never advances the
+    pointer past an unconsumed victim frame."""
+    if table is not None:
+        pinned = ((table[page_a, table_lib.FLAGS] |
+                   table[page_b, table_lib.FLAGS]) & table_lib.PINNED) != 0
+        want = want & ~pinned
     start_it = (dma.active == 0) & want
     return DMAState(
         active=jnp.where(start_it, 1, dma.active).astype(jnp.int32),
@@ -136,4 +165,4 @@ def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,
         page_b=jnp.where(start_it, page_b, dma.page_b).astype(jnp.int32),
         start=jnp.where(start_it, now, dma.start).astype(jnp.int32),
         swaps_done=dma.swaps_done,
-    )
+    ), start_it

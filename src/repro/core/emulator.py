@@ -65,11 +65,14 @@ def init_state(cfg: EmulatorConfig,
                params: RuntimeParams | None = None) -> EmulatorState:
     """Fresh platform state. The table's WEAR and OWNER lanes are sized by
     the static total page count (the fast/slow split is a runtime
-    parameter); rows beyond the active tier are never read."""
+    parameter); rows beyond the active tier are never read. A nonzero
+    ``pin_fast_fraction`` (config or params) pre-pins that share of the
+    fast tier via the FLAGS lane."""
     nf = None if params is None else params.n_fast_pages
+    pin = None if params is None else params.pin_fast_fraction
     z = jnp.int32(0)
     return EmulatorState(
-        table=table_lib.init_table(cfg, nf),
+        table=table_lib.init_table(cfg, nf, pin),
         clock_ptr=z, chunk_idx=z,
         dma=dma_lib.DMAState.idle(),
         clock=z,
@@ -155,16 +158,29 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     lat = jnp.where(valid, returns - issue, 0)
 
     # --- chunk boundary: counters, hotness, DMA completion, policy commit.
+    # Poison faults: accesses that touched a POISONED page (flags come
+    # from the stage-2 row gather — FLAGS never changes mid-chunk).
+    poisoned = valid & table_lib.is_poisoned(rows)
     ctr = counters_lib.update(params, state.counters, device=dev,
                               is_write=is_write, size=size, valid=valid,
-                              latency=lat, held=held)
+                              latency=lat, held=held, poisoned=poisoned)
     do_decay = (state.chunk_idx % params.decay_every) == (params.decay_every - 1)
+    # Policy-scoped write weighting: only the write_bias policy biases
+    # hotness by write_weight; every other policy (including plain
+    # hotness at the same swept write_weight) counts reads and writes
+    # equally, so the policy axis is a real comparison.
+    if "write_bias" in registry:
+        eff_weight = jnp.where(
+            params.policy_id == registry.index("write_bias"),
+            params.write_weight, jnp.int32(1))
+    else:
+        eff_weight = jnp.int32(1)
     table = policies_lib.update_hotness(params, state.table, page,
-                                        is_write, valid, do_decay)
-    # NVM endurance: count writes per slow frame in the WEAR lane (DMA
-    # migration writes the whole page once too — charged at swap commit
-    # below is negligible vs demand writes, so we charge demand traffic
-    # only).
+                                        is_write, valid, do_decay,
+                                        write_weight=eff_weight)
+    # NVM endurance: count demand writes per slow frame in the WEAR lane
+    # (the DMA migration's full-page write is charged separately at swap
+    # commit in dma.maybe_complete).
     slow_wr = is_write & valid & (dev == SLOW)
     table = table.at[jnp.where(slow_wr, frm, 0), table_lib.WEAR].add(
         slow_wr.astype(jnp.int32), mode="drop")
@@ -194,13 +210,28 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
                 for name in registry]
     ops = (table, state.clock_ptr, page, is_write, valid)
     if len(branches) == 1:
-        want, cand, victim, clock_ptr = branches[0](*ops)
+        p_want, cand, victim, new_ptr = branches[0](*ops)
     else:
-        want, cand, victim, clock_ptr = jax.lax.switch(
+        p_want, cand, victim, new_ptr = jax.lax.switch(
             params.policy_id, branches, *ops)
-    want = want & any_valid & (table[cand, table_lib.DEVICE] == SLOW) & \
-        (table[victim, table_lib.DEVICE] == FAST)
-    dma = dma_lib.maybe_start(dma, want, cand, victim, now)
+    # Post-policy proposal mask: device sanity plus FLAGS enforcement —
+    # a pinned candidate or victim vetoes the swap no matter what the
+    # policy proposed (maybe_start re-checks the same pin bits). One row
+    # gather per swap member serves both checks.
+    cand_row, victim_row = table[cand], table[victim]
+    unpinned = ~(table_lib.is_pinned(cand_row) |
+                 table_lib.is_pinned(victim_row))
+    want = p_want & any_valid & unpinned & \
+        (table_lib.device(cand_row) == SLOW) & \
+        (table_lib.device(victim_row) == FAST)
+    dma, started = dma_lib.maybe_start(dma, want, cand, victim, now, table)
+    # CLOCK pointer commit (two cases, see policies.py): a proposal only
+    # consumes its victim frame when the swap actually started — a
+    # rejected/dropped proposal (engine busy, re-masked want) leaves the
+    # pointer unchanged instead of silently skipping victims. With no
+    # proposal at all, the policy's pointer motion commits as-is: that is
+    # how a pinned frame (never a victim) is stepped over for free.
+    clock_ptr = jnp.where(started | ~p_want, new_ptr, state.clock_ptr)
 
     new_state = EmulatorState(
         table=table, clock_ptr=clock_ptr,
@@ -281,7 +312,12 @@ def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
     """
     if registry is None:
         registry = tuple(policies_lib.POLICIES)
-    fn = _emulate_donated if donate and state is not None else _emulate
+    if donate and state is None:
+        raise ValueError(
+            "donate=True requires state=...: donation aliases the carried "
+            "state's buffers into the outputs, and a fresh-state run has "
+            "nothing to donate (it would silently run undonated)")
+    fn = _emulate_donated if donate else _emulate
     return fn(cfg, registry, trace, valid, state, params)
 
 

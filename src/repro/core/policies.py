@@ -31,6 +31,19 @@ Policy interface::
 ``params.policy_id`` with ``jax.lax.switch`` over the registration order,
 which makes the policy itself a batchable design axis (sweeps evaluate
 several policies in one compiled computation).
+
+``new_ptr`` is the CLOCK pointer the policy wants, under a two-case
+commit contract enforced by the emulator:
+
+* ``want`` proposals only commit ``new_ptr`` when the swap actually
+  *starts* (the emulator re-masks ``want`` — validity, device sanity,
+  pin bits — and the single DMA engine may be busy): a rejected or
+  dropped proposal leaves the pointer where it was, so no usable victim
+  frame is silently consumed;
+* with ``want`` False, ``new_ptr`` commits unconditionally — that is the
+  channel for skipping a *pinned* CLOCK frame (a pinned frame is not in
+  the victim rotation at all, so stepping past it consumes nothing; a
+  policy that never skips just returns ``ptr``).
 """
 from __future__ import annotations
 
@@ -68,12 +81,20 @@ def policy_id(name: str) -> int:
 
 def update_hotness(p, table: jax.Array, pages: jax.Array,
                    is_write: jax.Array, valid: jax.Array,
-                   do_decay: jax.Array) -> jax.Array:
-    """Scatter-add chunk accesses (writes weighted) into the HOTNESS lane,
-    then decay-by-shift on ``do_decay`` boundaries (hardware aging
-    counters). ``p`` is an ``EmulatorConfig`` or traced ``RuntimeParams``
-    (shared field names)."""
-    w = 1 + (p.write_weight - 1) * is_write.astype(jnp.int32)
+                   do_decay: jax.Array,
+                   write_weight: jax.Array | int | None = None) -> jax.Array:
+    """Scatter-add chunk accesses into the HOTNESS lane, then
+    decay-by-shift on ``do_decay`` boundaries (hardware aging counters).
+    ``p`` is an ``EmulatorConfig`` or traced ``RuntimeParams`` (shared
+    field names).
+
+    ``write_weight`` overrides ``p.write_weight`` — the emulator passes
+    the *policy-scoped* effective weight (``p.write_weight`` only when the
+    active policy is ``write_bias``, else 1), so the weighting is part of
+    the write_bias policy rather than a global knob that silently changes
+    every other policy's hotness accounting."""
+    ww = p.write_weight if write_weight is None else write_weight
+    w = 1 + (ww - 1) * is_write.astype(jnp.int32)
     w = jnp.where(valid, w, 0)
     table = table.at[pages, table_lib.HOTNESS].add(w, mode="drop")
     return jax.lax.cond(
@@ -83,17 +104,50 @@ def update_hotness(p, table: jax.Array, pages: jax.Array,
         lambda t: t, table)
 
 
-def _chunk_candidate(table, pages, valid):
-    """Hottest slow-resident page among this chunk's accesses."""
+def _chunk_candidate(table, pages, valid, extra_mask=None):
+    """Hottest slow-resident page among this chunk's accesses. Pinned
+    pages (PIN_SLOW — nailed to NVM) are never candidates; the emulator
+    would veto them anyway, and a vetoed hottest page would livelock the
+    proposal stream. ``extra_mask`` further restricts eligibility
+    (wear_level's destination freshness)."""
     rows = table[pages]
-    heat = jnp.where(valid & (table_lib.device(rows) == SLOW),
-                     table_lib.hotness(rows), -1)
+    ok = valid & (table_lib.device(rows) == SLOW) & ~table_lib.is_pinned(rows)
+    if extra_mask is not None:
+        ok = ok & extra_mask
+    heat = jnp.where(ok, table_lib.hotness(rows), -1)
     j = jnp.argmax(heat)
     return pages[j], heat[j]
 
 
-def _clock_victim(table, ptr):
-    return table_lib.owner(table)[ptr]
+# CLOCK pin-skip lookahead: how many frames from the pointer a policy
+# examines per chunk to find an unpinned victim (an 8-wide pin-bit
+# priority encoder in RTL terms). Pinned frames are not in the victim
+# rotation; without lookahead a long pinned run (pin_fast_fraction pins
+# a contiguous prefix) would stall migration one chunk per frame.
+_CLOCK_WINDOW = 8
+
+
+def _clock_victim(table, ptr, nf):
+    """First unpinned CLOCK victim within ``_CLOCK_WINDOW`` frames of the
+    pointer. Returns ``(victim_page, found, skip)`` where ``skip`` is the
+    number of pinned frames stepped over to reach it (== the window width
+    when every probed frame is pinned and ``found`` is False).
+
+    Policies fold it into the pointer-commit contract as
+    ``new_ptr = (ptr + skip + want) % nf``: the pinned run is consumed
+    unconditionally (``want=False`` commits unconditionally, and a
+    started swap consumes it along with the victim), while the victim
+    itself is only consumed by a started swap. With no pins ``skip`` is 0
+    and the arithmetic reduces exactly to the classic ``ptr + want``."""
+    offs = jnp.arange(_CLOCK_WINDOW, dtype=jnp.int32)
+    frames = (ptr + offs) % nf
+    owners = table_lib.owner(table)[frames]
+    pinned = table_lib.is_pinned(table[owners])
+    first = jnp.argmin(pinned).astype(jnp.int32)   # first False, else 0
+    found = ~pinned[first]
+    victim = owners[first]
+    skip = jnp.where(found, first, jnp.int32(_CLOCK_WINDOW))
+    return victim, found, skip
 
 
 @register("static")
@@ -108,21 +162,25 @@ def static_policy(cfg, params, table, ptr, pages, is_write, valid):
 def hotness_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Promote the hottest slow page seen in this chunk once it crosses
     ``hot_threshold``; victim = CLOCK pointer over DRAM frames, skipped if
-    the victim is hotter than the candidate."""
+    the victim is hotter than the candidate. Pinned frames at the pointer
+    are stepped over without a proposal (they are not victims)."""
     cand, heat = _chunk_candidate(table, pages, valid)
-    victim = _clock_victim(table, ptr)
-    want = (heat >= params.hot_threshold) & \
+    victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)
+    want = vfound & (heat >= params.hot_threshold) & \
         (heat > table[victim, table_lib.HOTNESS])
-    new_ptr = jnp.where(want, (ptr + 1) % params.n_fast_pages, ptr)
+    new_ptr = (ptr + skip + want.astype(jnp.int32)) % params.n_fast_pages
     return want, cand, victim, new_ptr
 
 
 @register("write_bias")
 def write_bias_policy(cfg, params, table, ptr, pages, is_write, valid):
-    """Same promotion rule, but hotness accumulation weights writes by
-    ``cfg.write_weight`` (configure > 1): NVM writes are the expensive,
-    endurance-limited operation (paper Table I), so write-heavy pages
-    should live in DRAM."""
+    """Same promotion rule as ``hotness``, but hotness accumulation
+    weights writes by ``params.write_weight`` (configure > 1) — and ONLY
+    this policy applies the weight (the emulator scopes it by the traced
+    ``policy_id``, so a policy-axis sweep of hotness vs write_bias at
+    equal ``write_weight`` actually diverges). NVM writes are the
+    expensive, endurance-limited operation (paper Table I), so
+    write-heavy pages should live in DRAM."""
     return hotness_policy(cfg, params, table, ptr, pages, is_write, valid)
 
 
@@ -144,15 +202,17 @@ def stream_policy(cfg, params, table, ptr, pages, is_write, valid):
 
     last = pages[jnp.argmax(jnp.where(valid, jnp.arange(pages.shape[0]), -1))]
     target = jnp.clip(last + stride, 0, table.shape[0] - 1)
-    target_is_slow = table[target, table_lib.DEVICE] == SLOW
+    target_row = table[target]
+    target_is_slow = (table_lib.device(target_row) == SLOW) & \
+        ~table_lib.is_pinned(target_row)
 
-    hw, hc, hv, _ = hotness_policy(cfg, params, table, ptr, pages, is_write,
-                                   valid)
-    want_stream = streaming & target_is_slow
+    hw, hc, _, _ = hotness_policy(cfg, params, table, ptr, pages, is_write,
+                                  valid)
+    victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)
+    want_stream = streaming & target_is_slow & vfound
     want = want_stream | hw
     cand = jnp.where(want_stream, target, hc)
-    victim = hv
-    new_ptr = jnp.where(want, (ptr + 1) % params.n_fast_pages, ptr)
+    new_ptr = (ptr + skip + want.astype(jnp.int32)) % params.n_fast_pages
     return want, cand, victim, new_ptr
 
 
@@ -163,10 +223,40 @@ def hotness_global_policy(cfg, params, table, ptr, pages, is_write, valid):
     comparison against the realizable policies above."""
     dev = table_lib.device(table)
     hot = table_lib.hotness(table)
-    heat_all = jnp.where(dev == SLOW, hot, -1)
+    pinned = table_lib.is_pinned(table)
+    heat_all = jnp.where((dev == SLOW) & ~pinned, hot, -1)
     cand = jnp.argmax(heat_all).astype(jnp.int32)
     heat = heat_all[cand]
-    cold = jnp.where(dev == FAST, hot, jnp.int32(2 ** 30))
+    cold = jnp.where((dev == FAST) & ~pinned, hot, jnp.int32(2 ** 30))
     victim = jnp.argmin(cold).astype(jnp.int32)
     want = (heat >= params.hot_threshold) & (heat > hot[victim])
     return want, cand, victim, ptr
+
+
+@register("wear_level")
+def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid):
+    """Endurance-aware promotion (paper Table I's write-endurance
+    asymmetry as a first-class policy axis): same hottest-page promotion
+    rule as ``hotness``, but the demotion *destination* is chosen
+    wear-aware. A swap demotes the CLOCK victim into the candidate's slow
+    frame, and that frame absorbs the full-page migration write plus the
+    victim's future demand writes — so candidates whose frame has already
+    absorbed more than ``params.wear_slack`` writes beyond the least-worn
+    frame seen in this chunk are skipped, steering migration traffic
+    toward fresh frames and flattening the WEAR histogram (max-lifetime
+    leveling) at near-equal hit rate."""
+    rows = table[pages]
+    slow = valid & (table_lib.device(rows) == SLOW)
+    frm = table_lib.frame(rows)
+    # WEAR is keyed by slow frame: one O(chunk) gather of the candidates'
+    # frame rows (the page rows above are the stage-2-style gather every
+    # chunk-local policy already pays).
+    frame_wear = table[jnp.where(slow, frm, 0), table_lib.WEAR]
+    wmin = jnp.min(jnp.where(slow, frame_wear, jnp.int32(2 ** 30)))
+    fresh = frame_wear <= wmin + params.wear_slack
+    cand, cheat = _chunk_candidate(table, pages, valid, extra_mask=fresh)
+    victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)
+    want = vfound & (cheat >= params.hot_threshold) & \
+        (cheat > table[victim, table_lib.HOTNESS])
+    new_ptr = (ptr + skip + want.astype(jnp.int32)) % params.n_fast_pages
+    return want, cand, victim, new_ptr

@@ -18,8 +18,21 @@ redirection table serves per cycle. Lanes (columns) of row ``i``:
     WEAR    writes absorbed by *slow frame* ``i`` (endurance histogram)
     OWNER   inverse map: page owning *fast frame* ``i`` (CLOCK victims)
     EPOCH   cycle at which row ``i``'s mapping last changed (0 = never)
-    FLAGS   reserved bitfield (pinning, poisoning, ... — future use)
+    FLAGS   protection bitfield: PIN_FAST / PIN_SLOW / POISONED
     ======= ===========================================================
+
+FLAGS bits (the paper's §III-G placement hints, hardened into the table):
+
+    ``PIN_FAST``  page is nailed to the fast tier — never a migration
+                  candidate nor a CLOCK victim (hinted DRAM allocations);
+    ``PIN_SLOW``  page is nailed to the slow tier — never promoted
+                  (bulk/streaming allocations the hint keeps out of DRAM);
+    ``POISONED``  page is retired (e.g. a worn-out NVM frame) — accesses
+                  still complete but raise the ``poison_faults`` counter.
+
+Pin bits are enforced twice on the hot path (the emulator's post-policy
+proposal mask AND ``dma.maybe_start``), so no policy — including
+user-registered ones — can migrate a pinned page.
 
 DEVICE/FRAME/HOTNESS/EPOCH/FLAGS are keyed by page number; WEAR and OWNER
 reuse the same rows keyed by frame number (frames < n_pages always).
@@ -50,6 +63,15 @@ DEVICE, FRAME, HOTNESS, WEAR, OWNER, EPOCH, FLAGS = range(7)
 _PAD = 7  # spare lane keeping the row a power-of-two width
 
 LANES = ("device", "frame", "hotness", "wear", "owner", "epoch", "flags")
+
+# FLAGS-lane bits. PINNED is the "cannot migrate" test mask: either pin
+# bit freezes the page's mapping (they differ only in which tier the page
+# is nailed to, validated by check_table).
+PIN_FAST = 1 << 0
+PIN_SLOW = 1 << 1
+POISONED = 1 << 2
+PINNED = PIN_FAST | PIN_SLOW
+KNOWN_FLAGS = PIN_FAST | PIN_SLOW | POISONED
 
 
 class TableRows(NamedTuple):
@@ -93,6 +115,31 @@ def flags(table: jax.Array) -> jax.Array:
     return table[..., FLAGS]
 
 
+def is_pinned(table: jax.Array) -> jax.Array:
+    """True where either pin bit is set. Works on full tables and on
+    gathered rows ([..., ROW_W])."""
+    return (table[..., FLAGS] & PINNED) != 0
+
+
+def is_poisoned(table: jax.Array) -> jax.Array:
+    return (table[..., FLAGS] & POISONED) != 0
+
+
+def set_flags(table: jax.Array, pages, bits: int) -> jax.Array:
+    """OR ``bits`` into the FLAGS lane of ``pages`` (scenario/middleware
+    side — the hot path never writes FLAGS)."""
+    pages = jnp.asarray(pages, jnp.int32)
+    cur = table[pages, FLAGS]
+    return table.at[pages, FLAGS].set(cur | jnp.int32(bits))
+
+
+def clear_flags(table: jax.Array, pages, bits: int = KNOWN_FLAGS) -> jax.Array:
+    """Clear ``bits`` (default: all known bits) on ``pages``."""
+    pages = jnp.asarray(pages, jnp.int32)
+    cur = table[pages, FLAGS]
+    return table.at[pages, FLAGS].set(cur & ~jnp.int32(bits))
+
+
 def pack_rows(device, frame, hotness=None, wear=None, owner=None,
               epoch=None, flags=None) -> jax.Array:
     """Pack per-lane arrays into a table. Unspecified lanes default to
@@ -111,22 +158,31 @@ def unpack(table: jax.Array) -> TableRows:
     return TableRows(*(table[..., lane] for lane in range(len(LANES))))
 
 
-def init_table(cfg: EmulatorConfig, n_fast_pages=None) -> jax.Array:
+def init_table(cfg: EmulatorConfig, n_fast_pages=None,
+               pin_fast_fraction=None) -> jax.Array:
     """Initial packed table: the first ``n_fast_pages`` of the flat space
     map to DRAM frames, the rest to NVM frames (the paper's BAR window
     layout maps the two DIMMs contiguously). Fast frame ``f`` starts owned
-    by page ``f``; hotness/wear/epoch/flags start at zero.
+    by page ``f``; hotness/wear/epoch start at zero.
 
     ``n_fast_pages`` may be a traced int32 (``RuntimeParams.n_fast_pages``)
     — the total space is static but the tier boundary is a runtime design
-    axis. Defaults to ``cfg.n_fast_pages``.
+    axis. Defaults to ``cfg.n_fast_pages``. ``pin_fast_fraction`` (also
+    traceable — ``RuntimeParams.pin_fast_fraction``) pins that share of
+    the fast tier with ``PIN_FAST``, modelling §III-G-hinted allocations
+    that must stay in DRAM; 0.0 leaves the FLAGS lane all-zero.
     """
     n = cfg.n_pages
     nf = cfg.n_fast_pages if n_fast_pages is None else n_fast_pages
+    frac = (cfg.pin_fast_fraction if pin_fast_fraction is None
+            else pin_fast_fraction)
     ar = jnp.arange(n)
     dev = jnp.where(ar < nf, FAST, SLOW).astype(jnp.int32)
     frm = jnp.where(ar < nf, ar, ar - nf).astype(jnp.int32)
-    return pack_rows(dev, frm, owner=ar.astype(jnp.int32))
+    n_pin = jnp.floor(jnp.float32(frac) *
+                      jnp.asarray(nf, jnp.float32)).astype(jnp.int32)
+    flg = jnp.where(ar < n_pin, PIN_FAST, 0).astype(jnp.int32)
+    return pack_rows(dev, frm, owner=ar.astype(jnp.int32), flags=flg)
 
 
 def check_table(cfg: EmulatorConfig, table: np.ndarray,
@@ -135,7 +191,10 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
 
     * the (device, frame) mapping is a bijection onto device frames —
       every fast and slow frame is owned by exactly one page;
-    * the OWNER lane is the exact inverse of the fast-tier mapping.
+    * the OWNER lane is the exact inverse of the fast-tier mapping;
+    * the FLAGS lane carries only known bits, never both pin bits at
+      once, and every pin bit agrees with the page's DEVICE lane (a
+      PIN_FAST page on the slow tier means a pinned page migrated).
 
     Raises on violation (used by tests and the emulator's debug mode).
     """
@@ -158,6 +217,23 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
         if not 0 <= p < cfg.n_pages or dev[p] != FAST or frm[p] != f:
             raise AssertionError(
                 f"OWNER lane stale: fast frame {f} claims page {p}")
+    flg = table[..., FLAGS]
+    bad = np.nonzero(flg & ~KNOWN_FLAGS)[0]
+    if bad.size:
+        raise AssertionError(
+            f"unknown FLAGS bits on page {bad[0]}: {flg[bad[0]]:#x}")
+    both = np.nonzero((flg & PINNED) == PINNED)[0]
+    if both.size:
+        raise AssertionError(
+            f"page {both[0]} pinned to both tiers ({flg[both[0]]:#x})")
+    stray = np.nonzero(((flg & PIN_FAST) != 0) & (dev != FAST))[0]
+    if stray.size:
+        raise AssertionError(
+            f"PIN_FAST page {stray[0]} migrated to the slow tier")
+    stray = np.nonzero(((flg & PIN_SLOW) != 0) & (dev != SLOW))[0]
+    if stray.size:
+        raise AssertionError(
+            f"PIN_SLOW page {stray[0]} migrated to the fast tier")
 
 
 class HybridAllocator:
@@ -177,11 +253,21 @@ class HybridAllocator:
             SLOW: list(range(cfg.n_pages - 1, cfg.n_fast_pages - 1, -1)),
         }
         self._owned: dict[int, list[int]] = {}
+        self._pinned: dict[int, list[int]] = {}
         self._next_handle = 0
 
-    def alloc(self, n_pages: int, hint: int = FAST) -> tuple[int, np.ndarray]:
+    def alloc(self, n_pages: int, hint: int = FAST,
+              pin: bool = False) -> tuple[int, np.ndarray]:
         """Allocate ``n_pages`` flat pages, preferring ``hint`` device.
-        Returns (handle, page_numbers)."""
+        Returns (handle, page_numbers).
+
+        ``pin=True`` is the strong form of the paper's placement hint:
+        each page is nailed to the device it actually landed on (PIN_FAST
+        below the tier boundary, PIN_SLOW above — a spilled page pins
+        where it spilled). Call :meth:`apply_flags` to stamp the pin bits
+        of every live pinned allocation into a packed table's FLAGS lane;
+        :meth:`free` releases the pins for subsequent ``apply_flags``
+        calls."""
         other = SLOW if hint == FAST else FAST
         take = []
         for pool in (self._free[hint], self._free[other]):
@@ -194,11 +280,28 @@ class HybridAllocator:
         handle = self._next_handle
         self._next_handle += 1
         self._owned[handle] = take
+        if pin:
+            self._pinned[handle] = take
         return handle, np.asarray(take, np.int32)
 
     def free(self, handle: int) -> None:
+        self._pinned.pop(handle, None)
         for p in self._owned.pop(handle):
             self._free[FAST if p < self.cfg.n_fast_pages else SLOW].append(p)
+
+    def apply_flags(self, table: jax.Array) -> jax.Array:
+        """Stamp the pin bits of every live pinned allocation into
+        ``table``'s FLAGS lane (device chosen per page from its *initial*
+        placement, which is where the page still is — pins are applied
+        before emulation moves anything). Returns the updated table."""
+        nf = self.cfg.n_fast_pages
+        fast = [p for ps in self._pinned.values() for p in ps if p < nf]
+        slow = [p for ps in self._pinned.values() for p in ps if p >= nf]
+        if fast:
+            table = set_flags(table, np.asarray(fast, np.int32), PIN_FAST)
+        if slow:
+            table = set_flags(table, np.asarray(slow, np.int32), PIN_SLOW)
+        return table
 
     @property
     def free_pages(self) -> dict[int, int]:

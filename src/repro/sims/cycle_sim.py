@@ -178,7 +178,9 @@ def simulate(cfg: EmulatorConfig, page, offset, is_write, size,
             else:
                 ctr["energy_pj"] += 8.0 * sz * cfg.power_pj_per_bit_fast
 
-            hotness[p] += 1 + (cfg.write_weight - 1) * int(w)
+            # write_weight is policy-scoped: only write_bias biases hotness.
+            ww = cfg.write_weight if cfg.policy == "write_bias" else 1
+            hotness[p] += 1 + (ww - 1) * int(w)
             if i % cfg.decay_every == cfg.decay_every - 1:
                 hotness >>= cfg.hotness_decay_shift
             last_ret = t
@@ -191,11 +193,11 @@ def simulate(cfg: EmulatorConfig, page, offset, is_write, size,
                 want = (heat >= cfg.hot_threshold
                         and heat > int(hotness[victim])
                         and device[cand] == SLOW and device[victim] == FAST)
-                if heat >= cfg.hot_threshold and heat > int(hotness[victim]):
-                    clock_ptr = (clock_ptr + 1) % cfg.n_fast_pages
+                # Pointer commits only with a started swap (see trace_sim).
                 if want and not dma["active"]:
                     dma.update(active=True, a=cand, b=victim,
                                start=now, progress=0)
+                    clock_ptr = (clock_ptr + 1) % cfg.n_fast_pages
                     for k in range(1, spp + 1):
                         push(now + k * exch, "dma_blk", None)
 

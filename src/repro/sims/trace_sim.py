@@ -113,8 +113,10 @@ def simulate(cfg: EmulatorConfig, page, offset, is_write, size) -> SimResult:
         else:
             ctr["energy_pj"] += 8.0 * sz * cfg.power_pj_per_bit_fast
 
-        # --- chunk boundary (chunk == 1): hotness, DMA, policy
-        hotness[p] += 1 + (cfg.write_weight - 1) * int(w)
+        # --- chunk boundary (chunk == 1): hotness, DMA, policy.
+        # write_weight is policy-scoped: only write_bias biases hotness.
+        ww = cfg.write_weight if cfg.policy == "write_bias" else 1
+        hotness[p] += 1 + (ww - 1) * int(w)
         if i % cfg.decay_every == cfg.decay_every - 1:
             hotness >>= cfg.hotness_decay_shift
 
@@ -136,10 +138,12 @@ def simulate(cfg: EmulatorConfig, page, offset, is_write, size) -> SimResult:
             victim = int(fast_owner[clock_ptr])
             want = (heat >= cfg.hot_threshold and heat > int(hotness[victim])
                     and device[cand] == SLOW and device[victim] == FAST)
-            if heat >= cfg.hot_threshold and heat > int(hotness[victim]):
-                clock_ptr = (clock_ptr + 1) % cfg.n_fast_pages
+            # The CLOCK pointer commits only with an accepted + started
+            # proposal (engine idle): a dropped proposal must not skip
+            # its victim frame (matches the emulator's pointer commit).
             if want and not dma_active:
                 dma_active, dma_a, dma_b, dma_start = True, cand, victim, now
+                clock_ptr = (clock_ptr + 1) % cfg.n_fast_pages
 
         clock = now
 

@@ -49,6 +49,7 @@ class SweepResult:
         max_lat = np.asarray(c.max_latency)
         held = np.asarray(c.reorder_held)
         energy = np.asarray(c.energy_pj)
+        faults = np.asarray(c.poison_faults)
         clock = np.asarray(self.states.clock)
         swaps = np.asarray(self.states.dma.swaps_done)
         wear = np.asarray(table_lib.wear(self.states.table))
@@ -69,6 +70,7 @@ class SweepResult:
                     "nvm_peak_wear": int(wear[i].max()),
                     "nvm_total_writes": int(wear[i].sum()),
                     "reorder_held": int(held[i]),
+                    "poison_faults": int(faults[i]),
                     "max_latency_cyc": int(max_lat[i]),
                     "energy_mJ": float(energy[i]) / 1e9,
                     "emulated_ms": int(clock[i]) / 1e6,

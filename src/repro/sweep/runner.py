@@ -118,6 +118,13 @@ def run_sweep(
     points = list(points)
     if not points:
         raise ValueError("empty sweep")
+    if donate and states is None:
+        raise ValueError(
+            "donate=True requires states=... (a previous SweepResult.states): "
+            "donation aliases the carried per-point states into the outputs, "
+            "and a fresh-state sweep has nothing to donate — without states= "
+            "the flag used to be silently ignored"
+        )
     keys = {static_key(p.cfg) for p in points}
     if len(keys) > 1:
         raise ValueError(f"points disagree on static geometry: {keys}")
@@ -149,7 +156,7 @@ def run_sweep(
         sharding = NamedSharding(mesh, PartitionSpec(axis))
         params = jax.device_put(params, sharding)
 
-    fn = _emulate_batch_donated if donate and states is not None else _emulate_batch
+    fn = _emulate_batch_donated if donate else _emulate_batch
     states, outs = fn(cfg, registry, padded, valid, params, states)
     if n_padded:
         states, outs = jax.tree.map(lambda x: x[:n], (states, outs))

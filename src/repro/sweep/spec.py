@@ -33,6 +33,8 @@ RUNTIME_FIELDS = frozenset(
         "hotness_decay_shift",
         "decay_every",
         "write_weight",
+        "wear_slack",
+        "pin_fast_fraction",
         "power_pj_per_bit_fast",
         "power_pj_per_bit_slow_read",
         "power_pj_per_bit_slow_write",

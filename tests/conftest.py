@@ -21,3 +21,21 @@ def make_trace_arrays(cfg, n, rng, hot_fraction=0.4, n_hot=4):
     is_write = rng.random(n) < 0.35
     size = np.full(n, 64, np.int32)
     return page, offset, is_write, size
+
+
+def make_churn_trace(cfg, n, hot_w, period, write_frac, seed=0):
+    """The wear-leveling churn workload (rotating write-hot window wider
+    than the fast tier). Single source of truth is ``churn_trace`` in
+    examples/wear_leveling.py — loaded from there so the wear_level tests
+    assert on exactly the workload the example's CI ``--check`` runs."""
+    import importlib.util
+    import pathlib
+
+    path = (pathlib.Path(__file__).resolve().parent.parent
+            / "examples" / "wear_leveling.py")
+    spec = importlib.util.spec_from_file_location("wear_leveling_example",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.churn_trace(cfg, n, hot_w=hot_w, period=period,
+                           write_frac=write_frac, seed=seed)

@@ -116,3 +116,60 @@ def test_progress_clamped():
     assert int(p) == cfg.subblocks_per_page
     p0 = dma_lib.progress_subblocks(cfg, dma, jnp.int32(-5))
     assert int(p0) == 0
+
+
+def test_complete_charges_swap_write_wear():
+    """Committing a swap charges the migration's full-page write (in
+    line-size units) to the WEAR lane of the slow frame that received the
+    demoted page."""
+    cfg = CFG
+    table = init_table(cfg)
+    a = cfg.n_fast_pages + 5          # slow page being promoted
+    b = 2                             # fast page being demoted
+    frame_a = int(table_lib.frame(table)[a])  # slow frame b lands in
+    dma = _mk_dma(1, a, b, 100)
+    now = jnp.int32(100 + dma_lib.swap_duration(cfg))
+    _, t2, done = dma_lib.maybe_complete(cfg, dma, now, table)
+    assert bool(done)
+    charge = cfg.page_size // cfg.line_size
+    wear = np.asarray(table_lib.wear(t2))
+    assert int(wear[frame_a]) == charge
+    assert int(wear.sum()) == charge  # nothing else charged (fast is free)
+    # an unfinished swap charges nothing
+    _, t3, done3 = dma_lib.maybe_complete(cfg, dma, now - 1, table)
+    assert not bool(done3)
+    assert not np.asarray(table_lib.wear(t3)).any()
+
+
+def test_maybe_start_returns_started_and_respects_busy():
+    dma = dma_lib.DMAState.idle()
+    t = jnp.bool_(True)
+    d1, started = dma_lib.maybe_start(dma, t, jnp.int32(10), jnp.int32(2),
+                                      jnp.int32(50))
+    assert bool(started) and int(d1.active) == 1
+    # engine busy: the proposal is dropped and started must say so
+    d2, started2 = dma_lib.maybe_start(d1, t, jnp.int32(11), jnp.int32(3),
+                                       jnp.int32(60))
+    assert not bool(started2)
+    assert int(d2.page_a) == 10 and int(d2.page_b) == 2
+
+
+def test_maybe_start_rejects_pinned_members():
+    """The engine's own FLAGS guard: a pinned candidate or victim vetoes
+    the swap even if the caller's want survived (defense in depth)."""
+    cfg = CFG
+    a = cfg.n_fast_pages + 4   # slow candidate
+    b = 3                      # fast victim
+    want = jnp.bool_(True)
+    now = jnp.int32(10)
+    for page, bit in ((a, table_lib.PIN_SLOW), (b, table_lib.PIN_FAST)):
+        table = table_lib.set_flags(init_table(cfg), [page], bit)
+        d, started = dma_lib.maybe_start(dma_lib.DMAState.idle(), want,
+                                         jnp.int32(a), jnp.int32(b), now,
+                                         table)
+        assert not bool(started) and int(d.active) == 0
+    # unpinned table: same proposal starts
+    d, started = dma_lib.maybe_start(dma_lib.DMAState.idle(), want,
+                                     jnp.int32(a), jnp.int32(b), now,
+                                     init_table(cfg))
+    assert bool(started) and int(d.active) == 1

@@ -147,6 +147,93 @@ def test_sweep_rejects_static_axes():
         build_points(SweepSpec(base=base, extra_axes=(("chunk", (8, 16)),)))
 
 
+def test_donate_without_states_raises():
+    """Regression: run_sweep(donate=True) without states= used to silently
+    ignore the donation instead of erroring."""
+    base = small_platform(chunk=8)
+    points = build_points(SweepSpec(base=base, link_lats=(600, 100)))
+    with pytest.raises(ValueError, match="donate=True requires states="):
+        run_sweep(points, _trace(base, 32), donate=True)
+    with pytest.raises(ValueError, match="donate=True requires state="):
+        emulate(base, _trace(base, 32), donate=True)
+
+
+def test_write_weight_is_policy_scoped():
+    """Regression: write weighting used to be global, making a policy-axis
+    sweep of hotness vs write_bias at equal write_weight a no-op. Now only
+    write_bias applies the weight: the two policies diverge on a
+    write-heavy trace, and hotness is invariant to the knob."""
+    base = small_platform(chunk=8, hot_threshold=10, decay_every=2, hotness_decay_shift=1)
+    # Per chunk: 3 reads of slow page A, 2 writes of slow page B, 3 reads
+    # of rotating cold slow pages. Unweighted, nothing ever crosses the
+    # threshold (decay holds heats at ~6); with writes weighted 4x, B
+    # crosses every other chunk — so only write_bias migrates.
+    n = 512
+    a, b = base.n_fast_pages, base.n_fast_pages + 1
+    page, wr = [], []
+    for c in range(n // 8):
+        cold = base.n_fast_pages + 2 + (3 * c) % 40
+        page += [a, a, a, b, b, cold, cold + 1, cold + 2]
+        wr += [False] * 3 + [True] * 2 + [False] * 3
+    page = np.asarray(page, np.int32)
+    t = _as_trace(page, np.zeros(n, np.int32), np.asarray(wr), np.full(n, 64, np.int32))
+
+    res = run_sweep(
+        SweepSpec(base=base.with_(write_weight=4), policies=("hotness", "write_bias")), t
+    )
+    hot, wb = res.rows()
+    assert hot["policy"] == "hotness" and wb["policy"] == "write_bias"
+    # equal write_weight, same trace — yet only write_bias promotes the
+    # write-hot page (the weighting is policy-scoped, not global)
+    assert hot["swaps"] == 0
+    assert wb["swaps"] > 0
+
+    # hotness must be bitwise invariant to the (now scoped) knob
+    r1 = run_sweep(SweepSpec(base=base.with_(write_weight=1), policies=("hotness",)), t)
+    r8 = run_sweep(SweepSpec(base=base.with_(write_weight=8), policies=("hotness",)), t)
+    np.testing.assert_array_equal(np.asarray(r1.outs["returns"]), np.asarray(r8.outs["returns"]))
+    np.testing.assert_array_equal(np.asarray(r1.states.table), np.asarray(r8.states.table))
+
+
+def test_pin_fraction_and_wear_axes_sweepable():
+    """pin_fast_fraction and wear_slack ride RuntimeParams: a pin-fraction
+    x policy grid is one compiled sweep, pinning shrinks the usable fast
+    tier (fewer victims -> fewer swaps), and every point's pinned pages
+    stay put."""
+    from repro.core import table as table_lib
+    from repro.core.config import FAST
+
+    base = small_platform(chunk=8, hot_threshold=2, decay_every=8)
+    points = build_points(
+        SweepSpec(
+            base=base,
+            policies=("hotness", "wear_level"),
+            extra_axes=(("pin_fast_fraction", (0.0, 0.75)), ("wear_slack", (8, 64))),
+        )
+    )
+    assert len(points) == 8
+    t = _trace(base, 256, hot_fraction=0.7)
+    res = run_sweep(points, t)
+
+    nf = base.n_fast_pages
+    n_pin = int(0.75 * nf)
+    dev = np.asarray(table_lib.device(res.states.table))
+    flg = np.asarray(table_lib.flags(res.states.table))
+    swaps = np.asarray(res.states.dma.swaps_done)
+    for i, pt in enumerate(points):
+        frac = dict(pt.coords)["pin_fast_fraction"]
+        if frac == 0.0:
+            assert not flg[i].any()
+        else:
+            assert (flg[i][:n_pin] == table_lib.PIN_FAST).all()
+            assert (dev[i][:n_pin] == FAST).all()  # pinned pages stayed
+    # unpinned points migrate at least as much as heavily pinned ones
+    unpinned = [i for i, p in enumerate(points) if dict(p.coords)["pin_fast_fraction"] == 0.0]
+    pinned = [i for i, p in enumerate(points) if dict(p.coords)["pin_fast_fraction"] != 0.0]
+    assert swaps[unpinned].sum() >= swaps[pinned].sum()
+    assert swaps[unpinned].sum() > 0
+
+
 def test_sweep_sharded_matches_unsharded():
     base = small_platform(chunk=8)
     spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram", "mram"))
