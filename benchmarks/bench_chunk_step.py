@@ -32,7 +32,8 @@ import jax
 
 from benchmarks.bench_throughput import _bench  # shared warm-then-average
 from benchmarks.schema import bench_payload, load_bench_json, write_bench_json
-from repro.core import emulate, pad_trace, paper_platform
+from repro import Engine
+from repro.core import paper_platform
 from repro.trace import TraceSpec, generate
 
 # The default hot path: what plain paper_platform() users get.
@@ -47,21 +48,21 @@ def run(verbose=True, n=32_768, reps=5, out=None):
     rows = []
 
     def case(name, cfg, state=None, donate=False):
-        padded, valid = pad_trace(cfg, trace)
+        engine = Engine(cfg)
         if state is None:
             fn = lambda: jax.block_until_ready(  # noqa: E731
-                emulate(cfg, padded, valid)[0].clock)
+                engine.run(trace).state.clock)
             sec = _bench(fn, reps)
         else:
             # Continued emulation: each call consumes the previous call's
             # state — exactly the serving/incremental-sweep access pattern
             # donation exists for. Warm with the same donate flag (the
             # donated entry point is its own compilation).
-            s = emulate(cfg, padded, valid, state, donate=donate)[0]
+            s = engine.run(trace, state=state, donate=donate).state
             jax.block_until_ready(s.clock)
             t0 = time.time()
             for _ in range(reps):
-                s = emulate(cfg, padded, valid, s, donate=donate)[0]
+                s = engine.run(trace, state=s, donate=donate).state
             jax.block_until_ready(s.clock)
             sec = (time.time() - t0) / reps
         rows.append({"case": name, "s_per_call": sec,
@@ -81,9 +82,9 @@ def run(verbose=True, n=32_768, reps=5, out=None):
                        base.with_(fuse_swap_gather=False))
     sec_default = case(_DEFAULT_CASE, base)
 
-    state0 = emulate(base, *pad_trace(base, trace))[0]
+    state0 = Engine(base).run(trace).state
     sec_nodon = case("continued/donate=off", base, state=state0)
-    state0 = emulate(base, *pad_trace(base, trace))[0]
+    state0 = Engine(base).run(trace).state
     sec_don = case("continued/donate=on", base, state=state0, donate=True)
 
     metrics = {

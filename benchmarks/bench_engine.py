@@ -1,0 +1,134 @@
+"""Session-API dispatch overhead: ``Engine.run`` vs the raw jit call.
+
+The session API must be free at runtime: ``Engine.run`` adds a cache
+lookup, trace padding, and result wrapping around the same compiled
+executable the raw entry point runs. This microbench measures that
+wrapper cost per call on a deliberately tiny workload (so fixed per-call
+overhead is not drowned by emulation work), for both the fresh-state and
+the donated continued-state paths, plus the cost of *constructing* an
+Engine against warm caches (must not recompile).
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_engine --quick \
+        --out BENCH_engine.json
+
+Emits the standardized ``BENCH_engine.json`` payload (benchmarks.schema
+envelope) — regenerated as a CI artifact every run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.schema import bench_payload, write_bench_json
+from repro import Engine
+from repro.core import paper_platform
+from repro.trace import TraceSpec, generate
+
+
+def _per_call(fn, reps):
+    fn()  # warm (compile)
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+def run(verbose=True, n=4_096, reps=50):
+    cfg = paper_platform().with_(chunk=256)
+    trace = generate(TraceSpec(n_requests=n, footprint_pages=60_000,
+                               write_frac=0.4, pattern="zipfian",
+                               zipf_alpha=1.05))
+    engine = Engine(cfg)
+
+    # --- fresh-state path: Engine.run vs the raw cached entry point.
+    sec_engine = _per_call(
+        lambda: jax.block_until_ready(engine.run(trace).state.clock), reps)
+
+    from repro.core.emulator import pad_trace
+    padded, valid = pad_trace(cfg, trace)
+    static, registry = engine._static, engine.registry
+    # _entry_for is Engine.run's own entry lookup, so the raw baseline is
+    # guaranteed to hit the very executable the wrapped path runs.
+    raw = engine._entry_for(len(padded), carried=False, donate=False)
+    sec_raw = _per_call(
+        lambda: jax.block_until_ready(
+            raw(static, registry, padded, valid, None, engine.params)[0].clock),
+        reps)
+
+    # --- continued donated path (the serving access pattern).
+    def continued_engine():
+        s = engine.run(trace).state
+        for _ in range(4):
+            s = engine.run(trace, state=s).state
+        jax.block_until_ready(s.clock)
+
+    sec_engine_cont = _per_call(continued_engine, max(2, reps // 10)) / 5
+
+    raw_don = engine._entry_for(len(padded), carried=True, donate=True)
+
+    def continued_raw():
+        s = raw(static, registry, padded, valid, None, engine.params)[0]
+        for _ in range(4):
+            s = raw_don(static, registry, padded, valid, s, engine.params)[0]
+        jax.block_until_ready(s.clock)
+
+    sec_raw_cont = _per_call(continued_raw, max(2, reps // 10)) / 5
+
+    # --- session construction against warm caches: no recompilation.
+    compiles_before = engine.compile_count
+    t0 = time.time()
+    k = 20
+    for _ in range(k):
+        e2 = Engine(cfg.with_(hot_threshold=9))  # same geometry
+        jax.block_until_ready(e2.run(trace).state.clock)
+    construct_s = (time.time() - t0) / k
+    recompiles = e2.compile_count - compiles_before
+
+    metrics = {
+        "n_requests": n,
+        "us_per_call_engine": sec_engine * 1e6,
+        "us_per_call_raw_jit": sec_raw * 1e6,
+        "dispatch_overhead_us": (sec_engine - sec_raw) * 1e6,
+        "dispatch_overhead_frac": (sec_engine - sec_raw) / sec_raw,
+        "us_per_call_engine_continued": sec_engine_cont * 1e6,
+        "us_per_call_raw_continued": sec_raw_cont * 1e6,
+        "continued_overhead_us": (sec_engine_cont - sec_raw_cont) * 1e6,
+        "warm_construct_plus_run_us": construct_s * 1e6,
+        "warm_construct_recompiles": recompiles,
+    }
+    assert recompiles == 0, \
+        f"same-geometry Engine construction recompiled {recompiles}x"
+    if verbose:
+        print(f"  Engine.run (fresh)      {sec_engine*1e6:9.1f} us/call")
+        print(f"  raw jit call (fresh)    {sec_raw*1e6:9.1f} us/call "
+              f"(overhead {metrics['dispatch_overhead_us']:+.1f} us, "
+              f"{metrics['dispatch_overhead_frac']*100:+.1f}%)")
+        print(f"  Engine.run (continued)  {sec_engine_cont*1e6:9.1f} us/call")
+        print(f"  raw jit (continued)     {sec_raw_cont*1e6:9.1f} us/call "
+              f"(overhead {metrics['continued_overhead_us']:+.1f} us)")
+        print(f"  warm Engine() + run     {construct_s*1e6:9.1f} us "
+              f"({recompiles} recompiles)")
+    return bench_payload(
+        "engine", metrics,
+        config={"chunk": cfg.chunk, "n_pages": cfg.n_pages, "reps": reps})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps (CI smoke)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="write the standardized BENCH_engine.json")
+    args = ap.parse_args()
+    summary = run(n=args.requests or 4_096, reps=10 if args.quick else 50)
+    if args.out:
+        print(f"  written to {write_bench_json(args.out, summary)}")
+
+
+if __name__ == "__main__":
+    main()

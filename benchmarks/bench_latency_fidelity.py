@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TECHNOLOGIES, Trace, paper_platform, run_trace
+from repro import Engine
+from repro.core import TECHNOLOGIES, Trace, paper_platform
 
 
 def expected_read_latency(cfg) -> float:
@@ -37,7 +38,7 @@ def run(verbose=True):
                   jnp.zeros(n, jnp.int32),
                   jnp.zeros(n, bool),
                   jnp.full(n, 64, jnp.int32))
-        _, _, summ = run_trace(cfg, t)
+        summ = Engine(cfg).run(t).summary()
         exp = expected_read_latency(cfg)
         rows.append({"technology": name,
                      "configured_read_ns": tech.read_lat,

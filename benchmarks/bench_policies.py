@@ -3,7 +3,8 @@ management policies on the same workload (paper §II-B/III-A). Reports mean
 access latency, fast-tier hit rate, migrations and energy per policy."""
 from __future__ import annotations
 
-from repro.core import paper_platform, run_trace
+from repro import Engine
+from repro.core import paper_platform
 from repro.trace import TraceSpec, generate
 
 
@@ -16,7 +17,8 @@ def run(verbose=True, n_requests=120_000):
         cfg = paper_platform().with_(policy=policy, chunk=512,
                                      hot_threshold=4, write_weight=4,
                                      decay_every=32)
-        state, _, summ = run_trace(cfg, trace)
+        result = Engine(cfg).run(trace)
+        state, summ = result.state, result.summary()
         fast = summ["reads_fast"] + summ["writes_fast"]
         slow = summ["reads_slow"] + summ["writes_slow"]
         rows.append({

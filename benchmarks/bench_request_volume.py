@@ -2,16 +2,17 @@
 platform's performance counters and re-expanded to paper scale."""
 from __future__ import annotations
 
-from repro.core import paper_platform, run_trace
+from repro import Engine
+from repro.core import paper_platform
 from repro.trace import WORKLOADS, workload_trace
 
 
 def run(scale=4e-9, verbose=True):
-    cfg = paper_platform().with_(chunk=512)
+    engine = Engine(paper_platform().with_(chunk=512))
     rows = []
     for name, w in WORKLOADS.items():
         t, _, n = workload_trace(name, scale=scale)
-        state, _, summ = run_trace(cfg, t)
+        summ = engine.run(t).summary()
         applied_scale = n * 64 / w.total_traffic_bytes
         rows.append({
             "workload": name,

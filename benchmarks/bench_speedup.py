@@ -17,7 +17,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import paper_platform, emulate, pad_trace
+from repro import Engine
+from repro.core import paper_platform
 from repro.sims import cycle_sim, trace_sim
 from repro.trace import workload_trace
 
@@ -36,15 +37,15 @@ def _time(fn, reps=1):
 def run(scale=6e-9, chunk=4096, workloads=None, verbose=True,
         min_requests=16_384):
     cfg = paper_platform().with_(chunk=chunk)
+    engine = Engine(cfg)
     rows = []
     for name in workloads or WORKLOADS_SMALL:
         t, w, n = workload_trace(name, scale=scale,
                                  min_requests=min_requests)
         page, off, wr, sz = (np.asarray(x) for x in t)
-        padded, valid = pad_trace(cfg, t)
 
         def run_emu():
-            state, _ = emulate(cfg, padded, valid)
+            state = engine.run(t).state
             jax.block_until_ready(state.clock)
             return state
 

@@ -27,9 +27,9 @@ import time
 import jax
 
 from benchmarks.schema import bench_payload, write_bench_json
+from repro import Engine
 from repro.core import paper_platform
-from repro.sweep import SweepSpec, build_points, run_sweep
-from repro.sweep.runner import compile_count
+from repro.sweep import SweepSpec, build_points
 from repro.trace import TraceSpec, generate
 
 
@@ -70,17 +70,17 @@ def run(verbose=True, n_requests=100_000, sharded=None, out=None):
     )
 
     mesh = "auto" if sharded or len(jax.devices()) > 1 else None
-    before = compile_count()
+    engine = Engine(points[0].cfg)
+    before = engine.compile_count
     t0 = time.time()
-    res = run_sweep(points, trace, mesh=mesh)
+    res = engine.sweep(points, trace, mesh=mesh)
     jax.block_until_ready(res.states.clock)
     first_s = time.time() - t0
-    compiles = None if before is None else compile_count() - before
-    if compiles is not None:
-        assert compiles == 1, f"sweep must compile once, got {compiles}"
+    compiles = engine.compile_count - before
+    assert compiles == 1, f"sweep must compile once, got {compiles}"
 
     t0 = time.time()
-    res = run_sweep(points, trace, mesh=mesh)
+    res = engine.sweep(points, trace, mesh=mesh)
     jax.block_until_ready(res.states.clock)
     steady_s = time.time() - t0
 

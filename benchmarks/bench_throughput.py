@@ -7,8 +7,8 @@ import time
 
 import jax
 
-from repro.core import (Trace, emulate, emulate_channels, pad_trace,
-                        paper_platform)
+from repro import Engine
+from repro.core import Trace, paper_platform
 from repro.trace import TraceSpec, generate
 import jax.numpy as jnp
 
@@ -26,10 +26,9 @@ def run(verbose=True, n=65_536):
     trace = generate(spec)
     rows = []
     for chunk in (256, 1024, 4096):
-        cfg = paper_platform().with_(chunk=chunk)
-        padded, valid = pad_trace(cfg, trace)
+        engine = Engine(paper_platform().with_(chunk=chunk))
         sec = _bench(lambda: jax.block_until_ready(
-            emulate(cfg, padded, valid)[0].clock))
+            engine.run(trace).state.clock))
         rows.append({"mode": f"chunk={chunk}", "us_per_req": sec / n * 1e6,
                      "req_per_s": n / sec})
         if verbose:
@@ -40,12 +39,13 @@ def run(verbose=True, n=65_536):
     # spatial parallelism: C independent channels (vmap)
     for channels in (4, 16):
         cfg = paper_platform().with_(chunk=1024)
+        engine = Engine(cfg)
         per = n // channels
         per = per - per % cfg.chunk
         t = Trace(*(jnp.stack([x[i*per:(i+1)*per] for i in range(channels)])
                     for x in trace))
         sec = _bench(lambda: jax.block_until_ready(
-            emulate_channels(cfg, t)[0].clock))
+            engine.run_channels(t)[0].clock))
         total = per * channels
         rows.append({"mode": f"channels={channels}",
                      "us_per_req": sec / total * 1e6,

@@ -14,9 +14,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import (bench_chunk_step, bench_latency_fidelity,
-                            bench_policies, bench_request_volume,
-                            bench_speedup, bench_sweep, bench_throughput)
+    from benchmarks import (bench_chunk_step, bench_engine,
+                            bench_latency_fidelity, bench_policies,
+                            bench_request_volume, bench_speedup, bench_sweep,
+                            bench_throughput)
 
     csv = []
 
@@ -65,6 +66,13 @@ def main() -> None:
                 f"seg_vs_dense={m['speedup_segmented_vs_dense']:.2f}x;"
                 f"fused_vs_unfused={m['speedup_fused_vs_unfused']:.2f}x;"
                 f"donate={m['speedup_donate']:.2f}x"))
+
+    print("== Session API dispatch overhead (Engine vs raw jit) ==")
+    ev = bench_engine.run(reps=10 if args.quick else 50)
+    em = ev["metrics"]
+    csv.append(("engine_dispatch", f"{em['us_per_call_engine']:.1f}",
+                f"overhead={em['dispatch_overhead_us']:+.1f}us;"
+                f"warm_recompiles={em['warm_construct_recompiles']}"))
 
     print("== Emulator throughput (chunk width / channels) ==")
     thr = bench_throughput.run(n=16_384 if args.quick else 65_536)

@@ -14,8 +14,9 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import Engine                              # noqa: E402
 from repro.core import paper_platform                 # noqa: E402
-from repro.sweep import SweepSpec, run_sweep          # noqa: E402
+from repro.sweep import SweepSpec                     # noqa: E402
 from repro.trace import TraceSpec, generate           # noqa: E402
 
 
@@ -32,9 +33,12 @@ def main() -> None:
                                pattern="zipfian", zipf_alpha=1.05))
     base = paper_platform().with_(chunk=512, hot_threshold=4,
                                   write_weight=4, decay_every=32)
+    # One session serves both studies: the grids below share the static
+    # geometry, so every sweep reuses the session's compiled executables.
+    engine = Engine(base)
 
     # --- study 1: policy x NVM technology (paper Fig 8-style comparison)
-    res = run_sweep(SweepSpec(
+    res = engine.sweep(SweepSpec(
         base=base,
         technologies=("3dxpoint", "stt-ram"),
         policies=("static", "hotness", "write_bias", "stream"),
@@ -51,7 +55,7 @@ def main() -> None:
     # converges to the static baseline.
     thresholds = (2, 32, 512, 8192)
     decays = (8, 32, 128)
-    res2 = run_sweep(SweepSpec(
+    res2 = engine.sweep(SweepSpec(
         base=base.with_(policy="hotness"),
         extra_axes=(("hot_threshold", thresholds),
                     ("decay_every", decays)),

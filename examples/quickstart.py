@@ -1,32 +1,37 @@
-"""Quickstart: emulate a hybrid-memory workload and read the counters.
+"""Quickstart: open an emulation session, run a workload, read the
+counters, and sweep the NVM technology — all through ``repro.Engine``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 sys.path.insert(0, "src")
 
-from repro.core import paper_platform, run_trace   # noqa: E402
-from repro.sweep import SweepSpec, run_sweep       # noqa: E402
+from repro import Engine                           # noqa: E402
+from repro.core import paper_platform              # noqa: E402
+from repro.sweep import SweepSpec                  # noqa: E402
 from repro.trace import workload_trace             # noqa: E402
 
 # The paper's platform: 128MB DRAM + 1GB 3D-XPoint behind a PCIe link.
 cfg = paper_platform().with_(chunk=512, policy="hotness", hot_threshold=4)
+engine = Engine(cfg)    # compiled session: one geometry, many runs/sweeps
 
 # One SPEC-2017-like workload from Table III (scaled for a laptop run).
 trace, workload, n = workload_trace("520.omnetpp", scale=1e-8)
 print(f"workload {workload.name}: {n} post-cache memory requests, "
       f"footprint {workload.footprint_bytes >> 20} MB")
 
-state, outs, summary = run_trace(cfg, trace)
+result = engine.run(trace)
+state = result.state
 print(f"emulated time: {int(state.clock)/1e6:.2f} ms "
       f"| migrations: {int(state.dma.swaps_done)}")
-for k, v in summary.items():
+for k, v in result.summary().items():
     print(f"  {k:24s} {v}")
 
 # Swap the NVM technology (paper §III-F: arbitrary stall cycles). All
-# three design points run in ONE compiled, vmapped emulation (repro.sweep).
-res = run_sweep(SweepSpec(base=cfg, technologies=("3dxpoint", "stt-ram",
-                                                  "flash")), trace)
+# three design points run in ONE compiled, vmapped emulation — the same
+# session, so the geometry's executables are shared with the run above.
+res = engine.sweep(SweepSpec(base=cfg, technologies=("3dxpoint", "stt-ram",
+                                                     "flash")), trace)
 for row in res.rows():
     print(f"NVM={row['tech']:9s} mean read latency "
           f"{row['amat_cyc']:10.1f} cycles | migrations {row['swaps']}")

@@ -1,6 +1,19 @@
 """Serve a small model with batched requests over the HMMU-managed tiered
-KV cache, comparing tier-management policies (the paper's platform doing
-its job inside a serving stack).
+KV cache, comparing tier-management policies with and without §III-G
+placement contracts (the paper's platform doing its job inside a serving
+stack).
+
+Each sequence's first KV page is latency-critical — the attention pass
+streams it on every decode step — and on this 4-page fast tier the
+migration policies' churn can *demote* exactly those pages (watch the
+unpinned hotness/write_bias rows lose fast-tier hit rate to the static
+baseline). ``pin=1`` allocates that page under a placement contract
+(``HybridAllocator.alloc(pin=True)``): pinned to the tier it lands on,
+un-evictable by any policy. The **pinned-page fast hit rate** column —
+the fraction of accesses to contracted pages served from DRAM — is the
+contract-quality metric: contracts that spill to NVM (more live
+sequences than fast pages) are pinned where they landed and drag it
+below 100%.
 
     PYTHONPATH=src python examples/serve_tiered.py
 """
@@ -19,11 +32,12 @@ cfg = C.get_smoke("phi3_mini_3p8b")
 params = init_params(cfg, jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 
-for policy in ("static", "hotness", "write_bias"):
+for policy, pin in (("static", 0), ("hotness", 0), ("hotness", 1),
+                    ("write_bias", 0), ("write_bias", 1)):
     emu = EmulatorConfig(n_fast_pages=4, n_slow_pages=128, chunk=32,
                          policy=policy, hot_threshold=3, write_weight=4)
     eng = ServeEngine(cfg, params, batch_size=4, smax=160, emu_cfg=emu,
-                      policy=policy)
+                      policy=policy, pin_pages_per_seq=pin)
     for r in range(10):
         eng.submit(Request(rid=r,
                            prompt=rng.integers(0, cfg.vocab, 96).astype(np.int32),
@@ -32,6 +46,11 @@ for policy in ("static", "hotness", "write_bias"):
     rep = eng.report()
     fast = rep["reads_fast"] + rep["writes_fast"]
     slow = rep["reads_slow"] + rep["writes_slow"]
-    print(f"{policy:11s} steps={steps:3d} est_time={rep['est_total_cycles']/1e3:9.1f}us "
-          f"fast-hit={fast/(fast+slow)*100:5.1f}% migrations={rep['migrations']:3d} "
-          f"mean_lat={rep['mean_read_latency_cyc']:7.1f}cyc")
+    pinned = (f"pinned-hit={rep['pinned_fast_hit_rate']*100:5.1f}% "
+              f"({rep['pinned_accesses']} contracted accesses)"
+              if pin else "no contracts")
+    print(f"{policy:11s} pin={pin} steps={steps:3d} "
+          f"est_time={rep['est_total_cycles']/1e3:8.1f}us "
+          f"fast-hit={fast/(fast+slow)*100:5.1f}% "
+          f"migrations={rep['migrations']:3d} "
+          f"mean_lat={rep['mean_read_latency_cyc']:7.1f}cyc {pinned}")

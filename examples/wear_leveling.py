@@ -25,9 +25,10 @@ sys.path.insert(0, "src")
 
 import numpy as np                                     # noqa: E402
 
+from repro import Engine                               # noqa: E402
 from repro.core import EmulatorConfig, Trace           # noqa: E402
 from repro.core import table as table_lib              # noqa: E402
-from repro.sweep import SweepSpec, run_sweep           # noqa: E402
+from repro.sweep import SweepSpec                      # noqa: E402
 
 
 def churn_trace(cfg: EmulatorConfig, n: int, hot_w: int, period: int,
@@ -79,7 +80,7 @@ def main() -> None:
     trace = churn_trace(base, n, hot_w=96, period=2048, write_frac=0.7)
 
     # pin fraction x policy x write_weight: one compiled, vmapped sweep.
-    res = run_sweep(SweepSpec(
+    res = Engine(base).sweep(SweepSpec(
         base=base,
         policies=("static", "hotness", "write_bias", "wear_level"),
         extra_axes=(("pin_fast_fraction", (0.0, 0.25)),

@@ -1,0 +1,29 @@
+"""HMES — a hybrid memory emulation system as a JAX platform.
+
+Public surface:
+
+* :class:`repro.Engine` — the stateful session API (runs, streams,
+  channels, incremental mesh-sharded sweeps); the durable entry point.
+* ``repro.core`` — the emulation pipeline itself (config, packed
+  redirection table, DMA, latency scans, policies, counters).
+* ``repro.sweep`` — design-space grids (``SweepSpec``) and the results
+  table; execution happens through ``Engine.sweep``.
+
+Exports resolve lazily (PEP 562): ``import repro`` must stay free of
+jax side effects so entry points that configure ``XLA_FLAGS`` before
+first jax init (``repro.launch.dryrun``) keep working under
+``python -m``.
+"""
+__all__ = ["Engine", "RunResult", "PolicyRegistry"]
+
+
+def __getattr__(name):
+    if name in ("Engine", "RunResult"):
+        from repro import engine
+
+        return getattr(engine, name)
+    if name == "PolicyRegistry":
+        from repro.core.policies import PolicyRegistry
+
+        return PolicyRegistry
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -2,14 +2,19 @@
 
 Public API:
     EmulatorConfig, TECHNOLOGIES, paper_platform, small_platform
-    Trace, emulate, emulate_channels, run_trace, pad_trace
+    Trace, pad_trace, PolicyRegistry
     policies (register your own), counters.summary
+
+Execution goes through the session API — ``repro.Engine`` — which owns
+the compiled entry points; ``emulate`` / ``emulate_channels`` /
+``run_trace`` here are deprecated wrappers over it.
 """
 from .config import (EmulatorConfig, RuntimeParams, TechnologyParams,
                      TECHNOLOGIES, paper_platform, small_platform, static_key,
                      FAST, SLOW)
 from .emulator import (Trace, EmulatorState, emulate, emulate_channels,
                        run_trace, pad_trace, init_state)
+from .policies import PolicyRegistry
 from .table import HybridAllocator, init_table, check_table
 from . import policies, counters, dma, latency, consistency, table
 
@@ -18,6 +23,6 @@ __all__ = [
     "paper_platform", "small_platform", "static_key",
     "FAST", "SLOW", "Trace", "EmulatorState", "emulate",
     "emulate_channels", "run_trace", "pad_trace", "init_state",
-    "HybridAllocator", "init_table", "check_table", "policies", "counters",
-    "dma", "latency", "consistency", "table",
+    "PolicyRegistry", "HybridAllocator", "init_table", "check_table",
+    "policies", "counters", "dma", "latency", "consistency", "table",
 ]

@@ -127,8 +127,11 @@ class EmulatorConfig:
 
 def static_key(cfg: EmulatorConfig) -> tuple:
     """The fields of ``cfg`` that determine compiled shapes and program
-    structure. Two configs with equal ``static_key`` share one ``emulate``
-    compilation; everything else lives in ``RuntimeParams`` and is traced.
+    structure. Two configs with equal ``static_key`` share every compiled
+    emulation program — this tuple is the leading component of the
+    session API's unified entry-point cache key (``repro.Engine``; two
+    same-geometry Engines reuse each other's executables). Everything
+    else lives in ``RuntimeParams`` and is traced.
 
     Note the *total* page count is static but the fast/slow split is not:
     the redirection table is initialized from a traced boundary, so tier

@@ -15,18 +15,30 @@ boundaries — the pipeline-depth visibility delay real RTL has.
 ``chunk=1`` degrades to a fully sequential model, which the oracle tests
 compare against; large chunks are the "FPGA mode" delivering the paper's
 orders-of-magnitude speedup over sequential software simulation.
+
+**Drive the platform through the session API.** ``repro.Engine``
+(``repro/engine.py``) is the public entry point: it owns the static
+geometry, a frozen :class:`~repro.core.policies.PolicyRegistry`, and the
+unified jit entry-point cache below (:func:`entry_point`), and exposes
+``run`` / ``run_stream`` / ``run_channels`` / ``sweep`` /
+``continue_sweep``. The free functions at the bottom of this module
+(``emulate``, ``emulate_channels``, ``run_trace``) are thin deprecated
+wrappers kept for bitwise-compatibility tests.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import warnings
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import consistency, counters as counters_lib, dma as dma_lib
 from . import latency, policies as policies_lib, table as table_lib
-from .config import EmulatorConfig, RuntimeParams, FAST, SLOW
+from .config import (EmulatorConfig, RuntimeParams, FAST, SLOW,
+                     canonical_config, static_key)
+from .policies import PolicyRegistry
 from repro.kernels import ops as kernel_ops
 
 
@@ -93,7 +105,7 @@ def pad_trace(cfg: EmulatorConfig, t: Trace) -> tuple[Trace, jax.Array]:
 
 
 def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
-                registry: tuple[str, ...], state: EmulatorState,
+                registry: PolicyRegistry, state: EmulatorState,
                 chunk: tuple[Trace, jax.Array]):
     trace, valid = chunk
     page, offset, is_write, size = trace
@@ -169,7 +181,7 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     # hotness by write_weight; every other policy (including plain
     # hotness at the same swept write_weight) counts reads and writes
     # equally, so the policy axis is a real comparison.
-    if "write_bias" in registry:
+    if "write_bias" in registry.names:
         eff_weight = jnp.where(
             params.policy_id == registry.index("write_bias"),
             params.write_weight, jnp.int32(1))
@@ -202,12 +214,13 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     table = table.at[own_idx, table_lib.OWNER].set(own_val)
 
     # Policy dispatch on the *traced* policy id: lax.switch over the
-    # (static) registry slice makes the policy itself a batchable design
-    # axis. params.policy_id indexes ``registry``; a single-policy
-    # registry skips the switch so vmapped non-policy sweeps never pay
-    # for branches they don't use.
-    branches = [functools.partial(policies_lib.POLICIES[name], cfg, params)
-                for name in registry]
+    # (static, frozen) registry snapshot makes the policy itself a
+    # batchable design axis. params.policy_id indexes ``registry.names``;
+    # a single-policy registry skips the switch so vmapped non-policy
+    # sweeps never pay for branches they don't use. Branches come from
+    # the snapshot's own function tuple — re-registering a policy name
+    # after the snapshot cannot leak into this compilation.
+    branches = [functools.partial(fn, cfg, params) for fn in registry.fns]
     ops = (table, state.clock_ptr, page, is_write, valid)
     if len(branches) == 1:
         p_want, cand, victim, new_ptr = branches[0](*ops)
@@ -249,7 +262,7 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
     return new_state, out
 
 
-def _emulate_impl(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
+def _emulate_impl(cfg: EmulatorConfig, registry: PolicyRegistry, trace: Trace,
                   valid: jax.Array | None = None,
                   state: EmulatorState | None = None,
                   params: RuntimeParams | None = None
@@ -271,71 +284,144 @@ def _emulate_impl(cfg: EmulatorConfig, registry: tuple[str, ...], trace: Trace,
     return state, outs
 
 
-_emulate = jax.jit(_emulate_impl, static_argnames=("cfg", "registry"))
-# Donating the carried state lets XLA alias its buffers into the outputs:
-# a continued emulation updates the packed table in place instead of
-# copying n_pages * ROW_W ints every call. The caller's state is CONSUMED.
-_emulate_donated = jax.jit(_emulate_impl, static_argnames=("cfg", "registry"),
-                           donate_argnums=(4,))
+def _emulate_batch_impl(cfg: EmulatorConfig, registry: PolicyRegistry,
+                        trace: Trace, valid: jax.Array,
+                        states, params: RuntimeParams):
+    """The sweep executor's computation: :func:`_emulate_impl` vmapped over
+    a stacked ``RuntimeParams`` batch. ``states`` is an optional stacked
+    ``EmulatorState`` with the same leading point axis (a previous
+    ``SweepResult.states``) — fresh per-point state when None. Argument
+    order matches ``_emulate_impl`` so one ``donate_argnums`` spec serves
+    both entry points."""
+    if states is None:
+        def one(p):
+            return _emulate_impl(cfg, registry, trace, valid, None, p)
+
+        return jax.vmap(one)(params)
+
+    def one(s, p):
+        return _emulate_impl(cfg, registry, trace, valid, s, p)
+
+    return jax.vmap(one)(states, params)
+
+
+# ---------------------------------------------------------------------------
+# The unified jit entry-point cache.
+#
+# One cache subsumes the four hand-rolled jit variants this repo used to
+# carry (_emulate / _emulate_donated / _emulate_batch /
+# _emulate_batch_donated): every compiled emulation program — single run
+# or vmapped sweep, donated or not, sharded or not — is one entry, keyed
+# by (static geometry, frozen policy registry, batch?, donate?, shape
+# signature). The key captures everything that forces a distinct
+# executable, so ``entry_cache_count`` IS the compile count (what
+# ``Engine.compile_count`` reports) with no reaching into jit internals,
+# and a new same-geometry ``Engine`` reuses cached executables for free.
+# ---------------------------------------------------------------------------
+_ENTRY_CACHE: dict[tuple, Callable] = {}
+
+
+def entry_point(cfg: EmulatorConfig, registry: PolicyRegistry, *,
+                batch: bool = False, donate: bool = False,
+                shape_sig: tuple = ()) -> Callable:
+    """The compiled entry point for one program shape.
+
+    ``cfg`` must already be canonical (:func:`config.canonical_config`) so
+    geometry-equal sessions share entries. ``shape_sig`` carries the
+    remaining executable determinants (trace length, point count,
+    fresh-vs-carried state, mesh) — callers pass exactly what they are
+    about to trace with, keeping one compiled executable per cache entry.
+
+    ``donate=True`` donates the carried state (argument 4 of either
+    impl), letting XLA alias its buffers into the outputs: a continued
+    emulation updates the packed table in place instead of copying
+    n_pages * ROW_W ints every call. The caller's state is CONSUMED.
+    """
+    key = (static_key(cfg), registry, batch, donate, shape_sig)
+    fn = _ENTRY_CACHE.get(key)
+    if fn is None:
+        impl = _emulate_batch_impl if batch else _emulate_impl
+        fn = jax.jit(impl, static_argnames=("cfg", "registry"),
+                     donate_argnums=(4,) if donate else ())
+        _ENTRY_CACHE[key] = fn
+    return fn
+
+
+def entry_cache_count(skey: tuple | None = None) -> int:
+    """Number of compiled emulation entry points — all geometries, or one
+    (``skey`` from :func:`config.static_key`). Backs
+    ``Engine.compile_count`` and the legacy ``sweep.runner.compile_count``.
+    """
+    if skey is None:
+        return len(_ENTRY_CACHE)
+    return sum(1 for k in _ENTRY_CACHE if k[0] == skey)
+
+
+def as_registry(registry) -> PolicyRegistry:
+    """Normalize ``None`` / a tuple of names / a ``PolicyRegistry`` into a
+    frozen snapshot (``None`` = every registered policy, in registration
+    order, snapshotted now)."""
+    if isinstance(registry, PolicyRegistry):
+        return registry
+    return PolicyRegistry.snapshot(registry)
+
+
+def _warn_legacy(old: str, new: str) -> None:
+    warnings.warn(
+        f"legacy {old} is deprecated: drive the platform through the "
+        f"session API — {new} (see repro.Engine)",
+        DeprecationWarning, stacklevel=3)
 
 
 def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
             state: EmulatorState | None = None,
             params: RuntimeParams | None = None,
-            registry: tuple[str, ...] | None = None,
+            registry=None,
             donate: bool = False) -> tuple[EmulatorState, dict]:
-    """Run a trace through the platform. Returns the final state and
-    per-request outputs (in-order return time, device accessed, latency).
+    """Deprecated free-function entry point — use ``repro.Engine.run``.
 
-    The trace length must be a multiple of ``cfg.chunk`` (use
-    ``pad_trace``). Pass ``state`` to continue a previous emulation (the
-    serving integration feeds traces incrementally).
-
-    ``cfg`` contributes only static geometry (see ``config.static_key``) to
-    the compiled program; every timing/policy knob is read from ``params``
-    (default: ``RuntimeParams.from_config(cfg)``). Compilation is therefore
-    shared across design points: vmap over a stacked ``params`` batch
-    (``repro.sweep``) evaluates many technologies / tier ratios / policies /
-    link latencies in one XLA computation, and ``emulate_channels`` vmaps
-    over a leading trace axis for FPGA-style spatial parallelism.
-
-    ``registry`` is the (static) tuple of policy names ``params.policy_id``
-    indexes — default: the full registration order, snapshotted at call
-    time so late ``@register`` calls can never hit a stale compilation.
-    Sweeps pass the subset of policies actually present in the batch,
-    keeping vmapped non-policy sweeps at single-branch cost.
-
-    ``donate=True`` donates ``state``'s buffers to the computation, so a
-    continued emulation updates the packed table in place instead of
-    copying it. The passed-in state is CONSUMED — reading it afterwards
-    raises; keep ``donate=False`` (the default) if you still need it.
+    Kept as a thin wrapper over the unified entry-point cache (bitwise
+    identical to ``Engine.run``, guaranteed by tests/test_engine.py). The
+    trace length must be a multiple of ``cfg.chunk`` (use ``pad_trace``;
+    ``Engine.run`` pads for you). ``donate=True`` donates ``state``'s
+    buffers — the passed-in state is CONSUMED (``Engine.run`` donates by
+    default). ``registry`` may be a tuple of policy names or a
+    ``PolicyRegistry``; default is a snapshot of every registered policy.
     """
-    if registry is None:
-        registry = tuple(policies_lib.POLICIES)
+    _warn_legacy("emulate()", "Engine(cfg).run(trace, state=..., params=...)")
     if donate and state is None:
         raise ValueError(
             "donate=True requires state=...: donation aliases the carried "
             "state's buffers into the outputs, and a fresh-state run has "
             "nothing to donate (it would silently run undonated)")
-    fn = _emulate_donated if donate else _emulate
-    return fn(cfg, registry, trace, valid, state, params)
+    reg = as_registry(registry)
+    if params is None:
+        params = RuntimeParams.from_config(cfg)
+    static = canonical_config(cfg)
+    fn = entry_point(static, reg, donate=donate,
+                     shape_sig=(len(trace), valid is None, state is None))
+    return fn(static, reg, trace, valid, state, params)
 
 
 def emulate_channels(cfg: EmulatorConfig, traces: Trace,
                      params: RuntimeParams | None = None,
-                     registry: tuple[str, ...] | None = None):
-    """FPGA-style spatial parallelism: emulate many independent trace
-    channels at once (vmapped). ``traces`` has a leading channel axis.
-    ``params``/``registry`` apply to every channel (sweeping runtime
-    parameters and restricting the policy registry work exactly as in
-    :func:`emulate`)."""
-    fn = jax.vmap(lambda t: emulate(cfg, t, None, None, params, registry))
-    return fn(traces)
+                     registry=None):
+    """Deprecated — use ``repro.Engine.run_channels``. FPGA-style spatial
+    parallelism: emulate many independent trace channels at once (vmapped
+    over a leading channel axis); ``params``/``registry`` apply to every
+    channel."""
+    _warn_legacy("emulate_channels()", "Engine(cfg).run_channels(traces)")
+    from repro.engine import Engine
+    return Engine(cfg, registry=registry).run_channels(traces, params=params)
 
 
 def run_trace(cfg: EmulatorConfig, trace: Trace,
               params: RuntimeParams | None = None):
-    """Convenience wrapper: pad, emulate, return (state, outputs, summary)."""
+    """Deprecated — use ``repro.Engine.run`` (+ ``RunResult.summary()``).
+    Pads, emulates, returns (state, padded outputs, counters summary)."""
+    _warn_legacy("run_trace()", "Engine(cfg).run(trace) + result.summary()")
+    from repro.engine import Engine
     padded, valid = pad_trace(cfg, trace)
-    state, outs = emulate(cfg, padded, valid, None, params)
+    state, outs = Engine(cfg).run(padded, valid=valid, params=params,
+                                  donate=False)
     return state, outs, counters_lib.summary(state.counters)

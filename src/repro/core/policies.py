@@ -47,6 +47,7 @@ commit contract enforced by the emulator:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -76,6 +77,68 @@ def policy_id(name: str) -> int:
     index carried by ``RuntimeParams.policy_id``."""
     get(name)
     return list(POLICIES).index(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRegistry:
+    """An immutable ``name -> policy fn`` snapshot — the unit the compiled
+    pipeline dispatches over.
+
+    The mutable module dict above stays the *registration* surface
+    (``@register`` keeps working), but nothing compiled ever reads it:
+    ``repro.Engine`` and the legacy wrappers take a snapshot at
+    construction/call time, and the ``lax.switch`` branches are built from
+    the snapshot's own function tuple. A late ``@register`` (or a
+    re-registration of an existing name) therefore changes *future*
+    snapshots only — it can neither invalidate nor silently leak into an
+    existing session's compiled executables, which is exactly the
+    import-order hazard the old global-dict lookups had.
+
+    Frozen + tuple-valued, so a registry is hashable and usable as a jit
+    static argument; two snapshots of an unchanged global dict compare
+    equal and share compilations.
+    """
+
+    names: tuple[str, ...]
+    fns: tuple[Callable, ...]
+
+    def __post_init__(self):
+        if len(self.names) != len(self.fns):
+            raise ValueError("names and fns length mismatch")
+        if len(set(self.names)) != len(self.names):
+            raise ValueError(f"duplicate policy names: {self.names}")
+
+    @classmethod
+    def snapshot(cls, names=None) -> "PolicyRegistry":
+        """Snapshot the global registration dict (all registered policies,
+        in registration order, when ``names`` is None; else the named
+        subset in the given order)."""
+        if names is None:
+            names = tuple(POLICIES)
+        return cls(tuple(names), tuple(get(n) for n in names))
+
+    def index(self, name: str) -> int:
+        """Branch index of ``name`` — what ``RuntimeParams.policy_id``
+        must carry for this registry."""
+        if name not in self.names:
+            raise KeyError(
+                f"policy {name!r} is not in this registry; have {self.names}")
+        return self.names.index(name)
+
+    def subset(self, names) -> "PolicyRegistry":
+        """A restricted registry carrying the same snapshotted functions
+        (sweeps compile the switch only over policies actually present)."""
+        return PolicyRegistry(tuple(names),
+                              tuple(self.fns[self.index(n)] for n in names))
+
+    def __contains__(self, name) -> bool:
+        return name in self.names
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def __iter__(self):
+        return iter(self.names)
 
 
 

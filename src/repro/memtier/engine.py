@@ -33,7 +33,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  smax: int = 256, emu_cfg: EmulatorConfig | None = None,
                  policy: str = "hotness", sh: ShardCtx | None = None,
-                 eos: int | None = None):
+                 eos: int | None = None, pin_pages_per_seq: int = 1):
         self.cfg = cfg
         self.params = params
         self.sh = sh or ShardCtx()
@@ -50,9 +50,13 @@ class ServeEngine:
         if emu_cfg.policy != policy:
             emu_cfg = emu_cfg.with_(policy=policy)
         kv_bytes = self._kv_bytes_per_position()
+        # pin_pages_per_seq: §III-G placement contracts — each sequence's
+        # first KV pages (streamed every decode step) are allocated
+        # pin=True; report() exposes the pinned-page fast hit rate.
         self.tier = TieredKVAccounting(emu_cfg, cfg.n_layers,
                                        positions_per_page=64,
-                                       bytes_per_position=max(64, kv_bytes))
+                                       bytes_per_position=max(64, kv_bytes),
+                                       pin_pages_per_seq=pin_pages_per_seq)
         self._decode = jax.jit(
             lambda p, t, c, q: decode_step(cfg, p, t, c, q, self.sh))
         self._prefill = jax.jit(

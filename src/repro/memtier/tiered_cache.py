@@ -8,12 +8,26 @@ layer group) are allocated in the emulated hybrid space through the
 middleware API (core.table.HybridAllocator — the paper's driver+jemalloc
 analogue, with placement hints: fresh pages prefer the fast tier). Every
 decode step emits the page-access stream the attention kernels would
-issue; the stream feeds the HMMU emulator incrementally, which
+issue; the stream feeds the HMMU session (``repro.Engine``)
+incrementally — donated carried state, so the packed redirection table
+moves forward in place step after step — which
 
   * applies the configured placement/migration policy (promoting hot KV
     pages to the DRAM tier, demoting cold ones),
   * accounts per-request latency through the full pipeline model, and
   * exposes the paper's performance counters (per-tier traffic, energy).
+
+§III-G placement *contracts*: the first ``pin_pages_per_seq`` KV pages
+of each sequence — the pages the attention pass streams on every single
+decode step, for the sequence's whole lifetime — are latency-critical
+and allocated with ``HybridAllocator.alloc(pin=True)``. The pin bit is
+stamped into the table's FLAGS lane (PIN_FAST below the tier boundary,
+PIN_SLOW where the allocation spilled), so no migration policy can evict
+a contracted page. The **pinned-page fast hit rate** — the fraction of
+accesses to contracted pages actually served from DRAM — is the
+contract-quality metric ``report()`` exposes (1.0 means every
+latency-critical page got, and kept, its DRAM frame; less means the
+fast tier was too small and contracts spilled).
 
 Policies are swappable per engine (`policy="hotness" | "static" | ...`),
 so the engine doubles as the policy-exploration harness the paper built
@@ -24,9 +38,12 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (EmulatorConfig, HybridAllocator, Trace, counters,
-                        emulator as emu, FAST, SLOW)
+                        FAST, SLOW)
+from repro.core import table as table_lib
+from repro.engine import Engine
 
 
 @dataclasses.dataclass
@@ -34,6 +51,8 @@ class TierStats:
     steps: int = 0
     requests: int = 0
     est_cycles: int = 0
+    pinned_accesses: int = 0
+    pinned_fast_hits: int = 0
 
 
 class TieredKVAccounting:
@@ -41,26 +60,62 @@ class TieredKVAccounting:
 
     def __init__(self, emu_cfg: EmulatorConfig, n_layers: int,
                  positions_per_page: int = 256,
-                 bytes_per_position: int = 1024):
+                 bytes_per_position: int = 1024,
+                 pin_pages_per_seq: int = 1):
         self.cfg = emu_cfg
         self.alloc = HybridAllocator(emu_cfg)
         self.n_layers = n_layers
         self.ppp = positions_per_page
         self.bpp = bytes_per_position
-        self.state = emu.init_state(emu_cfg)
-        # (seq_id, layer_group, seq_page) -> flat page
+        self.pin_pages_per_seq = pin_pages_per_seq
+        self.engine = Engine(emu_cfg)
+        self.state = self.engine.init_state()
+        # (seq_id, seq_page) -> flat page
         self._pages: dict[tuple, int] = {}
         self._handles: dict[tuple, int] = {}
+        self._pinned: set[int] = set()
         self.stats = TierStats()
 
     def _page_for(self, seq_id: int, pos_page: int) -> int:
         key = (seq_id, pos_page)
         if key not in self._pages:
             # Fresh (hot) KV pages prefer the fast tier — the placement
-            # hint the paper's extended malloc carries (§III-G).
-            handle, pages = self.alloc.alloc(1, hint=FAST)
-            self._pages[key] = int(pages[0])
+            # hint the paper's extended malloc carries (§III-G). The
+            # sequence's first pin_pages_per_seq pages get the *strong*
+            # form: a pin contract stamped into the FLAGS lane.
+            pin = pos_page < self.pin_pages_per_seq
+            handle, pages = self.alloc.alloc(1, hint=FAST, pin=pin)
+            page = int(pages[0])
+            self._pages[key] = page
             self._handles[key] = handle
+            if pin:
+                # Pin the page to the tier it will actually OCCUPY: its
+                # DEVICE lane (not the id boundary — migration may have
+                # moved a recycled page since init), and, when the page
+                # is a member of the DMA's in-flight swap, the tier that
+                # swap commits it to (page_a promotes to FAST, page_b
+                # demotes to SLOW; maybe_complete commits
+                # unconditionally, so pinning the pre-swap tier would
+                # break the pin<->DEVICE invariant one chunk later). A
+                # pin bit disagreeing with DEVICE would nail the page to
+                # the wrong tier forever. The allocator's own pin record
+                # (alloc(pin=True)) serves pre-run apply_flags()
+                # workflows; mid-emulation the stamp must be incremental
+                # and device-accurate, so this class owns the FLAGS
+                # lifecycle (stamp here, clear in free_sequence) and the
+                # _pinned set for the hit-rate metric.
+                dma = self.state.dma
+                if int(dma.active) and page == int(dma.page_a):
+                    dev = FAST
+                elif int(dma.active) and page == int(dma.page_b):
+                    dev = SLOW
+                else:
+                    dev = int(self.state.table[page, table_lib.DEVICE])
+                bit = (table_lib.PIN_FAST if dev == FAST
+                       else table_lib.PIN_SLOW)
+                self.state = self.state._replace(
+                    table=table_lib.set_flags(self.state.table, [page], bit))
+                self._pinned.add(page)
         return self._pages[key]
 
     def access_trace(self, seq_ids, kv_lens, windows=None):
@@ -93,26 +148,45 @@ class TieredKVAccounting:
         return trace
 
     def account(self, trace: Trace) -> dict:
-        """Feed one step's stream through the HMMU emulator (incremental)."""
-        padded, valid = emu.pad_trace(self.cfg, trace)
+        """Feed one step's stream through the HMMU session (incremental;
+        the carried state is donated and moves forward in place)."""
         before = int(self.state.clock)
-        self.state, _ = emu.emulate(self.cfg, padded, valid, self.state)
+        self.state, outs = self.engine.run(trace, state=self.state)
         self.stats.steps += 1
         self.stats.requests += len(trace)
         self.stats.est_cycles = int(self.state.clock)
+        if self._pinned:
+            pages = np.asarray(trace.page)
+            dev = np.asarray(outs["device"])
+            pin = np.isin(pages, np.fromiter(self._pinned, np.int32))
+            self.stats.pinned_accesses += int(pin.sum())
+            self.stats.pinned_fast_hits += int((pin & (dev == FAST)).sum())
         return {"step_cycles": int(self.state.clock) - before}
 
     def free_sequence(self, seq_id: int):
         for key in [k for k in self._pages if k[0] == seq_id]:
+            page = self._pages[key]
+            if page in self._pinned:
+                # Release the §III-G contract with the allocation.
+                self.state = self.state._replace(
+                    table=table_lib.clear_flags(self.state.table, [page],
+                                                table_lib.PINNED))
+                self._pinned.discard(page)
             self.alloc.free(self._handles.pop(key))
             del self._pages[key]
 
     def report(self) -> dict:
         summ = counters.summary(self.state.counters)
+        pinned_hits = self.stats.pinned_fast_hits
         summ.update(est_total_cycles=self.stats.est_cycles,
                     migrations=int(self.state.dma.swaps_done),
                     steps=self.stats.steps,
                     requests=self.stats.requests,
                     fast_free=self.alloc.free_pages[FAST],
-                    slow_free=self.alloc.free_pages[SLOW])
+                    slow_free=self.alloc.free_pages[SLOW],
+                    pinned_pages=len(self._pinned),
+                    pinned_accesses=self.stats.pinned_accesses,
+                    pinned_fast_hit_rate=(
+                        pinned_hits / self.stats.pinned_accesses
+                        if self.stats.pinned_accesses else float("nan")))
         return summ

@@ -6,9 +6,10 @@ the detailed-but-sequential methodology whose slowness motivates the
 paper's platform.
 
 With ``refresh=False`` the timing semantics are *identical* to
-``trace_sim`` (and hence to the JAX emulator at chunk=1); the cross-check
-lives in tests/test_sims_agree.py. ``refresh=True`` adds tREFI/tRFC DRAM
-refresh modelling — extra fidelity the flat simulators lack.
+``trace_sim`` (and hence to a chunk=1 ``repro.Engine`` session); the
+cross-check lives in tests/test_latency_consistency.py and the Engine
+oracle parity in tests/test_engine.py. ``refresh=True`` adds tREFI/tRFC
+DRAM refresh modelling — extra fidelity the flat simulators lack.
 """
 from __future__ import annotations
 

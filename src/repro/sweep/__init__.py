@@ -1,10 +1,13 @@
-"""Design-space exploration engine: batched (vmapped) parameter sweeps.
+"""Design-space exploration: sweep grids and results tables.
 
 The paper's platform exists to evaluate many hybrid-memory designs
 quickly; this package turns the design axis into a batch axis. Build a
-grid with :class:`SweepSpec`, expand it with :func:`build_points`, and
-:func:`run_sweep` evaluates every point against one trace in a single
-compiled, vmapped ``emulate`` call — optionally sharded across devices.
+grid with :class:`SweepSpec` (expand with :func:`build_points`) and
+evaluate it through the session API — ``repro.Engine.sweep`` runs every
+point against one trace in a single compiled, vmapped emulation,
+optionally sharded across devices, and ``Engine.continue_sweep`` resumes
+the whole grid from its stacked warm states (mesh-shardable too).
+:func:`run_sweep` is the deprecated free-function wrapper over it.
 """
 
 from .results import SweepResult, load_rows

@@ -25,15 +25,26 @@ from repro.core import table as table_lib
 
 @dataclasses.dataclass
 class SweepResult:
-    """Batched outcome of :func:`repro.sweep.run_sweep`.
+    """Batched outcome of :meth:`repro.Engine.sweep` (and the legacy
+    ``run_sweep`` wrapper).
 
     ``states``/``outs`` carry a leading point axis aligned with
     ``points``; :meth:`rows` reduces them to one summary dict per point.
+    ``states`` doubles as the continuation handle: feed the whole result
+    to :meth:`repro.Engine.continue_sweep` to resume every point from
+    its warm state (donated, and mesh-shardable). ``params``/``registry``
+    record the exact stacked batch and policy registry the sweep
+    executed with, so a continuation re-runs precisely the same design
+    points — including sweeps launched from a pre-stacked
+    ``RuntimeParams`` batch, whose knobs are not recoverable from
+    ``points``.
     """
 
     points: list
     states: object
     outs: dict
+    params: object = None
+    registry: object = None
 
     def __len__(self) -> int:
         return len(self.points)

@@ -1,89 +1,54 @@
-"""Vmapped sweep executor: many design points, one compiled emulation.
+"""Legacy sweep executor shim — the session API owns sweeps now.
 
-``run_sweep`` stacks each point's ``RuntimeParams`` into a single pytree
-with a leading point axis and vmaps ``emulate`` over it, so N design
-points cost one XLA compilation and one fused device computation — the
-paper's core value proposition (fast design exploration) as a batch axis.
+``run_sweep`` predates the stateful session API and survives as a thin
+deprecated wrapper over :meth:`repro.Engine.sweep` (bitwise identical —
+tests/test_engine.py): one compiled, vmapped ``emulate`` per static
+geometry, optional ``mesh=`` sharding of the point axis, optional
+``states=``/``donate=`` continuation. New code should hold an
+``Engine`` and call ``engine.sweep(...)`` / ``engine.continue_sweep(...)``
+— which, unlike this wrapper's historical behaviour, also compose
+``states=`` with ``mesh=`` (the stacked states are sharded alongside the
+params).
 
-For multi-chip fan-out, pass a mesh (or ``mesh="auto"``): the stacked
-params are placed with a ``NamedSharding`` over the point axis and XLA
-partitions the batch across devices — the same spatial-parallelism story
-as ``emulate_channels``, but over *designs* instead of traces.
+``stack_params`` / ``sweep_mesh`` moved to ``repro.engine`` and are
+re-exported here unchanged; ``compile_count`` is now backed by the
+unified entry-point cache (``Engine.compile_count`` scoped to one
+geometry is the session-level equivalent).
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec
+import warnings
 
-from repro.core.config import RuntimeParams, canonical_config, static_key
-from repro.core.emulator import Trace, emulate, pad_trace
+from repro.core.config import canonical_config, static_key
+from repro.core.emulator import Trace, entry_cache_count
 
 from .results import SweepResult
 from .spec import DesignPoint, SweepSpec, build_points
 
 
-def _emulate_batch_impl(cfg, registry, trace, valid, params, states=None):
-    """The sweep engine's single compiled computation: ``emulate`` vmapped
-    over a stacked ``RuntimeParams`` batch. ``states`` is an optional
-    stacked ``EmulatorState`` with the same leading point axis (e.g. a
-    previous ``SweepResult.states``) — fresh per-point state when None."""
-    if states is None:
-        def one(p):
-            return emulate(cfg, trace, valid, None, p, registry)
-
-        return jax.vmap(one)(params)
-
-    def one(p, s):
-        return emulate(cfg, trace, valid, s, p, registry)
-
-    return jax.vmap(one)(params, states)
-
-
-_emulate_batch = jax.jit(_emulate_batch_impl, static_argnames=("cfg", "registry"))
-# Donated variant for incremental sweeps: the stacked per-point states
-# (notably every point's packed table) alias into the outputs instead of
-# being copied each call. The caller's states are CONSUMED.
-_emulate_batch_donated = jax.jit(
-    _emulate_batch_impl, static_argnames=("cfg", "registry"), donate_argnums=(5,)
-)
-
-
 def compile_count():
-    """Number of compiled sweep computations held by the executor (one per
-    static geometry x policy set x trace shape x point count, summed over
-    the plain and donated entry points). None if the runtime doesn't
-    expose jit cache sizes."""
-    try:
-        return _emulate_batch._cache_size() + _emulate_batch_donated._cache_size()
-    except AttributeError:
-        return None
+    """Number of compiled emulation entry points held by the unified
+    cache (every geometry, single runs and vmapped sweeps alike). Kept
+    for delta-style assertions; per-geometry sessions should read
+    ``Engine.compile_count``."""
+    return entry_cache_count()
 
 
-def stack_params(points: list[DesignPoint]) -> RuntimeParams:
+def stack_params(points):
     """Stack per-point RuntimeParams into one pytree with a leading
-    point axis (the vmap axis)."""
-    ps = [p.params for p in points]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+    point axis (moved to ``repro.engine``; re-exported)."""
+    from repro.engine import stack_params as _stack_params
+
+    return _stack_params(points)
 
 
 def sweep_mesh():
-    """A 1-D device mesh over every local device, for sharded sweeps."""
-    from repro.launch.mesh import make_dev_mesh
+    """A 1-D device mesh over every local device, for sharded sweeps
+    (moved to ``repro.engine``; re-exported)."""
+    from repro.engine import sweep_mesh as _sweep_mesh
 
-    return make_dev_mesh(model=1)
-
-
-def _pad_to_multiple(params: RuntimeParams, n: int, mult: int):
-    pad = (-n) % mult
-    if pad == 0:
-        return params, 0
-    padded = jax.tree.map(
-        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
-        params,
-    )
-    return padded, pad
+    return _sweep_mesh()
 
 
 def run_sweep(
@@ -94,70 +59,32 @@ def run_sweep(
     states=None,
     donate: bool = False,
 ) -> SweepResult:
-    """Evaluate every design point of ``spec`` on ``trace``.
+    """Deprecated — use ``repro.Engine.sweep`` (and
+    ``Engine.continue_sweep`` for ``states=`` continuations, which also
+    composes with ``mesh=``).
 
-    All points share one ``emulate`` compilation (they must agree on
-    ``config.static_key``; :func:`build_points` enforces this). Each
-    point starts from a fresh per-point initial state — the tier split is
-    a runtime parameter, so the redirection table differs per point.
-
-    ``mesh``: None runs on the default device; ``"auto"`` builds a 1-D
-    mesh over all local devices; an explicit ``jax.sharding.Mesh`` shards
-    the point axis over its first axis. The point count is padded to a
-    multiple of the mesh size (padding replicates the last point and is
-    dropped from the results).
-
-    ``states``: stacked per-point ``EmulatorState`` (a previous run's
-    ``SweepResult.states``) to continue an incremental sweep from instead
-    of fresh state. With ``donate=True`` the states' buffers (every
-    point's packed table) are donated and updated in place rather than
-    copied — the passed-in states are CONSUMED and must not be reused.
-    ``mesh`` is unsupported with ``states`` (shard/pad them yourself).
+    Evaluates every design point of ``spec`` on ``trace`` in one
+    compiled, vmapped emulation; see :meth:`repro.Engine.sweep` for the
+    full parameter semantics (this wrapper forwards them verbatim, with
+    the historical ``donate=False`` default).
     """
+    warnings.warn(
+        "legacy run_sweep() is deprecated: drive the platform through the "
+        "session API — Engine(cfg).sweep(spec, trace, mesh=...) / "
+        "Engine.continue_sweep(result, trace) (see repro.Engine)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.engine import Engine
+
     points = spec if isinstance(spec, (list, tuple)) else build_points(spec)
     points = list(points)
     if not points:
         raise ValueError("empty sweep")
-    if donate and states is None:
-        raise ValueError(
-            "donate=True requires states=... (a previous SweepResult.states): "
-            "donation aliases the carried per-point states into the outputs, "
-            "and a fresh-state sweep has nothing to donate — without states= "
-            "the flag used to be silently ignored"
-        )
     keys = {static_key(p.cfg) for p in points}
     if len(keys) > 1:
         raise ValueError(f"points disagree on static geometry: {keys}")
     # Key the compilation on static geometry only: sweeps whose bases
     # differ in runtime fields share one executable.
-    cfg = canonical_config(points[0].cfg)
-
-    # Compile the policy switch only over policies actually present;
-    # remap each point's policy_id into that restricted registry.
-    registry = []
-    for p in points:
-        if p.cfg.policy not in registry:
-            registry.append(p.cfg.policy)
-    registry = tuple(registry)
-    ids = jnp.asarray([registry.index(p.cfg.policy) for p in points], jnp.int32)
-
-    padded, valid = pad_trace(cfg, trace)
-    params = stack_params(points)._replace(policy_id=ids)
-
-    n = len(points)
-    n_padded = 0
-    if mesh == "auto":
-        mesh = sweep_mesh()
-    if mesh is not None and states is not None:
-        raise ValueError("continued sweeps (states=...) don't support mesh=")
-    if mesh is not None:
-        axis = mesh.axis_names[0]
-        params, n_padded = _pad_to_multiple(params, n, mesh.devices.shape[0])
-        sharding = NamedSharding(mesh, PartitionSpec(axis))
-        params = jax.device_put(params, sharding)
-
-    fn = _emulate_batch_donated if donate else _emulate_batch
-    states, outs = fn(cfg, registry, padded, valid, params, states)
-    if n_padded:
-        states, outs = jax.tree.map(lambda x: x[:n], (states, outs))
-    return SweepResult(points=points, states=states, outs=outs)
+    engine = Engine(canonical_config(points[0].cfg))
+    return engine.sweep(points, trace, mesh=mesh, states=states, donate=donate)

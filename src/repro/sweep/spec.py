@@ -79,6 +79,11 @@ class SweepSpec:
     link_lats: tuple[int, ...] = ()
     extra_axes: tuple[tuple[str, tuple], ...] = ()
 
+    def build(self) -> list[DesignPoint]:
+        """Expand the grid (:func:`build_points` as a method — handy when
+        passing explicit point lists to ``repro.Engine.sweep``)."""
+        return build_points(self)
+
 
 def _with_fast_fraction(cfg: EmulatorConfig, frac: float) -> EmulatorConfig:
     n = cfg.n_pages

@@ -1,0 +1,461 @@
+"""The session API (`repro.Engine`) correctness contract:
+
+* Engine.run / Engine.sweep are BITWISE identical to the legacy
+  `emulate` / `run_sweep` wrappers across bank_resolver x
+  fuse_swap_gather x donate combos (the wrappers delegate, the tests
+  pin it);
+* `run_stream` over K segments — equal-size or ragged — is bitwise
+  identical to one concatenated `run`;
+* mesh-sharded, donated continued sweeps equal the single long
+  unsharded sweep (the ROADMAP states-x-mesh composition item);
+* the unified entry-point cache makes same-geometry Engines reuse
+  executables (Engine.compile_count — no recompile regression);
+* the frozen PolicyRegistry snapshot is immune to later global
+  registrations;
+* chunk=1 Engine runs match the sequential software oracle.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_trace_arrays
+from repro import Engine, PolicyRegistry
+from repro.core import (Trace, emulate, emulate_channels, pad_trace,
+                        run_trace, small_platform)
+from repro.core import policies as policies_lib
+from repro.sims import trace_sim
+from repro.sweep import SweepSpec, build_points, run_sweep
+
+
+def _trace(cfg, n, seed=0, **kw):
+    arrays = make_trace_arrays(cfg, n, np.random.default_rng(seed), **kw)
+    return Trace(*(jnp.asarray(x) for x in arrays))
+
+
+def _legacy(call, *args, **kw):
+    """Run a deprecated wrapper, asserting (and swallowing) its warning."""
+    with pytest.warns(DeprecationWarning, match="legacy"):
+        return call(*args, **kw)
+
+
+def _assert_state_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.table), np.asarray(b.table))
+    assert int(a.clock) == int(b.clock)
+    assert int(a.clock_ptr) == int(b.clock_ptr)
+    assert int(a.dma.swaps_done) == int(b.dma.swaps_done)
+
+
+@pytest.mark.parametrize("knobs", [
+    dict(bank_resolver="dense", fuse_swap_gather=False),
+    dict(bank_resolver="dense", fuse_swap_gather=True),
+    dict(bank_resolver="segmented", fuse_swap_gather=False),
+    dict(bank_resolver="segmented", fuse_swap_gather=True),
+])
+@pytest.mark.parametrize("donate", [False, True])
+def test_engine_run_bitwise_matches_legacy_emulate(knobs, donate):
+    cfg = small_platform(chunk=16, hot_threshold=2, decay_every=8, **knobs)
+    t = _trace(cfg, 160, hot_fraction=0.5)
+    padded, valid = pad_trace(cfg, t)
+    engine = Engine(cfg)
+
+    # fresh-state run
+    want_state, want_outs = _legacy(emulate, cfg, padded, valid)
+    got_state, got_outs = engine.run(t)
+    for k in ("returns", "device", "latency"):
+        np.testing.assert_array_equal(np.asarray(got_outs[k]),
+                                      np.asarray(want_outs[k]))
+    _assert_state_equal(got_state, want_state)
+
+    # continued run, with/without donation
+    s_legacy = _legacy(emulate, cfg, padded, valid)[0]
+    want2 = _legacy(emulate, cfg, padded, valid, s_legacy, donate=donate)
+    got2 = engine.run(t, state=got_state, donate=donate)
+    np.testing.assert_array_equal(np.asarray(got2.outs["returns"]),
+                                  np.asarray(want2[1]["returns"]))
+    _assert_state_equal(got2.state, want2[0])
+    if donate:  # the passed-in state was consumed (session contract)
+        with pytest.raises(RuntimeError):
+            np.asarray(got_state.table)
+
+
+def test_engine_run_donates_passed_state_by_default():
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(cfg, 96)
+    engine = Engine(cfg)
+    s0, _ = engine.run(t)
+    s1, _ = engine.run(t, state=s0)
+    with pytest.raises(RuntimeError):
+        np.asarray(s0.table)
+    # donate=False keeps the caller's state readable
+    s2, _ = engine.run(t, state=s1, donate=False)
+    np.asarray(s1.table)
+    assert int(s2.clock) > int(s1.clock)
+    # explicit donate=True with nothing to donate raises (same guard as
+    # the legacy wrappers) instead of being silently dropped
+    with pytest.raises(ValueError, match="donate=True requires state="):
+        engine.run(t, donate=True)
+    with pytest.raises(ValueError, match="donate=True requires state="):
+        engine.run_stream([t], donate=True)
+
+
+@pytest.mark.parametrize("seg_lens", [
+    (48, 48, 48),          # equal chunk-multiple segments: one executable
+    (40, 25, 31, 48),      # ragged: remainders re-chunked across segments
+    (7, 3, 134),           # sub-chunk segments carried forward
+])
+def test_run_stream_bitwise_matches_concatenated_run(seg_lens):
+    cfg = small_platform(chunk=16, hot_threshold=2, decay_every=8)
+    t = _trace(cfg, sum(seg_lens), hot_fraction=0.5)
+    engine = Engine(cfg)
+    want_state, want_outs = engine.run(t)
+
+    segs, at = [], 0
+    for ln in seg_lens:
+        segs.append(Trace(*(x[at:at + ln] for x in t)))
+        at += ln
+    got_state, got_outs = engine.run_stream(iter(segs))
+    for k in ("returns", "device", "latency"):
+        np.testing.assert_array_equal(np.asarray(got_outs[k]),
+                                      np.asarray(want_outs[k]))
+    _assert_state_equal(got_state, want_state)
+
+
+def test_run_stream_continues_and_consumes_state():
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(cfg, 96)
+    engine = Engine(cfg)
+    t2 = Trace(*(jnp.concatenate([x, x]) for x in t))
+    want_state, want_outs = engine.run(t2)
+
+    s0, first_outs = engine.run(t)
+    got_state, got_outs = engine.run_stream([t], state=s0)
+    np.testing.assert_array_equal(np.asarray(got_outs["returns"]),
+                                  np.asarray(want_outs["returns"][96:]))
+    _assert_state_equal(got_state, want_state)
+    with pytest.raises(RuntimeError):   # donated by default
+        np.asarray(s0.table)
+
+
+def test_engine_sweep_bitwise_matches_legacy_run_sweep():
+    base = small_platform(chunk=16, hot_threshold=2, decay_every=8)
+    spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram"),
+                     fast_fractions=(0.125, 0.25),
+                     policies=("static", "hotness"), link_lats=(600, 100))
+    # trace length 144 (not 160): keeps this grid's entry-cache key
+    # distinct from test_sweep's, whose compile_count delta asserts ==1
+    t = _trace(base, 144, hot_fraction=0.5)
+    engine = Engine(base)
+    got = engine.sweep(spec, t)
+    want = _legacy(run_sweep, spec, t)
+    for k in ("returns", "device", "latency"):
+        np.testing.assert_array_equal(np.asarray(got.outs[k]),
+                                      np.asarray(want.outs[k]))
+    np.testing.assert_array_equal(np.asarray(got.states.table),
+                                  np.asarray(want.states.table))
+    assert [r["label"] for r in got.rows()] == \
+        [r["label"] for r in want.rows()]
+
+
+def test_engine_sweep_accepts_stacked_params():
+    """spec_or_params: a pre-stacked RuntimeParams batch sweeps directly
+    (policy_id indexing the engine registry)."""
+    import jax
+
+    base = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(base, 96)
+    engine = Engine(base)
+    cfgs = [base.with_(hot_threshold=h) for h in (2, 8)]
+    params = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[engine.params._replace(
+            hot_threshold=jnp.int32(c.hot_threshold)) for c in cfgs])
+    res = engine.sweep(params, t)
+    assert len(res) == 2
+    for i, c in enumerate(cfgs):
+        one = Engine(c).run(t)
+        np.testing.assert_array_equal(np.asarray(res.outs["returns"][i]),
+                                      np.asarray(one.outs["returns"]))
+
+    # Regression: continuing a stacked-params sweep must replay the
+    # RECORDED params (the placeholder points carry only the base cfg —
+    # rebuilding from them silently ran every point at default knobs).
+    cont = engine.continue_sweep(res, t, donate=False)
+    for i, c in enumerate(cfgs):
+        e = Engine(c)
+        s = e.run(t, donate=False).state
+        want = e.run(t, state=s).state
+        np.testing.assert_array_equal(np.asarray(cont.states.table[i]),
+                                      np.asarray(want.table))
+        assert int(cont.states.clock[i]) == int(want.clock)
+
+
+def test_mesh_sharded_donated_continued_sweep_matches_long_run():
+    """The ROADMAP composition item: continued sweeps with donated,
+    device-sharded stacked states == the single long unsharded sweep."""
+    base = small_platform(chunk=16, hot_threshold=2, decay_every=8)
+    points = build_points(SweepSpec(
+        base=base, technologies=("3dxpoint", "stt-ram", "mram"),
+        policies=("static", "hotness")))
+    t = _trace(base, 96, hot_fraction=0.5)
+    n = len(t)
+    t2 = Trace(*(jnp.concatenate([x, x]) for x in t))
+    engine = Engine(base)
+
+    full = engine.sweep(points, t2)
+    # point count (6) deliberately not a multiple of any >1 device count,
+    # exercising the state/params co-padding path
+    first = engine.sweep(points, t, mesh="auto")
+    cont = engine.continue_sweep(first, t, mesh="auto")   # donate=True
+    np.testing.assert_array_equal(np.asarray(cont.outs["returns"]),
+                                  np.asarray(full.outs["returns"][:, n:]))
+    np.testing.assert_array_equal(np.asarray(cont.states.table),
+                                  np.asarray(full.states.table))
+    np.testing.assert_array_equal(np.asarray(cont.states.clock),
+                                  np.asarray(full.states.clock))
+
+    # and the unsharded continuation agrees too
+    first2 = engine.sweep(points, t)
+    cont2 = engine.continue_sweep(first2, t)
+    np.testing.assert_array_equal(np.asarray(cont2.states.table),
+                                  np.asarray(full.states.table))
+
+
+def test_same_geometry_engines_share_executables():
+    """No-recompile regression: a second Engine over the same static
+    geometry (different runtime knobs) must add zero compiled programs,
+    and repeated sweeps/runs hit the unified cache."""
+    cfg = small_platform(chunk=8, hot_threshold=2)
+    t = _trace(cfg, 64)
+    e1 = Engine(cfg)
+    e1.run(t)
+    e1.sweep(SweepSpec(base=cfg, link_lats=(600, 100)), t)
+    count = e1.compile_count
+    assert count >= 2
+
+    e2 = Engine(cfg.with_(hot_threshold=9, link_lat=100))  # same geometry
+    assert e2.compile_count == count
+    e2.run(t)
+    e2.sweep(SweepSpec(base=cfg.with_(decay_every=4), link_lats=(600, 100)), t)
+    assert e2.compile_count == count
+
+    # a different geometry compiles separately and is counted separately
+    # (n_banks=3 keeps this geometry unique to the test — the cache is
+    # process-global, so assertions stay delta-based)
+    e3 = Engine(cfg.with_(n_banks=3))
+    c3 = e3.compile_count
+    e3.run(t)
+    assert e3.compile_count == c3 + 1
+    assert e2.compile_count == count
+
+
+def test_frozen_registry_is_immune_to_late_registration():
+    cfg = small_platform(chunk=8, hot_threshold=2)
+    t = _trace(cfg, 64)
+    engine = Engine(cfg)
+    want = engine.run(t, donate=False)
+    original = policies_lib.POLICIES.get("hotness")
+    try:
+        # Re-register the active policy with a do-nothing impostor AFTER
+        # the session snapshot: the session must be unaffected...
+        @policies_lib.register("hotness")
+        def impostor(cfg, params, table, ptr, pages, is_write, valid):
+            return policies_lib.static_policy(cfg, params, table, ptr,
+                                              pages, is_write, valid)
+
+        assert "hotness" not in [n for n, f in zip(engine.registry.names,
+                                                   engine.registry.fns)
+                                 if f is impostor]
+        again = engine.run(t, donate=False)
+        np.testing.assert_array_equal(np.asarray(again.outs["returns"]),
+                                      np.asarray(want.outs["returns"]))
+        assert int(again.state.dma.swaps_done) == \
+            int(want.state.dma.swaps_done) > 0
+
+        # ...while a NEW session snapshots the impostor (never migrates)
+        fresh = Engine(cfg)
+        assert fresh.registry != engine.registry
+        other = fresh.run(t, donate=False)
+        assert int(other.state.dma.swaps_done) == 0
+    finally:
+        policies_lib.POLICIES["hotness"] = original
+
+
+def test_registry_snapshot_and_subset():
+    reg = PolicyRegistry.snapshot()
+    assert "hotness" in reg and reg.index("hotness") == \
+        policies_lib.policy_id("hotness")
+    sub = reg.subset(["hotness", "static"])
+    assert sub.names == ("hotness", "static")
+    assert sub.fns[0] is policies_lib.POLICIES["hotness"]
+    with pytest.raises(KeyError, match="not in this registry"):
+        sub.index("stream")
+    with pytest.raises(KeyError, match="unknown policy"):
+        PolicyRegistry.snapshot(("typo",))
+
+
+def test_engine_chunk1_matches_trace_sim_oracle():
+    cfg = small_platform(chunk=1, hot_threshold=2, decay_every=8)
+    arrays = make_trace_arrays(cfg, 200, np.random.default_rng(3))
+    t = Trace(*(jnp.asarray(x) for x in arrays))
+    state, outs = Engine(cfg).run(t)
+    oracle = trace_sim.simulate(cfg, *arrays)
+    np.testing.assert_array_equal(np.asarray(outs["returns"]),
+                                  oracle.returns)
+    np.testing.assert_array_equal(np.asarray(outs["device"]), oracle.device)
+    assert int(state.clock) == oracle.clock
+    assert int(state.dma.swaps_done) == oracle.swaps
+
+
+def test_engine_pads_and_trims_unaligned_traces():
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(cfg, 90)    # not a chunk multiple
+    engine = Engine(cfg)
+    state, outs = engine.run(t)
+    assert outs["returns"].shape == (90,)
+    padded, valid = pad_trace(cfg, t)
+    want_state, want_outs = _legacy(emulate, cfg, padded, valid)
+    np.testing.assert_array_equal(np.asarray(outs["returns"]),
+                                  np.asarray(want_outs["returns"][:90]))
+    _assert_state_equal(state, want_state)
+    with pytest.raises(ValueError, match="chunk-multiple"):
+        engine.run(t, valid=jnp.ones(90, bool))
+
+
+def test_legacy_wrappers_warn_and_delegate():
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(cfg, 64)
+    padded, valid = pad_trace(cfg, t)
+    _legacy(emulate, cfg, padded, valid)
+    _legacy(run_trace, cfg, t)
+    _legacy(run_sweep, SweepSpec(base=cfg, link_lats=(600, 100)), t)
+    per = 32
+    traces = Trace(*(jnp.stack([x[:per], x[per:2 * per]]) for x in t))
+    _legacy(emulate_channels, cfg, traces)
+    # run_trace keeps its padded-outputs contract and summary dict
+    state, outs, summ = _legacy(run_trace, cfg, _trace(cfg, 60))
+    assert outs["returns"].shape == (64,)
+    assert "mean_read_latency_cyc" in summ
+
+
+def test_run_channels_matches_per_channel_runs():
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    params = Engine(cfg).params._replace(slow_read_lat=jnp.int32(9999))
+    per = 64
+    t = _trace(cfg, 2 * per)
+    traces = Trace(*(jnp.stack([x[:per], x[per:]]) for x in t))
+    engine = Engine(cfg)
+    states, outs = engine.run_channels(traces, params=params)
+    for i in range(2):
+        one = Trace(*(x[i] for x in traces))
+        want_state, want_outs = engine.run(one, params=params)
+        np.testing.assert_array_equal(np.asarray(outs["returns"][i]),
+                                      np.asarray(want_outs["returns"]))
+        assert int(states.clock[i]) == int(want_state.clock)
+
+
+def test_tiered_cache_pins_and_reports_contract_hit_rate():
+    """The §III-G serving contract: latency-critical KV pages allocate
+    with pin=True, never migrate, and report() exposes the pinned-page
+    fast hit rate."""
+    from repro.core import EmulatorConfig, FAST
+    from repro.core import table as table_lib
+    from repro.memtier.tiered_cache import TieredKVAccounting
+
+    cfg = EmulatorConfig(n_fast_pages=4, n_slow_pages=60, chunk=16,
+                         policy="hotness", hot_threshold=2)
+    tier = TieredKVAccounting(cfg, n_layers=2, positions_per_page=16,
+                              bytes_per_position=64, pin_pages_per_seq=1)
+    for step in range(12):
+        trace = tier.access_trace([0, 1, 2], [16 * (1 + step % 3) + step] * 3)
+        tier.account(trace)
+    rep = tier.report()
+    assert rep["pinned_pages"] == 3
+    assert rep["pinned_accesses"] > 0
+    assert 0.0 <= rep["pinned_fast_hit_rate"] <= 1.0
+    # contracted pages that landed fast are still fast (pins held)
+    table = np.asarray(tier.state.table)
+    for page in tier._pinned:
+        flags = table[page, table_lib.FLAGS]
+        assert flags & table_lib.PINNED
+        if flags & table_lib.PIN_FAST:
+            assert table[page, table_lib.DEVICE] == FAST
+    # releasing a sequence releases its contract
+    tier.free_sequence(0)
+    assert tier.report()["pinned_pages"] == 2
+
+
+def test_tiered_cache_pins_recycled_page_to_its_current_tier():
+    """Regression: the pin bit must come from the page's current DEVICE
+    lane, not its id-boundary tier — a fast-id page that migration
+    demoted to NVM gets PIN_SLOW (keeping the table invariant), not a
+    PIN_FAST stamp on a slow-resident page."""
+    from repro.core import EmulatorConfig, SLOW, check_table
+    from repro.core import table as table_lib
+    from repro.memtier.tiered_cache import TieredKVAccounting
+
+    cfg = EmulatorConfig(n_fast_pages=4, n_slow_pages=28, chunk=16,
+                         policy="static")
+    tier = TieredKVAccounting(cfg, n_layers=1, positions_per_page=16,
+                              bytes_per_position=64, pin_pages_per_seq=1)
+    assert tier._page_for(0, 0) == 0      # seq 0 takes fast page 0
+    # Hand-demote fast page 1 (the allocator's next FAST-pool pop): swap
+    # its mapping with slow page `s`, as a completed migration would.
+    s = cfg.n_fast_pages + 5
+    t = tier.state.table
+    fs = int(t[s, table_lib.FRAME])
+    t = t.at[1, table_lib.DEVICE].set(SLOW).at[1, table_lib.FRAME].set(fs)
+    t = t.at[s, table_lib.DEVICE].set(0).at[s, table_lib.FRAME].set(1)
+    t = t.at[1, table_lib.OWNER].set(s)   # fast frame 1 now owned by s
+    tier.state = tier.state._replace(table=t)
+
+    assert tier._page_for(1, 0) == 1      # recycled fast-id page, now SLOW
+    table = np.asarray(tier.state.table)
+    assert table[1, table_lib.FLAGS] == table_lib.PIN_SLOW
+    check_table(cfg, table)               # pin agrees with DEVICE lane
+
+    # Regression: a page that is a member of the DMA's in-flight swap is
+    # pinned to the tier the (unconditional) commit will move it to —
+    # page 1 is mid-promotion (page_a), so despite DEVICE==SLOW right
+    # now it must get PIN_FAST, not a pin that breaks on swap commit.
+    tier2 = TieredKVAccounting(cfg, n_layers=1, positions_per_page=16,
+                               bytes_per_position=64, pin_pages_per_seq=1)
+    assert tier2._page_for(0, 0) == 0
+    tier2.state = tier2.state._replace(table=t)   # page 1 demoted, as above
+    import jax.numpy as _jnp
+    tier2.state = tier2.state._replace(dma=tier2.state.dma._replace(
+        active=_jnp.int32(1), page_a=_jnp.int32(1),
+        page_b=_jnp.int32(s)))
+    assert tier2._page_for(1, 0) == 1
+    table2 = np.asarray(tier2.state.table)
+    assert table2[1, table_lib.FLAGS] == table_lib.PIN_FAST
+
+
+def test_engine_default_params_require_registry_policy():
+    """Regression: a registry restricted past cfg.policy must not fall
+    back to the stale global policy_id (which the switch clamps onto a
+    different policy) — default params raise; explicit params= work."""
+    cfg = small_platform(chunk=16, hot_threshold=2)   # policy "hotness"
+    t = _trace(cfg, 64, hot_fraction=0.6)
+    engine = Engine(cfg, registry=("static",))
+    with pytest.raises(ValueError, match="no default design point"):
+        engine.run(t)
+    params = Engine(cfg, registry=None).params._replace(
+        policy_id=jnp.int32(0))
+    state, _ = engine.run(t, params=params)
+    assert int(state.dma.swaps_done) == 0   # really ran "static"
+
+
+def test_internal_callers_raise_no_deprecation_warnings():
+    """examples/benchmarks/serving must be migrated: exercising the
+    session API end-to-end emits no DeprecationWarning from repro code
+    (the pytest config escalates those to errors)."""
+    cfg = small_platform(chunk=16, hot_threshold=2)
+    t = _trace(cfg, 96)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        engine = Engine(cfg)
+        engine.run(t)
+        res = engine.sweep(SweepSpec(base=cfg, link_lats=(600, 100)), t)
+        engine.continue_sweep(res, t)
+        engine.run_stream([t, t])
