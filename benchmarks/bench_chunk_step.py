@@ -18,10 +18,11 @@ Runnable standalone::
     PYTHONPATH=src python -m benchmarks.bench_chunk_step --quick \
         --out BENCH_chunk_step.json [--check-against BENCH_chunk_step.json]
 
-``--check-against`` is the CI soft perf-regression gate: it WARNS (GitHub
-``::warning::`` annotation, exit code stays 0) when the default-path
-time exceeds the committed baseline by more than the tolerance — CI
-runners are noisy, so this is a trend signal, not a hard gate.
+``--check-against`` is the tiered CI perf-regression gate shared by
+every bench (``benchmarks.schema.check_against``): a GitHub
+``::warning::`` past the warn tolerance, a failing ``::error::`` past
+the fail tolerance — CI runners are noisy, so the smoke job passes a
+wide fail tolerance for this wall-clock metric.
 """
 from __future__ import annotations
 
@@ -31,7 +32,8 @@ import time
 import jax
 
 from benchmarks.bench_throughput import _bench  # shared warm-then-average
-from benchmarks.schema import bench_payload, load_bench_json, write_bench_json
+from benchmarks.schema import (add_check_args, bench_payload, run_check,
+                               write_bench_json)
 from repro import Engine
 from repro.core import paper_platform
 from repro.trace import TraceSpec, generate
@@ -115,30 +117,6 @@ def run(verbose=True, n=32_768, reps=5, out=None):
     return summary
 
 
-def check_against(summary: dict, baseline_path: str, tolerance: float,
-                  metric: str = "us_per_req_default") -> bool:
-    """Soft perf-regression check vs a committed baseline payload.
-    Returns True when within tolerance; prints a GitHub ``::warning::``
-    annotation (never fails) otherwise — including when the baseline is
-    missing or doesn't carry the metric (older schema)."""
-    try:
-        base = load_bench_json(baseline_path)
-        want = base["metrics"][metric]
-    except (OSError, ValueError, KeyError, TypeError) as e:
-        print(f"::warning title=chunk-step perf baseline unusable::"
-              f"{baseline_path}: {e!r} — skipping the soft perf check")
-        return True
-    got = summary["metrics"][metric]
-    if got <= want * tolerance:
-        print(f"  perf check OK: {metric} {got:.3f} vs baseline "
-              f"{want:.3f} (x{tolerance:.2f} tolerance)")
-        return True
-    print(f"::warning title=chunk-step perf regression::{metric} "
-          f"{got:.3f} us/req exceeds committed baseline {want:.3f} "
-          f"us/req by more than x{tolerance:.2f}")
-    return False
-
-
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
     ap.add_argument("--quick", action="store_true",
@@ -146,16 +124,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help="write the standardized BENCH_chunk_step.json")
-    ap.add_argument("--check-against", default=None,
-                    help="soft perf-regression check vs a committed "
-                         "BENCH_chunk_step.json (warns, never fails)")
-    ap.add_argument("--tolerance", type=float, default=1.5,
-                    help="regression threshold multiplier (default 1.5x)")
+    add_check_args(ap)
     args = ap.parse_args()
     n = args.requests or (8_192 if args.quick else 32_768)
     summary = run(n=n, reps=2 if args.quick else 5, out=args.out)
-    if args.check_against:
-        check_against(summary, args.check_against, args.tolerance)
+    run_check(summary, args, ["us_per_req_default"])
 
 
 if __name__ == "__main__":

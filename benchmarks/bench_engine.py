@@ -23,7 +23,8 @@ import time
 
 import jax
 
-from benchmarks.schema import bench_payload, write_bench_json
+from benchmarks.schema import (add_check_args, bench_payload, run_check,
+                               write_bench_json)
 from repro import Engine
 from repro.core import paper_platform
 from repro.trace import TraceSpec, generate
@@ -124,10 +125,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--out", default=None,
                     help="write the standardized BENCH_engine.json")
+    add_check_args(ap)
     args = ap.parse_args()
     summary = run(n=args.requests or 4_096, reps=10 if args.quick else 50)
     if args.out:
         print(f"  written to {write_bench_json(args.out, summary)}")
+    run_check(summary, args,
+              ["us_per_call_engine", "warm_construct_recompiles"])
 
 
 if __name__ == "__main__":

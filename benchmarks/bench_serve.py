@@ -1,0 +1,218 @@
+"""Serving-SLO benchmark: continuous batching at 100k+ live sequences.
+
+Drives the ``repro.serve`` continuous-batching scheduler over the HMMU
+session with mixed prefill/decode traffic — the workload the ROADMAP's
+serving front-end item calls for: ≥100k concurrent sequences, bucketed
+padded dispatch (every shape pre-compiled; zero recompiles after warmup,
+asserted via ``Engine.compile_count``), per-sequence pin contracts, and
+cold-KV eviction under real memory pressure (the watermarks are set so
+the live page demand crosses them).
+
+Two profiles, both in the committed ``BENCH_serve.json``:
+
+* **full** (default): 110k sequences through a 100k-live-slot scheduler
+  on a serving-size geometry — the headline ``metrics``;
+* **quick** (``--quick``, CI): the same shape scaled to seconds — the
+  ``quick_metrics`` map. The emulated numbers (p50/p99 latency, SLO
+  attainment, pinned fast-hit rate, evictions) are **deterministic**,
+  so CI gates ``--quick --check-against BENCH_serve.json`` like-for-like
+  against the committed ``quick_metrics`` at the default tight
+  tolerances (schema.check_against); wall-clock is reported, not gated.
+
+Runnable standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick \
+        --out BENCH_serve.json --bucket-table serve_buckets.csv \
+        [--check-against BENCH_serve.json] [--summary-md summary.md]
+
+Per-sequence latency is the emulated span from first prefill issue to
+last decode return, in us at the 1 GHz fabric clock.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.schema import (add_check_args, bench_payload, run_check,
+                               write_bench_json)
+from repro import Engine
+from repro.core import paper_platform
+from repro.serve import ContinuousBatchingScheduler, ServeConfig
+
+# Deterministic emulated metrics, gated like-for-like against the
+# committed baseline; rates regress downward.
+GATED_METRICS = ["p50_latency_us", "p99_latency_us", "slo_attainment",
+                 "pinned_fast_hit_rate", "recompiles_after_warmup"]
+HIGHER_BETTER = ("slo_attainment", "pinned_fast_hit_rate")
+
+# Fast tier sized to hold every pin contract; slow tier sized so the
+# live KV demand crosses the eviction watermarks (pressure is real).
+PROFILES = {
+    "full": dict(
+        geometry=dict(n_fast_pages=131072, n_slow_pages=163840, chunk=512),
+        serve=dict(sorted_batch_sizes=(8192, 16384, 32768),
+                   max_live_seqs=100_000, max_live_batches=2,
+                   max_admit_per_step=4096, pin_pages_per_seq=1,
+                   max_pages_per_seq=6, positions_per_page=64,
+                   window_pages=2, prefill_writes_per_page=2,
+                   free_low_frac=0.15, free_high_frac=0.18,
+                   slo_latency_us=120_000.0, pinned_slo=0.90),
+        n_seqs=110_000, decode_lo=8, decode_hi=41, min_live=100_000),
+    "quick": dict(
+        geometry=dict(n_fast_pages=8192, n_slow_pages=10240, chunk=256),
+        serve=dict(sorted_batch_sizes=(1024, 2048, 4096),
+                   max_live_seqs=5_000, max_live_batches=2,
+                   max_admit_per_step=512, pin_pages_per_seq=1,
+                   max_pages_per_seq=6, positions_per_page=16,
+                   window_pages=2, prefill_writes_per_page=2,
+                   free_low_frac=0.28, free_high_frac=0.32,
+                   slo_latency_us=5_000.0, pinned_slo=0.90),
+        n_seqs=6_000, decode_lo=8, decode_hi=25, min_live=5_000),
+}
+
+
+def _workload(n_seqs: int, lo: int, hi: int, seed: int = 0):
+    """Mixed prompts: mostly short, a long tail of 4-page prompts whose
+    cold middle pages become the eviction victims."""
+    rng = np.random.default_rng(seed)
+    prompt = rng.choice([1, 2, 3, 4], size=n_seqs, p=[0.6, 0.2, 0.1, 0.1])
+    decode = rng.integers(lo, hi, size=n_seqs)
+    return prompt.astype(np.int32), decode.astype(np.int32)
+
+
+def run_profile(name: str, verbose: bool = True) -> tuple[dict, dict]:
+    """Run one profile; returns (metrics, per_bucket table)."""
+    prof = PROFILES[name]
+    cfg = paper_platform().with_(**prof["geometry"])
+    engine = Engine(cfg)
+    sched = ContinuousBatchingScheduler(engine, ServeConfig(**prof["serve"]))
+    t0 = time.time()
+    sched.warmup()
+    warm_s = time.time() - t0
+    compiles_warm = engine.compile_count
+
+    prompt, decode = _workload(prof["n_seqs"], prof["decode_lo"],
+                               prof["decode_hi"])
+    t0 = time.time()
+    sched.submit(prompt, decode)
+    sched.run()
+    wall_s = time.time() - t0
+    rep = sched.report()
+
+    recompiles = engine.compile_count - compiles_warm
+    assert recompiles == 0, \
+        f"{recompiles} recompiles after warmup — a dispatch shape escaped " \
+        f"the bucket list {prof['serve']['sorted_batch_sizes']}"
+    assert rep.live_seqs_high_water >= prof["min_live"], \
+        f"only {rep.live_seqs_high_water} concurrent sequences " \
+        f"(wanted >= {prof['min_live']})"
+    assert rep.n_sequences == prof["n_seqs"]
+
+    metrics = {
+        "n_sequences": rep.n_sequences,
+        "n_mem_requests": rep.n_mem_requests,
+        "n_dispatches": rep.n_dispatches,
+        "live_seqs_high_water": rep.live_seqs_high_water,
+        "inflight_high_water": rep.inflight_high_water,
+        "p50_latency_us": rep.p50_latency_us,
+        "p99_latency_us": rep.p99_latency_us,
+        "mean_latency_us": rep.mean_latency_us,
+        "slo_latency_us": rep.slo_latency_us,
+        "slo_attainment": rep.slo_attainment,
+        "pinned_accesses": rep.pinned_accesses,
+        "pinned_fast_hit_rate": rep.pinned_fast_hit_rate,
+        "evictions": rep.evictions,
+        "refetches": rep.refetches,
+        "recompiles_after_warmup": recompiles,
+        "warmup_s": warm_s,
+        "wall_s": wall_s,
+        "req_per_s": rep.n_mem_requests / wall_s if wall_s else 0.0,
+    }
+    if verbose:
+        print(f"  [{name}] {rep.n_sequences} seqs "
+              f"(peak {rep.live_seqs_high_water} live), "
+              f"{rep.n_mem_requests} requests in {rep.n_dispatches} "
+              f"dispatches, {wall_s:.1f}s wall "
+              f"({metrics['req_per_s']:,.0f} req/s)")
+        print(f"  [{name}] latency p50 {rep.p50_latency_us:.0f} us, "
+              f"p99 {rep.p99_latency_us:.0f} us, SLO({rep.slo_latency_us:.0f} "
+              f"us) attainment {rep.slo_attainment:.3f}")
+        print(f"  [{name}] pinned fast-hit {rep.pinned_fast_hit_rate:.3f} "
+              f"({rep.pinned_accesses} accesses), evictions {rep.evictions}, "
+              f"refetches {rep.refetches}, recompiles {recompiles}")
+    return metrics, rep.per_bucket
+
+
+def write_bucket_table(path: str, per_bucket: dict) -> str:
+    cols = ["dispatches", "requests", "padded", "service_lat_mean_us",
+            "service_lat_max", "pinned_accesses", "pinned_fast_hits"]
+    with open(path, "w") as fh:
+        fh.write(",".join(["size"] + cols) + "\n")
+        for size, row in sorted(per_bucket.items()):
+            fh.write(",".join([str(size)] + [str(row.get(c, ""))
+                                             for c in cols]) + "\n")
+    return path
+
+
+def write_summary_md(path: str, payloads: dict[str, dict]) -> None:
+    """Append the SLO table to a markdown file ($GITHUB_STEP_SUMMARY)."""
+    with open(path, "a") as fh:
+        fh.write("## Serving SLO (bench_serve)\n\n")
+        fh.write("| profile | seqs (peak live) | p50 us | p99 us | "
+                 "SLO attainment | pinned fast-hit | evictions | "
+                 "recompiles |\n|---|---|---|---|---|---|---|---|\n")
+        for name, m in payloads.items():
+            fh.write(f"| {name} | {m['n_sequences']} "
+                     f"({m['live_seqs_high_water']}) "
+                     f"| {m['p50_latency_us']:.0f} | {m['p99_latency_us']:.0f} "
+                     f"| {m['slo_attainment']:.3f} "
+                     f"| {m['pinned_fast_hit_rate']:.3f} | {m['evictions']} "
+                     f"| {m['recompiles_after_warmup']} |\n")
+        fh.write("\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick profile only (CI smoke; deterministic "
+                         "metrics gate like-for-like vs quick_metrics)")
+    ap.add_argument("--out", default=None,
+                    help="write the standardized BENCH_serve.json")
+    ap.add_argument("--bucket-table", default=None,
+                    help="write the per-bucket latency table CSV")
+    ap.add_argument("--summary-md", default=None,
+                    help="append the SLO table to a markdown file "
+                         "($GITHUB_STEP_SUMMARY)")
+    add_check_args(ap)
+    args = ap.parse_args()
+
+    quick_metrics, per_bucket = run_profile("quick")
+    summaries = {"quick": quick_metrics}
+    if args.quick:
+        metrics = quick_metrics
+    else:
+        metrics, per_bucket = run_profile("full")
+        summaries["full"] = metrics
+
+    payload = bench_payload(
+        "serve", metrics,
+        config={k: dict(geometry=p["geometry"], serve=p["serve"],
+                        n_seqs=p["n_seqs"])
+                for k, p in PROFILES.items()},
+        cases=[dict(size=s, **row) for s, row in sorted(per_bucket.items())],
+        quick_metrics=quick_metrics)
+    if args.out:
+        print(f"  written to {write_bench_json(args.out, payload)}")
+    if args.bucket_table:
+        print(f"  bucket table written to "
+              f"{write_bucket_table(args.bucket_table, per_bucket)}")
+    if args.summary_md:
+        write_summary_md(args.summary_md, summaries)
+    run_check(payload, args, GATED_METRICS, higher_better=HIGHER_BETTER,
+              metrics_key="quick_metrics" if args.quick else "metrics")
+
+
+if __name__ == "__main__":
+    main()

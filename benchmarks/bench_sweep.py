@@ -26,7 +26,8 @@ import time
 
 import jax
 
-from benchmarks.schema import bench_payload, write_bench_json
+from benchmarks.schema import (add_check_args, bench_payload, run_check,
+                               write_bench_json)
 from repro import Engine
 from repro.core import paper_platform
 from repro.sweep import SweepSpec, build_points
@@ -131,26 +132,28 @@ def main() -> None:
         help="persist per-point rows (.jsonl -> JSONL, else CSV); repeatable",
     )
     ap.add_argument("--summary-out", default=None, help="write the run summary dict as JSON")
+    add_check_args(ap)
     args = ap.parse_args()
     n = args.requests or (20_000 if args.quick else 100_000)
     summary = run(n_requests=n, out=args.out)
+    payload = bench_payload(
+        "sweep",
+        metrics={
+            "n_requests": n,
+            "n_points": summary["n_points"],
+            "compiles": summary["compiles"],
+            "first_call_s": summary["first_call_s"],
+            "steady_s": summary["steady_s"],
+            "us_per_point_req": summary["us_per_point_req"],
+            "best_amat": summary["best_amat"],
+        },
+        cases=summary["rows"],
+        best_label=summary["best_label"],
+    )
     if args.summary_out:
-        payload = bench_payload(
-            "sweep",
-            metrics={
-                "n_requests": n,
-                "n_points": summary["n_points"],
-                "compiles": summary["compiles"],
-                "first_call_s": summary["first_call_s"],
-                "steady_s": summary["steady_s"],
-                "us_per_point_req": summary["us_per_point_req"],
-                "best_amat": summary["best_amat"],
-            },
-            cases=summary["rows"],
-            best_label=summary["best_label"],
-        )
         write_bench_json(args.summary_out, payload)
         print(f"  summary written to {args.summary_out}")
+    run_check(payload, args, ["us_per_point_req", "compiles"])
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ def main() -> None:
 
     from benchmarks import (bench_chunk_step, bench_engine,
                             bench_latency_fidelity, bench_policies,
-                            bench_request_volume, bench_speedup, bench_sweep,
-                            bench_throughput)
+                            bench_request_volume, bench_serve, bench_speedup,
+                            bench_sweep, bench_throughput)
 
     csv = []
 
@@ -73,6 +73,14 @@ def main() -> None:
     csv.append(("engine_dispatch", f"{em['us_per_call_engine']:.1f}",
                 f"overhead={em['dispatch_overhead_us']:+.1f}us;"
                 f"warm_recompiles={em['warm_construct_recompiles']}"))
+
+    print("== Serving SLO (continuous batching over the tiered KV) ==")
+    sv, _ = bench_serve.run_profile("quick" if args.quick else "full")
+    csv.append(("serve_slo", f"{sv['p99_latency_us']:.0f}",
+                f"slo_attainment={sv['slo_attainment']:.3f};"
+                f"pinned_fast_hit={sv['pinned_fast_hit_rate']:.3f};"
+                f"live_peak={sv['live_seqs_high_water']};"
+                f"recompiles={sv['recompiles_after_warmup']}"))
 
     print("== Emulator throughput (chunk width / channels) ==")
     thr = bench_throughput.run(n=16_384 if args.quick else 65_536)

@@ -17,13 +17,27 @@ runs without per-bench parsing:
 Convention: files live at the repo root as ``BENCH_<name>.json`` and are
 committed when a PR moves a number, giving each benchmark a trajectory in
 git history; CI regenerates them as workflow artifacts on every run.
+
+``check_against`` is the one perf-regression gate every bench shares
+(bench_chunk_step, bench_sweep, bench_engine, bench_serve): it compares
+selected metrics of a fresh payload against the committed baseline and
+grades each on a **tiered** scale — OK within the warn tolerance, a
+GitHub ``::warning::`` annotation above it, a ``::error::`` (and a
+failing exit code via ``run_check``) above the fail tolerance. CI
+runners are noisy, so wall-clock benches pass a wider fail tolerance;
+deterministic metrics (compile counts, emulated latencies, SLO rates)
+gate at the defaults.
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 
 SCHEMA_VERSION = 1
+
+DEFAULT_WARN_TOLERANCE = 1.10   # >10% regression: warn
+DEFAULT_FAIL_TOLERANCE = 2.00   # >2x regression: fail
 
 
 def bench_payload(name: str, metrics: dict, *, config: dict | None = None,
@@ -55,3 +69,89 @@ def write_bench_json(path, payload: dict) -> str:
 def load_bench_json(path) -> dict:
     with open(path) as fh:
         return json.load(fh)
+
+
+def _ratio(got: float, want: float, higher_better: bool) -> float:
+    """Regression ratio, 1.0 = parity, >1 = worse than baseline."""
+    num, den = (want, got) if higher_better else (got, want)
+    if den == 0:
+        return 1.0 if num == 0 else float("inf")
+    return num / den
+
+
+def check_against(summary: dict, baseline_path: str, metrics: list[str], *,
+                  warn_tolerance: float = DEFAULT_WARN_TOLERANCE,
+                  fail_tolerance: float = DEFAULT_FAIL_TOLERANCE,
+                  higher_better: tuple[str, ...] = (),
+                  metrics_key: str = "metrics") -> bool:
+    """Tiered perf-regression gate vs a committed baseline payload.
+
+    Grades each named metric of ``summary[metrics_key]`` against the
+    baseline's: within ``warn_tolerance`` is OK, beyond it prints a
+    GitHub ``::warning::`` annotation, beyond ``fail_tolerance`` prints
+    an ``::error::`` and fails the gate (returns False). Metrics in
+    ``higher_better`` regress downward (hit rates, SLO attainment,
+    speedups). A missing/unreadable baseline or metric soft-skips with a
+    warning — a fresh checkout must not fail on its first run.
+    ``metrics_key`` selects an alternate metrics map in both payloads
+    (bench_serve's like-for-like ``--quick`` profile).
+    """
+    name = summary.get("bench", "bench")
+    try:
+        base = load_bench_json(baseline_path)[metrics_key]
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"::warning title={name} perf baseline unusable::"
+              f"{baseline_path}: {e!r} — skipping the perf gate")
+        return True
+    ok = True
+    for m in metrics:
+        got, want = summary[metrics_key].get(m), base.get(m)
+        if got is None or want is None:
+            print(f"::warning title={name} perf baseline incomplete::"
+                  f"metric {m!r} absent from "
+                  f"{'baseline' if got is not None else 'payload'} — skipped")
+            continue
+        r = _ratio(got, want, m in higher_better)
+        detail = (f"{m} {got:.4g} vs baseline {want:.4g} "
+                  f"(x{r:.2f} regression)")
+        if r <= warn_tolerance:
+            print(f"  perf gate OK: {detail}")
+        elif r <= fail_tolerance:
+            print(f"::warning title={name} perf regression::{detail} "
+                  f"exceeds the x{warn_tolerance:.2f} warn tolerance")
+        else:
+            print(f"::error title={name} perf regression::{detail} "
+                  f"exceeds the x{fail_tolerance:.2f} fail tolerance")
+            ok = False
+    return ok
+
+
+def add_check_args(ap, *, fail_tolerance: float = DEFAULT_FAIL_TOLERANCE,
+                   warn_tolerance: float = DEFAULT_WARN_TOLERANCE) -> None:
+    """The shared ``--check-against`` CLI surface."""
+    ap.add_argument("--check-against", default=None,
+                    help="tiered perf-regression gate vs a committed "
+                         "BENCH_*.json (warn > warn-tolerance, fail > "
+                         "fail-tolerance)")
+    ap.add_argument("--warn-tolerance", type=float, default=warn_tolerance,
+                    help=f"warn threshold multiplier (default "
+                         f"{warn_tolerance:g}x)")
+    ap.add_argument("--fail-tolerance", type=float, default=fail_tolerance,
+                    help=f"fail threshold multiplier (default "
+                         f"{fail_tolerance:g}x)")
+
+
+def run_check(summary: dict, args, metrics: list[str], *,
+              higher_better: tuple[str, ...] = (),
+              metrics_key: str = "metrics") -> None:
+    """Apply the gate per the parsed ``add_check_args`` flags; exits 1
+    on a fail-tier regression."""
+    if not args.check_against:
+        return
+    ok = check_against(summary, args.check_against, metrics,
+                       warn_tolerance=args.warn_tolerance,
+                       fail_tolerance=args.fail_tolerance,
+                       higher_better=higher_better,
+                       metrics_key=metrics_key)
+    if not ok:
+        sys.exit(1)

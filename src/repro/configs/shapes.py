@@ -14,10 +14,10 @@ class Shape:
 
 
 SHAPES = {
-    "train_4k":    Shape("train_4k",    "train",   4_096,   256),
-    "prefill_32k": Shape("prefill_32k", "prefill", 32_768,  32),
-    "decode_32k":  Shape("decode_32k",  "decode",  32_768,  128),
-    "long_500k":   Shape("long_500k",   "decode",  524_288, 1),
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
 }
 
 

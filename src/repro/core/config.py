@@ -238,20 +238,20 @@ class RuntimeParams(NamedTuple):
 # platform-level defaults (a DDR4 DIMM, Optane-class media, ...), since
 # Table I only gives latencies; all are overridable per experiment.
 TECHNOLOGIES: dict[str, TechnologyParams] = {
-    "dram":     TechnologyParams("dram", read_lat=50, write_lat=50,
-                                 bytes_per_cycle=19.2, endurance_log10=16),
+    "dram": TechnologyParams("dram", read_lat=50, write_lat=50,
+                             bytes_per_cycle=19.2, endurance_log10=16),
     "3dxpoint": TechnologyParams("3dxpoint", read_lat=100, write_lat=275,
                                  bytes_per_cycle=2.4, endurance_log10=9),
-    "stt-ram":  TechnologyParams("stt-ram", read_lat=20, write_lat=20,
-                                 bytes_per_cycle=12.8, endurance_log10=16),
-    "mram":     TechnologyParams("mram", read_lat=20, write_lat=20,
-                                 bytes_per_cycle=12.8, endurance_log10=15),
-    "flash":    TechnologyParams("flash", read_lat=100_000, write_lat=100_000,
-                                 bytes_per_cycle=0.5, endurance_log10=4),
+    "stt-ram": TechnologyParams("stt-ram", read_lat=20, write_lat=20,
+                                bytes_per_cycle=12.8, endurance_log10=16),
+    "mram": TechnologyParams("mram", read_lat=20, write_lat=20,
+                             bytes_per_cycle=12.8, endurance_log10=15),
+    "flash": TechnologyParams("flash", read_lat=100_000, write_lat=100_000,
+                              bytes_per_cycle=0.5, endurance_log10=4),
     # "hdd" from Table I is out of scope for a memory bus (5 ms) but kept for
     # completeness of the technology table.
-    "hdd":      TechnologyParams("hdd", read_lat=5_000_000, write_lat=5_000_000,
-                                 bytes_per_cycle=0.15, endurance_log10=15),
+    "hdd": TechnologyParams("hdd", read_lat=5_000_000, write_lat=5_000_000,
+                            bytes_per_cycle=0.15, endurance_log10=15),
 }
 
 

@@ -42,8 +42,8 @@ import numpy as np
 
 from repro.core import (EmulatorConfig, HybridAllocator, Trace, counters,
                         FAST, SLOW)
-from repro.core import table as table_lib
 from repro.engine import Engine
+from repro.serve.contracts import release_pin_pages, stamp_pin_pages
 
 
 @dataclasses.dataclass
@@ -89,32 +89,17 @@ class TieredKVAccounting:
             self._pages[key] = page
             self._handles[key] = handle
             if pin:
-                # Pin the page to the tier it will actually OCCUPY: its
-                # DEVICE lane (not the id boundary — migration may have
-                # moved a recycled page since init), and, when the page
-                # is a member of the DMA's in-flight swap, the tier that
-                # swap commits it to (page_a promotes to FAST, page_b
-                # demotes to SLOW; maybe_complete commits
-                # unconditionally, so pinning the pre-swap tier would
-                # break the pin<->DEVICE invariant one chunk later). A
-                # pin bit disagreeing with DEVICE would nail the page to
-                # the wrong tier forever. The allocator's own pin record
+                # Pin the page to the tier it will actually OCCUPY —
+                # device-accurate and DMA-swap-aware. The FLAGS lifecycle
+                # is shared with the serving scheduler
+                # (repro.serve.contracts): the stamp reads the DEVICE
+                # lane and the swap membership *inside* the traced
+                # program, so it composes with async dispatch and never
+                # syncs the host. The allocator's own pin record
                 # (alloc(pin=True)) serves pre-run apply_flags()
-                # workflows; mid-emulation the stamp must be incremental
-                # and device-accurate, so this class owns the FLAGS
-                # lifecycle (stamp here, clear in free_sequence) and the
-                # _pinned set for the hit-rate metric.
-                dma = self.state.dma
-                if int(dma.active) and page == int(dma.page_a):
-                    dev = FAST
-                elif int(dma.active) and page == int(dma.page_b):
-                    dev = SLOW
-                else:
-                    dev = int(self.state.table[page, table_lib.DEVICE])
-                bit = (table_lib.PIN_FAST if dev == FAST
-                       else table_lib.PIN_SLOW)
-                self.state = self.state._replace(
-                    table=table_lib.set_flags(self.state.table, [page], bit))
+                # workflows; mid-emulation this incremental stamp is the
+                # source of truth (stamp here, clear in free_sequence).
+                self.state = stamp_pin_pages(self.state, [page], width=1)
                 self._pinned.add(page)
         return self._pages[key]
 
@@ -168,9 +153,7 @@ class TieredKVAccounting:
             page = self._pages[key]
             if page in self._pinned:
                 # Release the §III-G contract with the allocation.
-                self.state = self.state._replace(
-                    table=table_lib.clear_flags(self.state.table, [page],
-                                                table_lib.PINNED))
+                self.state = release_pin_pages(self.state, [page], width=1)
                 self._pinned.discard(page)
             self.alloc.free(self._handles.pop(key))
             del self._pages[key]
@@ -186,7 +169,11 @@ class TieredKVAccounting:
                     slow_free=self.alloc.free_pages[SLOW],
                     pinned_pages=len(self._pinned),
                     pinned_accesses=self.stats.pinned_accesses,
+                    # 0.0, not nan: a sequence can complete before any
+                    # decode access lands on a contracted page, and nan
+                    # poisons downstream SLO aggregation (bench_serve
+                    # averages these across engines).
                     pinned_fast_hit_rate=(
                         pinned_hits / self.stats.pinned_accesses
-                        if self.stats.pinned_accesses else float("nan")))
+                        if self.stats.pinned_accesses else 0.0))
         return summ

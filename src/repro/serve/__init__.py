@@ -1,0 +1,41 @@
+"""Continuous-batching serving front-end over the HMMU session API.
+
+The paper's §III-G placement hints exist so the *system software* above
+the hybrid memory can express latency-critical pages. This package is
+that system software at serving scale: a request scheduler that drives
+``repro.Engine`` with the page-access streams of 100k+ concurrent
+decoding sequences, under the disciplines real serving stacks impose —
+
+* **admission control** (``max_live_seqs`` live-sequence cap plus a
+  ``max_live_batches`` cap on in-flight device dispatches),
+* **bucketed batch sizes with padded dispatch** (``BucketSpec`` —
+  ``sorted_batch_sizes`` / ``get_padded_batch_size`` selection, so every
+  dispatch hits a pre-compiled shape in the Engine's entry cache),
+* **per-sequence pin contracts** stamped at admission and released at
+  completion (``contracts`` — the FLAGS-lane lifecycle, batched and
+  traced so a 100k-sequence session never syncs the host per page),
+* **eviction of cold KV pages under memory pressure** (``PagedKVMap`` —
+  vectorized page bookkeeping with LRU eviction watermarks).
+
+The dispatch path overlaps host-side batch assembly with the in-flight
+device step: dispatches are asynchronous, results are harvested lazily
+(at most ``max_live_batches`` outstanding), and scheduling decisions
+never depend on device results — so the host assembles batch ``k+1``
+while the device emulates batch ``k``, and a scheduled run is bitwise
+identical to the same request stream replayed serially
+(tests/test_serve.py).
+"""
+from .buckets import BucketSpec
+from .contracts import release_pin_pages, stamp_pin_pages
+from .kv import PagedKVMap
+from .scheduler import ContinuousBatchingScheduler, ServeConfig, ServeReport
+
+__all__ = [
+    "BucketSpec",
+    "ContinuousBatchingScheduler",
+    "PagedKVMap",
+    "ServeConfig",
+    "ServeReport",
+    "release_pin_pages",
+    "stamp_pin_pages",
+]

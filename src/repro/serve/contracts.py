@@ -1,0 +1,92 @@
+"""§III-G pin-contract lifecycle, batched and traced.
+
+A pin contract nails a latency-critical KV page to the tier it actually
+occupies: ``PIN_FAST`` below the tier boundary, ``PIN_SLOW`` where the
+allocation spilled. The bit must agree with the page's *current* DEVICE
+lane — not its id-boundary tier (migration may have moved a recycled
+page since init) — and, when the page is a member of the DMA engine's
+in-flight swap, with the tier that swap commits it to (``page_a``
+promotes to FAST, ``page_b`` demotes to SLOW; ``dma.maybe_complete``
+commits unconditionally, so pinning the pre-swap tier would break the
+pin<->DEVICE invariant one chunk later).
+
+The stamp and release here are **traced, batched device ops**: they read
+the DEVICE lane and the swap membership inside the program, so stamping
+a whole admission batch costs one queued table update — no host sync per
+page — and composes with the scheduler's async dispatch pipeline (the
+FLAGS writes are ordered against the dispatches by the carried state).
+Padding lanes use an out-of-range sentinel page and are dropped by the
+scatter, so one compiled program serves every admission-batch size up to
+the pad width.
+
+``repro.memtier.TieredKVAccounting`` stamps through the same helpers
+(width-1 batches), so the serving scheduler and the model-coupled
+serving engine share one pin-semantics implementation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FAST, SLOW
+from repro.core import table as table_lib
+from repro.core.emulator import EmulatorState
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages",), donate_argnums=(0,))
+def _stamp(table, active, page_a, page_b, pages, live, *, n_pages):
+    dev = table[jnp.clip(pages, 0, n_pages - 1), table_lib.DEVICE]
+    in_swap_a = (active != 0) & (pages == page_a)
+    in_swap_b = (active != 0) & (pages == page_b)
+    dev = jnp.where(in_swap_a, FAST, jnp.where(in_swap_b, SLOW, dev))
+    bit = jnp.where(dev == FAST, table_lib.PIN_FAST, table_lib.PIN_SLOW)
+    bit = jnp.where(live, bit, 0).astype(jnp.int32)
+    idx = jnp.where(live, pages, n_pages)   # sentinel rows drop
+    cur = table[jnp.clip(pages, 0, n_pages - 1), table_lib.FLAGS]
+    return table.at[idx, table_lib.FLAGS].set(cur | bit, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages",), donate_argnums=(0,))
+def _release(table, pages, live, *, n_pages):
+    idx = jnp.where(live, pages, n_pages)
+    cur = table[jnp.clip(pages, 0, n_pages - 1), table_lib.FLAGS]
+    return table.at[idx, table_lib.FLAGS].set(
+        cur & ~jnp.int32(table_lib.PINNED), mode="drop")
+
+
+def _pad(pages, width: int):
+    pages = jnp.asarray(pages, jnp.int32).reshape(-1)
+    n = pages.shape[0]
+    if width < n:
+        raise ValueError(f"{n} contract pages exceed the pad width {width}")
+    live = jnp.arange(width) < n
+    return jnp.pad(pages, (0, width - n)), live
+
+
+def stamp_pin_pages(state: EmulatorState, pages, *,
+                    width: int | None = None) -> EmulatorState:
+    """Stamp pin contracts on ``pages`` (device-accurate, swap-aware).
+
+    ``width`` pads the batch to a fixed shape so a scheduler admitting a
+    variable number of sequences per step reuses one compiled stamp
+    program; None traces at the batch's own length. The carried table is
+    donated — the passed-in state is consumed, like ``Engine.run``.
+    """
+    n_pages = state.table.shape[0]
+    pages, live = _pad(pages, width if width is not None else len(pages))
+    table = _stamp(state.table, state.dma.active, state.dma.page_a,
+                   state.dma.page_b, pages, live, n_pages=n_pages)
+    return state._replace(table=table)
+
+
+def release_pin_pages(state: EmulatorState, pages, *,
+                      width: int | None = None) -> EmulatorState:
+    """Clear the pin contracts of ``pages`` (both pin bits — release is
+    tier-agnostic). Same padding/donation contract as
+    :func:`stamp_pin_pages`."""
+    n_pages = state.table.shape[0]
+    pages, live = _pad(pages, width if width is not None else len(pages))
+    table = _release(state.table, pages, live, n_pages=n_pages)
+    return state._replace(table=table)

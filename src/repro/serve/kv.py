@@ -1,0 +1,164 @@
+"""Vectorized KV-page bookkeeping for serving-scale sequence counts.
+
+``repro.memtier.TieredKVAccounting`` keeps per-page Python dicts — fine
+for a handful of model-coupled sequences, hopeless for 100k concurrent
+ones. ``PagedKVMap`` is the same middleware role (the paper's
+driver+jemalloc analogue over the flat hybrid space) rebuilt on numpy
+arrays: free lists are stacks with a top pointer, the page->owner map and
+the LRU clock are flat arrays, and every operation — allocation,
+assignment, release, eviction — is a batched array op, so the host-side
+cost of a scheduler step is O(pages touched), not O(python objects).
+
+Eviction models the serving stack swapping cold KV pages out to host
+memory under pressure: when the free pool drops below the low watermark,
+the coldest unpinned pages (oldest ``last_access`` stamp, never a page
+touched this step, never a contracted page) are released back to the
+allocator until the high watermark is restored. A sequence whose evicted
+page is needed again re-allocates it (a *refetch*, counted by the
+scheduler) — with windowed attention the candidates are precisely the
+pages the attention pass will never stream again, so refetches indicate
+an undersized window or an overcommitted tier.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FAST, SLOW, EmulatorConfig
+
+_NEVER = np.iinfo(np.int64).max
+
+
+class _Stack:
+    """A fixed-capacity LIFO of page numbers (vector push/pop)."""
+
+    def __init__(self, pages: np.ndarray):
+        self.buf = np.asarray(pages, np.int32).copy()
+        self.top = len(self.buf)
+
+    def __len__(self) -> int:
+        return self.top
+
+    def pop(self, k: int) -> np.ndarray:
+        take = self.buf[self.top - k:self.top][::-1].copy()
+        self.top -= k
+        return take
+
+    def push(self, pages: np.ndarray) -> None:
+        k = len(pages)
+        self.buf[self.top:self.top + k] = pages
+        self.top += k
+
+
+class PagedKVMap:
+    """Flat-space page allocator + per-sequence page table + LRU clock."""
+
+    def __init__(self, cfg: EmulatorConfig, max_live_seqs: int,
+                 max_pages_per_seq: int, pin_pages_per_seq: int = 1,
+                 free_low_frac: float = 0.02, free_high_frac: float = 0.04):
+        n, nf = cfg.n_pages, cfg.n_fast_pages
+        self.cfg = cfg
+        self.pin_pages = pin_pages_per_seq
+        # Initial-placement pools, allocation order matching
+        # core.table.HybridAllocator (page 0 first).
+        self._stacks = {FAST: _Stack(np.arange(nf - 1, -1, -1)),
+                        SLOW: _Stack(np.arange(n - 1, nf - 1, -1))}
+        self.page_of = np.full((max_live_seqs, max_pages_per_seq), -1,
+                               np.int32)
+        self.owner = np.full(n, -1, np.int32)      # slot owning each page
+        self.owner_idx = np.full(n, -1, np.int32)  # page index within seq
+        self.pinned = np.zeros(n, bool)
+        self.last_access = np.full(n, _NEVER, np.int64)  # free = _NEVER
+        self.low_mark = int(free_low_frac * n)
+        self.high_mark = max(int(free_high_frac * n), self.low_mark + 1)
+        self.evictions = 0
+
+    @property
+    def free_total(self) -> int:
+        return len(self._stacks[FAST]) + len(self._stacks[SLOW])
+
+    @property
+    def free_pages(self) -> dict[int, int]:
+        return {d: len(s) for d, s in self._stacks.items()}
+
+    def alloc(self, k: int, hint: int = FAST) -> np.ndarray:
+        """Allocate ``k`` pages preferring the hinted tier's initial
+        placement, spilling to the other (§III-G best-effort hints)."""
+        if k == 0:
+            return np.empty(0, np.int32)
+        other = SLOW if hint == FAST else FAST
+        a = min(k, len(self._stacks[hint]))
+        if k - a > len(self._stacks[other]):
+            raise MemoryError(
+                f"out of hybrid memory: want {k} pages, "
+                f"free {self.free_total} (eviction exhausted?)")
+        pages = self._stacks[hint].pop(a)
+        if k > a:
+            pages = np.concatenate([pages, self._stacks[other].pop(k - a)])
+        return pages
+
+    def assign(self, slots: np.ndarray, idx: np.ndarray,
+               pages: np.ndarray, step: int) -> None:
+        """Record ``pages`` as page ``idx`` of sequence slot ``slots``."""
+        self.page_of[slots, idx] = pages
+        self.owner[pages] = slots
+        self.owner_idx[pages] = idx
+        self.pinned[pages] = idx < self.pin_pages
+        self.last_access[pages] = step
+
+    def touch(self, pages: np.ndarray, step: int) -> None:
+        self.last_access[pages] = step
+
+    def release_slots(self, slots: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Free every page of the given sequence slots. Returns
+        ``(all_pages, contracted_pages)`` — the latter still carry pin
+        bits in the emulated table and must be released there too."""
+        rows = self.page_of[slots]                       # [k, max_pages]
+        pages = rows[rows >= 0]
+        pinned = pages[self.pinned[pages]]
+        self.page_of[slots] = -1
+        self._free(pages)
+        return pages, pinned
+
+    def _free(self, pages: np.ndarray) -> None:
+        if len(pages) == 0:
+            return
+        self.owner[pages] = -1
+        self.owner_idx[pages] = -1
+        self.pinned[pages] = False
+        self.last_access[pages] = _NEVER
+        nf = self.cfg.n_fast_pages
+        fast = pages[pages < nf]
+        if len(fast):
+            self._stacks[FAST].push(fast)
+        slow = pages[pages >= nf]
+        if len(slow):
+            self._stacks[SLOW].push(slow)
+
+    def evictable(self, step: int) -> int:
+        """Pages eviction could reclaim right now: allocated, unpinned,
+        and not touched this step."""
+        return int(((self.owner >= 0) & ~self.pinned
+                    & (self.last_access < step)).sum())
+
+    def maybe_evict(self, step: int, extra_needed: int = 0) -> np.ndarray:
+        """Evict cold pages when free pages dip under the low watermark
+        (plus any immediately-needed allocation). Victims are the oldest
+        unpinned allocated pages not touched this step; eviction stops at
+        the high watermark or when candidates run out. Returns the
+        evicted pages (their owners' ``page_of`` entries become -1)."""
+        want_free = self.low_mark + extra_needed
+        if self.free_total >= want_free:
+            return np.empty(0, np.int32)
+        target = max(self.high_mark + extra_needed - self.free_total, 0)
+        cand = (self.owner >= 0) & ~self.pinned & (self.last_access < step)
+        n_cand = int(cand.sum())
+        k = min(target, n_cand)
+        if k == 0:
+            return np.empty(0, np.int32)
+        age = np.where(cand, self.last_access, _NEVER)
+        victims = np.argpartition(age, k - 1)[:k].astype(np.int32)
+        self.page_of[self.owner[victims], self.owner_idx[victims]] = -1
+        self._free(victims)
+        self.evictions += k
+        return victims

@@ -1,7 +1,8 @@
 """Workload substrate: trace generators + the SPEC-2017-like suite."""
 from .generators import (zipfian, sequential, strided, pointer_chase, mixed,
-                         TraceSpec, generate)
+                         serve_mixed, TraceSpec, generate)
 from .workloads import WORKLOADS, workload_trace
 
 __all__ = ["zipfian", "sequential", "strided", "pointer_chase", "mixed",
-           "TraceSpec", "generate", "WORKLOADS", "workload_trace"]
+           "serve_mixed", "TraceSpec", "generate", "WORKLOADS",
+           "workload_trace"]

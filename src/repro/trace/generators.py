@@ -27,10 +27,14 @@ class TraceSpec:
     n_requests: int
     footprint_pages: int         # working-set size in pages
     write_frac: float = 0.3
-    pattern: str = "zipfian"     # zipfian | sequential | strided | pointer | mixed
+    pattern: str = "zipfian"     # zipfian | sequential | strided | pointer
+    #                            # | mixed | serve_mixed
     zipf_alpha: float = 1.1
     stride_pages: int = 2
     seq_frac: float = 0.5        # for `mixed`: fraction of sequential traffic
+    n_tenants: int = 4           # for `serve_mixed`: concurrent tenants
+    prefill_frac: float = 0.2    # for `serve_mixed`: prefill share of traffic
+    decode_window: int = 8       # for `serve_mixed`: decode reuse window, pages
     line: int = 64
     page_size: int = 4096
     seed: int = 0
@@ -122,8 +126,50 @@ def mixed(spec: TraceSpec) -> Trace:
     return Trace(*(jnp.where(pick_seq, a, b) for a, b in zip(s, z)))
 
 
+@functools.partial(jax.jit, static_argnames=("spec",))
+def serve_mixed(spec: TraceSpec) -> Trace:
+    """Multi-tenant mixed prefill/decode serving traffic.
+
+    The page-access shape continuous-batching KV serving presents to the
+    memory system, without needing the full ``repro.serve`` scheduler:
+    ``n_tenants`` tenants share the footprint in equal slices; a
+    ``prefill_frac`` share of requests are prefill — sequential *writes*
+    marching each tenant's slice forward (prompt ingestion) — and the
+    rest are decode — reads spread over the last ``decode_window`` pages
+    behind that tenant's prefill frontier (windowed attention reuse)
+    plus token writes at the frontier at the usual ``write_frac``.
+    Interleaving across tenants is uniform, so the stream mixes hot
+    decode reuse with cold streaming writes the way a busy multi-tenant
+    serving box does.
+    """
+    T, W = spec.n_tenants, spec.decode_window
+    per = max(spec.footprint_pages // T, 1)
+    n = spec.n_requests
+    k = jax.random.PRNGKey(spec.seed)
+    k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+    tenant = jax.random.randint(k1, (n,), 0, T)
+    is_prefill = jax.random.uniform(k2, (n,)) < spec.prefill_frac
+    # Each tenant's prefill frontier: running count of its prefill
+    # requests (vectorized per-tenant cumsum via one-hot columns).
+    onehot = (tenant[:, None] == jnp.arange(T)[None, :]) & is_prefill[:, None]
+    frontier = jnp.take_along_axis(jnp.cumsum(onehot, axis=0),
+                                   tenant[:, None], axis=1)[:, 0]
+    page_prefill = frontier % per
+    delta = jax.random.randint(k3, (n,), 0, W)
+    page_decode = jnp.clip(frontier - 1 - delta, 0) % per
+    page = tenant * per + jnp.where(is_prefill, page_prefill, page_decode)
+    is_write = jnp.where(is_prefill, True,
+                         (jax.random.uniform(k4, (n,)) < spec.write_frac)
+                         & (delta == 0))
+    return Trace(page=page.astype(jnp.int32),
+                 offset=_offsets(k5, spec),
+                 is_write=is_write,
+                 size=jnp.full(n, spec.line, jnp.int32))
+
+
 _PATTERNS = {"zipfian": zipfian, "sequential": sequential, "strided": strided,
-             "pointer": pointer_chase, "mixed": mixed}
+             "pointer": pointer_chase, "mixed": mixed,
+             "serve_mixed": serve_mixed}
 
 
 def generate(spec: TraceSpec) -> Trace:

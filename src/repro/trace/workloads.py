@@ -39,18 +39,18 @@ class Workload:
 WORKLOADS: dict[str, Workload] = {w.name: w for w in [
     # --- integer ---------------------------------------------------------------
     Workload("500.perlbench", 202 * _MB, 120 * _GB, 0.45, "zipfian", 1.2),
-    Workload("505.mcf",       602 * _MB, 5.65 * _TB, 0.50, "zipfian", 0.9),
-    Workload("508.namd",      172 * _MB, 40 * _GB, 0.35, "strided", stride_pages=3),
-    Workload("520.omnetpp",   241 * _MB, 800 * _GB, 0.45, "zipfian", 1.0),
+    Workload("505.mcf", 602 * _MB, 5.65 * _TB, 0.50, "zipfian", 0.9),
+    Workload("508.namd", 172 * _MB, 40 * _GB, 0.35, "strided", stride_pages=3),
+    Workload("520.omnetpp", 241 * _MB, 800 * _GB, 0.45, "zipfian", 1.0),
     Workload("523.xalancbmk", 481 * _MB, 600 * _GB, 0.40, "pointer"),
-    Workload("525.x264",      165 * _MB, 60 * _GB, 0.40, "mixed", seq_frac=0.8),
+    Workload("525.x264", 165 * _MB, 60 * _GB, 0.40, "mixed", seq_frac=0.8),
     Workload("531.deepsjeng", 700 * _MB, 50 * _GB, 0.45, "zipfian", 1.3),
-    Workload("541.leela",      22 * _MB, 10 * _GB, 0.45, "zipfian", 1.3),
-    Workload("557.xz",        727 * _MB, 500 * _GB, 0.50, "mixed", seq_frac=0.6),
+    Workload("541.leela", 22 * _MB, 10 * _GB, 0.45, "zipfian", 1.3),
+    Workload("557.xz", 727 * _MB, 500 * _GB, 0.50, "mixed", seq_frac=0.6),
     # --- floating point ---------------------------------------------------------
-    Workload("519.lbm",       410 * _MB, 1.5 * _TB, 0.50, "sequential"),
-    Workload("538.imagick",   287 * _MB, 8.96 * _GB, 0.50, "mixed", seq_frac=0.8),
-    Workload("544.nab",       147 * _MB, 30 * _GB, 0.35, "strided", stride_pages=5),
+    Workload("519.lbm", 410 * _MB, 1.5 * _TB, 0.50, "sequential"),
+    Workload("538.imagick", 287 * _MB, 8.96 * _GB, 0.50, "mixed", seq_frac=0.8),
+    Workload("544.nab", 147 * _MB, 30 * _GB, 0.35, "strided", stride_pages=5),
 ]}
 
 

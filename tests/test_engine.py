@@ -401,13 +401,18 @@ def test_tiered_cache_pins_recycled_page_to_its_current_tier():
     assert tier._page_for(0, 0) == 0      # seq 0 takes fast page 0
     # Hand-demote fast page 1 (the allocator's next FAST-pool pop): swap
     # its mapping with slow page `s`, as a completed migration would.
+    # (Built per instance: the stamp consumes the carried table — the
+    # session donation contract — so a table buffer can't be shared.)
     s = cfg.n_fast_pages + 5
-    t = tier.state.table
-    fs = int(t[s, table_lib.FRAME])
-    t = t.at[1, table_lib.DEVICE].set(SLOW).at[1, table_lib.FRAME].set(fs)
-    t = t.at[s, table_lib.DEVICE].set(0).at[s, table_lib.FRAME].set(1)
-    t = t.at[1, table_lib.OWNER].set(s)   # fast frame 1 now owned by s
-    tier.state = tier.state._replace(table=t)
+
+    def demote(t):
+        fs = int(t[s, table_lib.FRAME])
+        t = (t.at[1, table_lib.DEVICE].set(SLOW)
+             .at[1, table_lib.FRAME].set(fs))
+        t = t.at[s, table_lib.DEVICE].set(0).at[s, table_lib.FRAME].set(1)
+        return t.at[1, table_lib.OWNER].set(s)  # fast frame 1 owned by s
+
+    tier.state = tier.state._replace(table=demote(tier.state.table))
 
     assert tier._page_for(1, 0) == 1      # recycled fast-id page, now SLOW
     table = np.asarray(tier.state.table)
@@ -421,7 +426,8 @@ def test_tiered_cache_pins_recycled_page_to_its_current_tier():
     tier2 = TieredKVAccounting(cfg, n_layers=1, positions_per_page=16,
                                bytes_per_position=64, pin_pages_per_seq=1)
     assert tier2._page_for(0, 0) == 0
-    tier2.state = tier2.state._replace(table=t)   # page 1 demoted, as above
+    tier2.state = tier2.state._replace(         # page 1 demoted, as above
+        table=demote(tier2.state.table))
     import jax.numpy as _jnp
     tier2.state = tier2.state._replace(dma=tier2.state.dma._replace(
         active=_jnp.int32(1), page_a=_jnp.int32(1),
