@@ -11,7 +11,16 @@ tunes on it, on the default paper geometry (n_banks=16, chunk=512):
   of the DMA swap pair's table rows vs appending them to the chunk's
   lookup-kernel launch (chunk + 2 rows, one gather);
 * ``donate=off`` vs ``donate=on`` — continued emulation with the carried
-  state's buffers copied vs donated (the packed table updates in place).
+  state's buffers copied vs donated (the packed table updates in place);
+* ``kernel=off`` vs ``kernel=on`` — the restructured scan path vs the
+  one-kernel Pallas chunk step (``chunk_step_kernel``; interpret mode
+  off-TPU, so its absolute number is only meaningful on real hardware —
+  benched at a reduced request count).
+
+It also reports a per-stage breakdown of the chunk step itself (RX link /
+gather / bank resolve / in-order return / boundary commit / policy),
+measured by timing stage-truncated scans (``kernels.chunk_step.step_until``)
+and differencing successive stages.
 
 Runnable standalone::
 
@@ -34,12 +43,75 @@ import jax
 from benchmarks.bench_throughput import _bench  # shared warm-then-average
 from benchmarks.schema import (add_check_args, bench_payload, run_check,
                                write_bench_json)
+import jax.numpy as jnp
+
 from repro import Engine
-from repro.core import paper_platform
+from repro.core import init_state, pad_trace, paper_platform
+from repro.kernels import chunk_step as chunk_step_lib
 from repro.trace import TraceSpec, generate
 
 # The default hot path: what plain paper_platform() users get.
 _DEFAULT_CASE = "resolver=auto/gather=fused"
+
+# step_until stages in pipeline order; each breakdown entry is the delta
+# between a stage-truncated scan and its predecessor.
+_STAGE_ORDER = ("rx", "gather", "resolve", "return", "commit", "full")
+_STAGE_LABEL = {"rx": "rx_link", "gather": "gather", "resolve": "resolve",
+                "return": "inorder_return", "commit": "boundary_commit",
+                "full": "policy"}
+
+
+def _stage_breakdown(base, trace, reps, n, verbose):
+    """us/req per chunk-step stage: time a scan of ``step_until`` at each
+    truncation point and difference successive stages. The truncated
+    steps keep the full carry structure, so each timing is a real
+    end-to-end scan, not an isolated microkernel."""
+    engine = Engine(base)
+    params, registry = engine.params, engine.registry
+    padded, valid = pad_trace(base, trace)
+    n_chunks = padded.page.shape[0] // base.chunk
+    chunks = jax.tree.map(lambda x: x.reshape(n_chunks, base.chunk),
+                          padded)
+    vchunks = valid.reshape(n_chunks, base.chunk)
+    state0 = init_state(base, params)
+    sc0 = chunk_step_lib.StepScalars(
+        clock=state0.clock, clock_ptr=state0.clock_ptr,
+        chunk_idx=state0.chunk_idx, dma=state0.dma,
+        link_free_rx=state0.link_free_rx, link_free_tx=state0.link_free_tx,
+        last_return=state0.last_return)
+
+    times = {}
+    for stage in _STAGE_ORDER:
+        @jax.jit
+        def run(table, bank_free, _stage=stage):
+            def body(carry, xs):
+                table, sc, bank_free = carry
+                (page, offset, is_write, size), v = xs
+                table, sc, bank_free, outs = chunk_step_lib.step_until(
+                    base, registry, table, params, sc, bank_free,
+                    page, offset, is_write, size, v, upto=_stage)
+                # keep every stage's products live (returns/device plus
+                # the whole carry below), or XLA dead-code-eliminates the
+                # truncated stages and the deltas read as zero
+                return (table, sc, bank_free), (outs["returns"],
+                                                outs["device"],
+                                                outs["latency"])
+            carry, ys = jax.lax.scan(
+                body, (table, sc0, bank_free), (chunks, vchunks))
+            return carry, ys
+        fn = lambda: jax.block_until_ready(  # noqa: E731
+            run(state0.table, state0.bank_free))
+        times[stage] = _bench(fn, reps)
+
+    breakdown, prev = {}, 0.0
+    for stage in _STAGE_ORDER:
+        us = max(times[stage] - prev, 0.0) / n * 1e6
+        breakdown[f"us_per_req_stage_{_STAGE_LABEL[stage]}"] = us
+        prev = times[stage]
+        if verbose:
+            print(f"  stage {_STAGE_LABEL[stage]:16s} {us:8.3f} us/req "
+                  f"(cumulative {times[stage] / n * 1e6:8.3f})")
+    return breakdown
 
 
 def run(verbose=True, n=32_768, reps=5, out=None):
@@ -89,6 +161,30 @@ def run(verbose=True, n=32_768, reps=5, out=None):
     state0 = Engine(base).run(trace).state
     sec_don = case("continued/donate=on", base, state=state0, donate=True)
 
+    # One-kernel chunk step. Off-TPU the kernel runs in interpret mode —
+    # orders of magnitude slower than compiled — so bench it on a reduced
+    # trace: the case exists to pin the path end-to-end and to carry a
+    # trajectory for TPU runs, not to win on CPU.
+    n_kernel = min(n, 2_048)
+    ktrace = jax.tree.map(lambda x: x[:n_kernel], trace)
+    kcfg = base.with_(chunk_step_kernel="on")
+    engine_k = Engine(kcfg)
+    fn_k = lambda: jax.block_until_ready(  # noqa: E731
+        engine_k.run(ktrace).state.clock)
+    sec_kernel = _bench(fn_k, max(2, reps // 2))
+    rows.append({"case": "kernel=on (interpret off-TPU)",
+                 "s_per_call": sec_kernel,
+                 "us_per_req": sec_kernel / n_kernel * 1e6,
+                 "n_requests": n_kernel})
+    if verbose:
+        print(f"  {'kernel=on (interpret off-TPU)':38s} "
+              f"{sec_kernel * 1e3:9.1f} ms/call "
+              f"{rows[-1]['us_per_req']:8.3f} us/req  (n={n_kernel})")
+
+    if verbose:
+        print("  per-stage breakdown (scan path, stage-truncated scans):")
+    breakdown = _stage_breakdown(base, trace, reps, n, verbose)
+
     metrics = {
         "n_requests": n,
         "us_per_req_default": sec_default / n * 1e6,
@@ -99,6 +195,8 @@ def run(verbose=True, n=32_768, reps=5, out=None):
         "speedup_segmented_vs_dense": sec_dense / sec_seg,
         "speedup_fused_vs_unfused": sec_unfused / sec_default,
         "speedup_donate": sec_nodon / sec_don,
+        "us_per_req_kernel_interpret": sec_kernel / n_kernel * 1e6,
+        **breakdown,
     }
     if verbose:
         print(f"  vs pre-PR path: {metrics['speedup_vs_pre_pr']:.2f}x, "
@@ -108,7 +206,8 @@ def run(verbose=True, n=32_768, reps=5, out=None):
     summary = bench_payload(
         "chunk_step", metrics,
         config={"chunk": base.chunk, "n_banks": base.n_banks,
-                "n_pages": base.n_pages, "reps": reps},
+                "n_pages": base.n_pages, "reps": reps,
+                "n_kernel": n_kernel},
         cases=rows)
     if out:
         path = write_bench_json(out, summary)
@@ -128,7 +227,8 @@ def main() -> None:
     args = ap.parse_args()
     n = args.requests or (8_192 if args.quick else 32_768)
     summary = run(n=n, reps=2 if args.quick else 5, out=args.out)
-    run_check(summary, args, ["us_per_req_default"])
+    run_check(summary, args,
+              ["us_per_req_default", "us_per_req_kernel_interpret"])
 
 
 if __name__ == "__main__":

@@ -6,14 +6,12 @@ Public API:
     policies (register your own), counters.summary
 
 Execution goes through the session API — ``repro.Engine`` — which owns
-the compiled entry points; ``emulate`` / ``emulate_channels`` /
-``run_trace`` here are deprecated wrappers over it.
+the compiled entry points.
 """
 from .config import (EmulatorConfig, RuntimeParams, TechnologyParams,
                      TECHNOLOGIES, paper_platform, small_platform, static_key,
                      FAST, SLOW)
-from .emulator import (Trace, EmulatorState, emulate, emulate_channels,
-                       run_trace, pad_trace, init_state)
+from .emulator import Trace, EmulatorState, pad_trace, init_state
 from .policies import PolicyRegistry
 from .table import HybridAllocator, init_table, check_table
 from . import policies, counters, dma, latency, consistency, table
@@ -21,8 +19,7 @@ from . import policies, counters, dma, latency, consistency, table
 __all__ = [
     "EmulatorConfig", "RuntimeParams", "TechnologyParams", "TECHNOLOGIES",
     "paper_platform", "small_platform", "static_key",
-    "FAST", "SLOW", "Trace", "EmulatorState", "emulate",
-    "emulate_channels", "run_trace", "pad_trace", "init_state",
+    "FAST", "SLOW", "Trace", "EmulatorState", "pad_trace", "init_state",
     "PolicyRegistry", "HybridAllocator", "init_table", "check_table",
     "policies", "counters", "dma", "latency", "consistency", "table",
 ]

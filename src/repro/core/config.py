@@ -84,6 +84,15 @@ class EmulatorConfig:
     #   the same lookup-kernel launch as the chunk's pages (chunk+2 rows)
     #   instead of two separate dynamic-slice gathers
     scan_unroll: int = 1            # unroll factor of the chunk lax.scan
+    chunk_step_kernel: str = "auto"  # one-kernel Pallas chunk step:
+    #   "on"   — run the whole per-chunk step (gather, redirect, bank
+    #            resolve, in-order return, commit, policy proposal) as ONE
+    #            pallas_call with the packed table staged through VMEM
+    #            (interpret mode off-TPU, so tests can force it anywhere)
+    #   "off"  — the composable jnp scan path (bitwise identical)
+    #   "auto" — kernel when the Pallas dispatch says so (TPU, or
+    #            REPRO_FORCE_PALLAS=1) and the table fits the VMEM budget
+    #   Resolution in kernels.chunk_step.use_chunk_step_kernel.
 
     # --- policy -------------------------------------------------------------------
     policy: str = "hotness"         # one of core.policies.POLICIES
@@ -139,7 +148,8 @@ def static_key(cfg: EmulatorConfig) -> tuple:
     """
     return (cfg.page_size, cfg.subblock, cfg.n_pages, cfg.line_size,
             cfg.n_banks, cfg.chunk, cfg.max_inflight, cfg.dma_buffer_bytes,
-            cfg.bank_resolver, cfg.fuse_swap_gather, cfg.scan_unroll)
+            cfg.bank_resolver, cfg.fuse_swap_gather, cfg.scan_unroll,
+            cfg.chunk_step_kernel)
 
 
 def canonical_config(cfg: EmulatorConfig) -> EmulatorConfig:
@@ -156,7 +166,8 @@ def canonical_config(cfg: EmulatorConfig) -> EmulatorConfig:
         line_size=cfg.line_size, n_banks=cfg.n_banks, chunk=cfg.chunk,
         max_inflight=cfg.max_inflight, dma_buffer_bytes=cfg.dma_buffer_bytes,
         bank_resolver=cfg.bank_resolver,
-        fuse_swap_gather=cfg.fuse_swap_gather, scan_unroll=cfg.scan_unroll)
+        fuse_swap_gather=cfg.fuse_swap_gather, scan_unroll=cfg.scan_unroll,
+        chunk_step_kernel=cfg.chunk_step_kernel)
 
 
 class RuntimeParams(NamedTuple):

@@ -88,49 +88,80 @@ def redirect(cfg: EmulatorConfig, dma: DMAState,
     return device, frame
 
 
-def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
-                   table: jax.Array, params: RuntimeParams | None = None
-                   ) -> tuple["DMAState", jax.Array, jax.Array]:
-    """At a chunk boundary: if the in-flight swap has finished by ``now``,
-    commit it to the redirection table (exchange the two pages' DEVICE and
-    FRAME lanes, stamp their EPOCH lane with the commit cycle, and charge
-    the migration's full-page write to the WEAR lane of whichever slow
-    frame received data — endurance accounting for the swap traffic
-    itself, in line-sized units comparable to demand writes).
-    Returns (state, table, done_flag)."""
+class SwapCommit(NamedTuple):
+    """A swap commit expressed as pure data: the new engine state plus the
+    table writes as (row, lane, int32-delta) scatter-add triples computed
+    from *prefetched* pre-chunk rows. The emulator folds these triples into
+    its single combined boundary scatter (one in-place update per chunk);
+    :func:`maybe_complete` applies them directly for standalone callers.
+    Every write is an exact int32 delta against the prefetched value, so
+    add-commit is bitwise identical to the historical set-commit."""
+    dma: DMAState
+    done: jax.Array    # bool — swap finished this boundary
+    rows: jax.Array    # int32[8] target rows (idle/no-op entries hit row 0
+    #   with delta 0 — the guard-index convention of the old set path)
+    lanes: jax.Array   # int32[8] target lanes, aligned with ``rows``
+    delta: jax.Array   # int32[8] value to add at (row, lane)
+
+
+def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
+                row_a: jax.Array, row_b: jax.Array,
+                params: RuntimeParams | None = None) -> SwapCommit:
+    """Plan the chunk-boundary swap commit from prefetched rows.
+
+    ``row_a``/``row_b`` are the packed *pre-chunk* table rows of the swap
+    pair (guard-indexed: row 0 when idle) — the same rows stage 2's fused
+    gather already fetched, so the commit needs NO table reads of its own.
+    Valid because nothing earlier in a chunk writes the DEVICE/FRAME/EPOCH
+    lanes these deltas are computed against (the read-before-write chunk
+    schedule; see kernels.chunk_step).
+
+    If the in-flight swap has finished by ``now``: exchange the two pages'
+    DEVICE and FRAME lanes, stamp their EPOCH lane with the commit cycle,
+    and charge the migration's full-page write to the WEAR lane of
+    whichever slow frame received data (endurance accounting for the swap
+    traffic itself, in line-sized units comparable to demand writes).
+    """
     done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg, params))
 
     a, b = dma.page_a, dma.page_b
-    # `a`/`b` are -1 when idle; mod-index write would corrupt the last page,
-    # so guard indices (writes at the guard index rewrite its own value).
+    # `a`/`b` are -1 when idle; guard indices target row 0 with delta 0.
     ia = jnp.where(a >= 0, a, 0)
     ib = jnp.where(b >= 0, b, 0)
-    # Gather both rows, swap DEVICE/FRAME where `done`.
-    da, db = table[ia, table_lib.DEVICE], table[ib, table_lib.DEVICE]
-    fa, fb = table[ia, table_lib.FRAME], table[ib, table_lib.FRAME]
+    da, db = table_lib.device(row_a), table_lib.device(row_b)
+    fa, fb = table_lib.frame(row_a), table_lib.frame(row_b)
+    ea, eb = table_lib.epoch(row_a), table_lib.epoch(row_b)
     commit_a = done & (a >= 0)
     commit_b = done & (b >= 0)
-    table = table.at[ia, table_lib.DEVICE].set(jnp.where(commit_a, db, da))
-    table = table.at[ib, table_lib.DEVICE].set(jnp.where(commit_b, da, db))
-    table = table.at[ia, table_lib.FRAME].set(jnp.where(commit_a, fb, fa))
-    table = table.at[ib, table_lib.FRAME].set(jnp.where(commit_b, fa, fb))
-    table = table.at[ia, table_lib.EPOCH].set(
-        jnp.where(commit_a, now, table[ia, table_lib.EPOCH]))
-    table = table.at[ib, table_lib.EPOCH].set(
-        jnp.where(commit_b, now, table[ib, table_lib.EPOCH]))
 
     # WEAR charge: the DMA wrote one whole page into each destination; only
     # the slow-tier destination has limited endurance. Post-commit, member
     # `a` sits on device `db` at frame `fb` (and vice versa) — charge the
-    # member that landed on SLOW, in line-size units (one demand write
-    # wears one line's worth; the migration writes the full page).
-    charge = jnp.int32(cfg.page_size // cfg.line_size)
+    # member that landed on SLOW.
+    charge = cfg.page_size // cfg.line_size
     chg_a = commit_a & (db == SLOW)   # a demoted into slow frame fb
     chg_b = commit_b & (da == SLOW)   # b demoted into slow frame fa
-    table = table.at[jnp.where(chg_a, fb, 0), table_lib.WEAR].add(
-        jnp.where(chg_a, charge, 0))
-    table = table.at[jnp.where(chg_b, fa, 0), table_lib.WEAR].add(
-        jnp.where(chg_b, charge, 0))
+
+    # Constants stay Python literals (not eager jnp arrays): this function
+    # also traces inside the one-kernel Pallas body, which rejects
+    # captured device constants. The DEVICE/DEVICE/FRAME/FRAME/EPOCH/
+    # EPOCH/WEAR/WEAR lane vector is built from an iota for the same
+    # reason.
+    rows = jnp.stack([ia, ib, ia, ib, ia, ib,
+                      jnp.where(chg_a, fb, 0), jnp.where(chg_b, fa, 0)])
+    k = jnp.repeat(jnp.arange(4, dtype=jnp.int32), 2)
+    lanes = jnp.where(
+        k == 0, table_lib.DEVICE,
+        jnp.where(k == 1, table_lib.FRAME,
+                  jnp.where(k == 2, table_lib.EPOCH, table_lib.WEAR)))
+    delta = jnp.stack([jnp.where(commit_a, db - da, 0),
+                       jnp.where(commit_b, da - db, 0),
+                       jnp.where(commit_a, fb - fa, 0),
+                       jnp.where(commit_b, fa - fb, 0),
+                       jnp.where(commit_a, now - ea, 0),
+                       jnp.where(commit_b, now - eb, 0),
+                       jnp.where(chg_a, charge, 0),
+                       jnp.where(chg_b, charge, 0)])
 
     new = DMAState(
         active=jnp.where(done, 0, dma.active).astype(jnp.int32),
@@ -139,7 +170,22 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
         start=dma.start,
         swaps_done=dma.swaps_done + done.astype(jnp.int32),
     )
-    return new, table, done
+    return SwapCommit(dma=new, done=done, rows=rows, lanes=lanes, delta=delta)
+
+
+def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
+                   table: jax.Array, params: RuntimeParams | None = None
+                   ) -> tuple["DMAState", jax.Array, jax.Array]:
+    """At a chunk boundary: commit the in-flight swap if it has finished
+    by ``now`` (see :func:`plan_commit` for the semantics). Standalone
+    entry point over :func:`plan_commit` that gathers the swap pair's rows
+    itself and applies the planned deltas to ``table``.
+    Returns (state, table, done_flag)."""
+    ia = jnp.maximum(dma.page_a, 0)
+    ib = jnp.maximum(dma.page_b, 0)
+    plan = plan_commit(cfg, dma, now, table[ia], table[ib], params)
+    table = table.at[plan.rows, plan.lanes].add(plan.delta)
+    return plan.dma, table, plan.done
 
 
 def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,

@@ -12,6 +12,13 @@ return) are resolved exactly with associative scans (see latency.py,
 consistency.py). Policy state (hotness, migrations) commits at chunk
 boundaries — the pipeline-depth visibility delay real RTL has.
 
+The chunk step itself lives in ``repro.kernels.chunk_step`` — ONE fused
+step (Pallas kernel with the packed table in VMEM, or the bitwise-
+identical jnp scan path) covering all five pipeline stages plus the
+boundary commit and the policy proposal. That module documents the
+authoritative read-before-write chunk schedule; this one just scans it
+over the trace and accumulates counters.
+
 ``chunk=1`` degrades to a fully sequential model, which the oracle tests
 compare against; large chunks are the "FPGA mode" delivering the paper's
 orders-of-magnitude speedup over sequential software simulation.
@@ -21,25 +28,20 @@ orders-of-magnitude speedup over sequential software simulation.
 geometry, a frozen :class:`~repro.core.policies.PolicyRegistry`, and the
 unified jit entry-point cache below (:func:`entry_point`), and exposes
 ``run`` / ``run_stream`` / ``run_channels`` / ``sweep`` /
-``continue_sweep``. The free functions at the bottom of this module
-(``emulate``, ``emulate_channels``, ``run_trace``) are thin deprecated
-wrappers kept for bitwise-compatibility tests.
+``continue_sweep``.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from . import consistency, counters as counters_lib, dma as dma_lib
-from . import latency, policies as policies_lib, table as table_lib
-from .config import (EmulatorConfig, RuntimeParams, FAST, SLOW,
-                     canonical_config, static_key)
+from . import counters as counters_lib, dma as dma_lib, table as table_lib
+from .config import EmulatorConfig, RuntimeParams, static_key
 from .policies import PolicyRegistry
-from repro.kernels import ops as kernel_ops
+from repro.kernels import chunk_step as chunk_step_lib
 
 
 class Trace(NamedTuple):
@@ -107,158 +109,43 @@ def pad_trace(cfg: EmulatorConfig, t: Trace) -> tuple[Trace, jax.Array]:
 def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
                 registry: PolicyRegistry, state: EmulatorState,
                 chunk: tuple[Trace, jax.Array]):
+    """One scan step = one chunk through the fused step.
+
+    The five pipeline stages (RX link -> lookup/redirect -> bank queues ->
+    in-order return -> TX link), the boundary commit, and the policy
+    proposal all execute inside ``kernels.chunk_step`` — as one Pallas
+    kernel or the bitwise-identical scan path, per the
+    ``cfg.chunk_step_kernel`` knob. That module's docstring is the
+    authoritative statement of the chunk's read/write schedule (all table
+    reads against the pre-chunk table; ONE combined boundary scatter; the
+    policy reads the committed table). Here we only split state into the
+    kernel's carry (scalars + table + bank_free), step it, and fold the
+    chunk's results into the float counter accumulators — which stay
+    outside the kernel, int32-in float32-out.
+    """
     trace, valid = chunk
     page, offset, is_write, size = trace
-    n = page.shape[0]
     size = jnp.where(valid, size, 0)
-
-    # --- stage 1: RX link (host -> HMMU). Writes carry payload, reads a header.
-    issue = state.clock + params.issue_gap * (1 + jnp.arange(n, dtype=jnp.int32))
-    issue = jnp.where(valid, issue, latency._NEG)
-    rx_bytes = jnp.where(is_write, size, 16)
-    rx_srv = jnp.where(valid, latency.link_service_cycles(params, rx_bytes), 0)
-    rx_done = latency.maxplus_scan(
-        jnp.maximum(issue, jnp.where(valid, state.link_free_rx, latency._NEG)),
-        rx_srv)
-    arrive = rx_done + jnp.where(valid, params.link_lat // 2, 0)
-
-    # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
-    # One packed-row fetch through the lookup engine (Pallas on TPU, jnp
-    # gather elsewhere) replaces per-field gathers — the BRAM read per
-    # cycle of the paper's pipeline. Under a vmapped sweep the kernel
-    # batches over the design-point axis (one launch for all points).
-    # The fused path appends the DMA swap pair to the chunk's page vector
-    # (chunk + 2 rows, one launch) so the conflict redirect consumes
-    # prefetched rows instead of two extra dynamic-slice gathers.
-    a = jnp.maximum(state.dma.page_a, 0)
-    b = jnp.maximum(state.dma.page_b, 0)
-    if cfg.fuse_swap_gather:
-        rows, swap_rows = kernel_ops.hmmu_lookup_fused(
-            state.table, page, jnp.stack([a, b]))
-        row_a, row_b = swap_rows[..., 0, :], swap_rows[..., 1, :]
-    else:
-        rows = kernel_ops.hmmu_lookup(state.table, page)
-        row_a, row_b = state.table[a], state.table[b]
-    dev = table_lib.device(rows)
-    frm = table_lib.frame(rows)
-    dev, frm = dma_lib.redirect(
-        cfg, state.dma, page, offset, arrive, dev, frm,
-        row_a, row_b, params)
-
-    # --- stage 3: per-device bank queues + media access.
-    bank = dev * cfg.n_banks + frm % cfg.n_banks
-    med_srv = jnp.where(
-        valid, latency.device_service_cycles(params, dev, is_write, size), 0)
-    resolve = (latency.resolve_bank_queues_segmented
-               if latency.pick_bank_resolver(cfg) == "segmented"
-               else latency.resolve_bank_queues)
-    med_done, bank_free = resolve(
-        arrive, med_srv, bank, 2 * cfg.n_banks, state.bank_free)
-
-    # --- stage 4: tag-match in-order return (paper §III-C) ...
-    ordered = consistency.in_order_returns(
-        jnp.where(valid, med_done, latency._NEG), state.last_return)
-    held = jnp.sum((ordered > med_done) & valid).astype(jnp.int32)
-
-    # --- stage 5: ... then TX link serialization (responses leave in order).
-    tx_bytes = jnp.where(is_write, 16, size)
-    tx_srv = jnp.where(valid, latency.link_service_cycles(params, tx_bytes), 0)
-    returns = latency.maxplus_scan(
-        jnp.maximum(ordered, jnp.where(valid, state.link_free_tx, latency._NEG)),
-        tx_srv) + jnp.where(valid, params.link_lat // 2, 0)
-
-    lat = jnp.where(valid, returns - issue, 0)
-
-    # --- chunk boundary: counters, hotness, DMA completion, policy commit.
-    # Poison faults: accesses that touched a POISONED page (flags come
-    # from the stage-2 row gather — FLAGS never changes mid-chunk).
-    poisoned = valid & table_lib.is_poisoned(rows)
-    ctr = counters_lib.update(params, state.counters, device=dev,
+    sc = chunk_step_lib.StepScalars(
+        clock=state.clock, clock_ptr=state.clock_ptr,
+        chunk_idx=state.chunk_idx, dma=state.dma,
+        link_free_rx=state.link_free_rx, link_free_tx=state.link_free_tx,
+        last_return=state.last_return)
+    table, sc, bank_free, outs = chunk_step_lib.chunk_step(
+        cfg, registry, state.table, params, sc, state.bank_free,
+        page, offset, is_write, size, valid)
+    ctr = counters_lib.update(params, state.counters, device=outs["device"],
                               is_write=is_write, size=size, valid=valid,
-                              latency=lat, held=held, poisoned=poisoned)
-    do_decay = (state.chunk_idx % params.decay_every) == (params.decay_every - 1)
-    # Policy-scoped write weighting: only the write_bias policy biases
-    # hotness by write_weight; every other policy (including plain
-    # hotness at the same swept write_weight) counts reads and writes
-    # equally, so the policy axis is a real comparison.
-    if "write_bias" in registry.names:
-        eff_weight = jnp.where(
-            params.policy_id == registry.index("write_bias"),
-            params.write_weight, jnp.int32(1))
-    else:
-        eff_weight = jnp.int32(1)
-    table = policies_lib.update_hotness(params, state.table, page,
-                                        is_write, valid, do_decay,
-                                        write_weight=eff_weight)
-    # NVM endurance: count demand writes per slow frame in the WEAR lane
-    # (the DMA migration's full-page write is charged separately at swap
-    # commit in dma.maybe_complete).
-    slow_wr = is_write & valid & (dev == SLOW)
-    table = table.at[jnp.where(slow_wr, frm, 0), table_lib.WEAR].add(
-        slow_wr.astype(jnp.int32), mode="drop")
-
-    any_valid = jnp.any(valid)
-    last_ret = jnp.where(any_valid, jnp.max(jnp.where(valid, returns, state.last_return)),
-                         state.last_return)
-    now = jnp.maximum(state.clock + params.issue_gap * n, last_ret)
-
-    swap_a = jnp.maximum(state.dma.page_a, 0)  # pre-completion swap pair
-    dma, table, done = dma_lib.maybe_complete(cfg, state.dma, now, table,
-                                              params)
-    # Maintain the frame -> page inverse map (OWNER lane): the promoted
-    # page (swap_a, now FAST) owns its new frame.
-    row_a = table[swap_a]
-    promoted = done & (table_lib.device(row_a) == FAST)
-    own_idx = jnp.where(promoted, table_lib.frame(row_a), 0)
-    own_val = jnp.where(promoted, swap_a, table[0, table_lib.OWNER])
-    table = table.at[own_idx, table_lib.OWNER].set(own_val)
-
-    # Policy dispatch on the *traced* policy id: lax.switch over the
-    # (static, frozen) registry snapshot makes the policy itself a
-    # batchable design axis. params.policy_id indexes ``registry.names``;
-    # a single-policy registry skips the switch so vmapped non-policy
-    # sweeps never pay for branches they don't use. Branches come from
-    # the snapshot's own function tuple — re-registering a policy name
-    # after the snapshot cannot leak into this compilation.
-    branches = [functools.partial(fn, cfg, params) for fn in registry.fns]
-    ops = (table, state.clock_ptr, page, is_write, valid)
-    if len(branches) == 1:
-        p_want, cand, victim, new_ptr = branches[0](*ops)
-    else:
-        p_want, cand, victim, new_ptr = jax.lax.switch(
-            params.policy_id, branches, *ops)
-    # Post-policy proposal mask: device sanity plus FLAGS enforcement —
-    # a pinned candidate or victim vetoes the swap no matter what the
-    # policy proposed (maybe_start re-checks the same pin bits). One row
-    # gather per swap member serves both checks.
-    cand_row, victim_row = table[cand], table[victim]
-    unpinned = ~(table_lib.is_pinned(cand_row) |
-                 table_lib.is_pinned(victim_row))
-    want = p_want & any_valid & unpinned & \
-        (table_lib.device(cand_row) == SLOW) & \
-        (table_lib.device(victim_row) == FAST)
-    dma, started = dma_lib.maybe_start(dma, want, cand, victim, now, table)
-    # CLOCK pointer commit (two cases, see policies.py): a proposal only
-    # consumes its victim frame when the swap actually started — a
-    # rejected/dropped proposal (engine busy, re-masked want) leaves the
-    # pointer unchanged instead of silently skipping victims. With no
-    # proposal at all, the policy's pointer motion commits as-is: that is
-    # how a pinned frame (never a victim) is stepped over for free.
-    clock_ptr = jnp.where(started | ~p_want, new_ptr, state.clock_ptr)
-
+                              latency=outs["latency"], held=outs["held"],
+                              poisoned=outs["poisoned"])
     new_state = EmulatorState(
-        table=table, clock_ptr=clock_ptr,
-        chunk_idx=state.chunk_idx + 1, dma=dma,
-        clock=now,
-        bank_free=bank_free,
-        link_free_rx=jnp.where(any_valid, rx_done[-1], state.link_free_rx),
-        link_free_tx=jnp.where(any_valid, returns[-1], state.link_free_tx),
-        last_return=last_ret,
-        counters=ctr,
-    )
-    out = {"returns": jnp.where(valid, returns, 0),
-           "device": jnp.where(valid, dev, -1),
-           "latency": lat}
+        table=table, clock_ptr=sc.clock_ptr, chunk_idx=sc.chunk_idx,
+        dma=sc.dma, clock=sc.clock, bank_free=bank_free,
+        link_free_rx=sc.link_free_rx, link_free_tx=sc.link_free_tx,
+        last_return=sc.last_return, counters=ctr)
+    out = {"returns": outs["returns"],
+           "device": jnp.where(valid, outs["device"], -1),
+           "latency": outs["latency"]}
     return new_state, out
 
 
@@ -350,8 +237,7 @@ def entry_point(cfg: EmulatorConfig, registry: PolicyRegistry, *,
 def entry_cache_count(skey: tuple | None = None) -> int:
     """Number of compiled emulation entry points — all geometries, or one
     (``skey`` from :func:`config.static_key`). Backs
-    ``Engine.compile_count`` and the legacy ``sweep.runner.compile_count``.
-    """
+    ``Engine.compile_count``."""
     if skey is None:
         return len(_ENTRY_CACHE)
     return sum(1 for k in _ENTRY_CACHE if k[0] == skey)
@@ -364,64 +250,3 @@ def as_registry(registry) -> PolicyRegistry:
     if isinstance(registry, PolicyRegistry):
         return registry
     return PolicyRegistry.snapshot(registry)
-
-
-def _warn_legacy(old: str, new: str) -> None:
-    warnings.warn(
-        f"legacy {old} is deprecated: drive the platform through the "
-        f"session API — {new} (see repro.Engine)",
-        DeprecationWarning, stacklevel=3)
-
-
-def emulate(cfg: EmulatorConfig, trace: Trace, valid: jax.Array | None = None,
-            state: EmulatorState | None = None,
-            params: RuntimeParams | None = None,
-            registry=None,
-            donate: bool = False) -> tuple[EmulatorState, dict]:
-    """Deprecated free-function entry point — use ``repro.Engine.run``.
-
-    Kept as a thin wrapper over the unified entry-point cache (bitwise
-    identical to ``Engine.run``, guaranteed by tests/test_engine.py). The
-    trace length must be a multiple of ``cfg.chunk`` (use ``pad_trace``;
-    ``Engine.run`` pads for you). ``donate=True`` donates ``state``'s
-    buffers — the passed-in state is CONSUMED (``Engine.run`` donates by
-    default). ``registry`` may be a tuple of policy names or a
-    ``PolicyRegistry``; default is a snapshot of every registered policy.
-    """
-    _warn_legacy("emulate()", "Engine(cfg).run(trace, state=..., params=...)")
-    if donate and state is None:
-        raise ValueError(
-            "donate=True requires state=...: donation aliases the carried "
-            "state's buffers into the outputs, and a fresh-state run has "
-            "nothing to donate (it would silently run undonated)")
-    reg = as_registry(registry)
-    if params is None:
-        params = RuntimeParams.from_config(cfg)
-    static = canonical_config(cfg)
-    fn = entry_point(static, reg, donate=donate,
-                     shape_sig=(len(trace), valid is None, state is None))
-    return fn(static, reg, trace, valid, state, params)
-
-
-def emulate_channels(cfg: EmulatorConfig, traces: Trace,
-                     params: RuntimeParams | None = None,
-                     registry=None):
-    """Deprecated — use ``repro.Engine.run_channels``. FPGA-style spatial
-    parallelism: emulate many independent trace channels at once (vmapped
-    over a leading channel axis); ``params``/``registry`` apply to every
-    channel."""
-    _warn_legacy("emulate_channels()", "Engine(cfg).run_channels(traces)")
-    from repro.engine import Engine
-    return Engine(cfg, registry=registry).run_channels(traces, params=params)
-
-
-def run_trace(cfg: EmulatorConfig, trace: Trace,
-              params: RuntimeParams | None = None):
-    """Deprecated — use ``repro.Engine.run`` (+ ``RunResult.summary()``).
-    Pads, emulates, returns (state, padded outputs, counters summary)."""
-    _warn_legacy("run_trace()", "Engine(cfg).run(trace) + result.summary()")
-    from repro.engine import Engine
-    padded, valid = pad_trace(cfg, trace)
-    state, outs = Engine(cfg).run(padded, valid=valid, params=params,
-                                  donate=False)
-    return state, outs, counters_lib.summary(state.counters)

@@ -209,7 +209,7 @@ def _clock_victim(table, ptr, nf):
     first = jnp.argmin(pinned).astype(jnp.int32)   # first False, else 0
     found = ~pinned[first]
     victim = owners[first]
-    skip = jnp.where(found, first, jnp.int32(_CLOCK_WINDOW))
+    skip = jnp.where(found, first, _CLOCK_WINDOW)
     return victim, found, skip
 
 
@@ -217,8 +217,8 @@ def _clock_victim(table, ptr, nf):
 def static_policy(cfg, params, table, ptr, pages, is_write, valid):
     """Placement fixed at initialization; never migrate (the baseline the
     paper's users compare their designs against)."""
-    z = jnp.int32(0)
-    return jnp.bool_(False), z, z, ptr
+    z = jnp.zeros((), jnp.int32)
+    return jnp.zeros((), bool), z, z, ptr
 
 
 @register("hotness")
@@ -290,7 +290,7 @@ def hotness_global_policy(cfg, params, table, ptr, pages, is_write, valid):
     heat_all = jnp.where((dev == SLOW) & ~pinned, hot, -1)
     cand = jnp.argmax(heat_all).astype(jnp.int32)
     heat = heat_all[cand]
-    cold = jnp.where((dev == FAST) & ~pinned, hot, jnp.int32(2 ** 30))
+    cold = jnp.where((dev == FAST) & ~pinned, hot, 2 ** 30)
     victim = jnp.argmin(cold).astype(jnp.int32)
     want = (heat >= params.hot_threshold) & (heat > hot[victim])
     return want, cand, victim, ptr
@@ -315,7 +315,7 @@ def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid):
     # frame rows (the page rows above are the stage-2-style gather every
     # chunk-local policy already pays).
     frame_wear = table[jnp.where(slow, frm, 0), table_lib.WEAR]
-    wmin = jnp.min(jnp.where(slow, frame_wear, jnp.int32(2 ** 30)))
+    wmin = jnp.min(jnp.where(slow, frame_wear, 2 ** 30))
     fresh = frame_wear <= wmin + params.wear_slack
     cand, cheat = _chunk_candidate(table, pages, valid, extra_mask=fresh)
     victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)

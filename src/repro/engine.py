@@ -36,10 +36,6 @@ States passed into ``run``/``run_stream``/``continue_sweep`` are
 forward in place (the packed table updates without an O(n_pages) copy)
 and the passed-in object is CONSUMED — reading it afterwards raises.
 Pass ``donate=False`` to keep your copy.
-
-The legacy free functions (``repro.core.emulate`` / ``emulate_channels``
-/ ``run_trace``, ``repro.sweep.run_sweep``) are thin deprecated wrappers
-over this API, kept bitwise-identical (tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -208,8 +204,7 @@ class Engine:
     def _resolve_donate(donate: bool | None, state) -> bool:
         """Tri-state donate: None (the default) means donate whatever
         carried state there is; an EXPLICIT True with no state to donate
-        raises — same guard as the legacy wrappers — instead of being
-        silently dropped."""
+        raises instead of being silently dropped."""
         if donate and state is None:
             raise ValueError(
                 "donate=True requires state=...: a fresh run builds its "

@@ -1,0 +1,649 @@
+"""One-kernel chunk step: the whole HMMU pipeline as a single Pallas call.
+
+The paper's HMMU resolves a request per cycle because lookup, bank
+arbitration, and migration control live in ONE pipeline next to BRAM.
+This module is that pipeline's software twin, written once and executed
+two ways:
+
+* :func:`step_ref` — the composable jnp "scan path": closed-form max-plus
+  scans (``core.latency``), the batched lookup kernel for stage 2, one
+  combined boundary scatter for every table write. This is what
+  ``core.emulator`` runs by default on CPU.
+* the Pallas path — ``pl.pallas_call`` with the packed redirection table
+  staged through VMEM, the sequential max-plus recurrences expressed as
+  in-kernel ``fori_loop``s (the RTL formulation, not the closed form),
+  the scalar state and ``RuntimeParams`` riding a scalar-prefetch int
+  vector (``policy_id`` dispatch included), and a leading batch axis +
+  ``custom_vmap`` rule so a vmapped design-space sweep launches ONE
+  kernel per chunk for all points. Interpret mode off-TPU.
+
+Both paths are bitwise identical on every knob combination (property
+tests in tests/test_chunk_step_kernel.py): all pipeline arithmetic is
+exact int32, and the sequential recurrences are provably equal to the
+associative closed forms.
+
+The one true chunk schedule (the ordering contract the kernel implements
+and ``core.emulator`` documents):
+
+1. **Reads** — every table read of the chunk happens against the
+   *pre-chunk* table: the stage-2 row gather (chunk pages + DMA swap
+   pair), the swap pair's DEVICE/FRAME/EPOCH pre-values consumed by
+   ``dma.plan_commit``, and the OWNER pre-value of the promoted frame.
+2. **Boundary commit** — every table write lands in ONE flattened
+   scatter-add over exact int32 deltas (hotness accumulation, demand-
+   write WEAR, the swap commit's lane exchanges, the OWNER inverse-map
+   update routed through a ``mode="drop"`` sentinel), followed by the
+   decay shift. One in-place update instead of ~a dozen copying
+   scatters — the restructure that makes the scan path fast and the
+   kernel possible.
+3. **Policy** — the proposal phase reads the *committed* table (policies
+   see this chunk's accesses and completed migration, exactly as
+   before), then ``dma.maybe_start`` and the CLOCK pointer commit.
+
+Nothing mid-pipeline reads a mid-chunk write; FLAGS is never written on
+the hot path at all.
+
+TPU note: the body gathers/scatters table rows by value index, which
+interpret mode (and the bit-identity suite) exercises everywhere; on a
+real TPU the gather lowers via the same dynamic-slice machinery as the
+lookup kernel, and the VMEM budget check in
+:func:`use_chunk_step_kernel` keeps the resident table within a core's
+VMEM (paper geometry: 294912 rows x 8 lanes x 4 B ~ 9.4 MB of ~16 MB).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import custom_batching
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import consistency, dma as dma_lib, latency
+from repro.core import table as table_lib
+from repro.core.config import FAST, SLOW, EmulatorConfig, RuntimeParams
+from repro.core.policies import PolicyRegistry
+from . import ops as kernel_ops
+
+# Python literals, NOT eager jnp arrays: everything below also traces
+# inside the Pallas body, which rejects captured device constants.
+_MIN = -(2 ** 31)
+_NEG = -(2 ** 30)  # == int(_NEG), the invalid-slot arrival time
+
+# VMEM the resident table may claim before "auto" falls back to the scan
+# path (a TPU core has ~16 MB; leave room for the chunk vectors + double
+# buffering of the blocked operands).
+VMEM_TABLE_BUDGET = 12 * 2 ** 20
+
+
+class StepScalars(NamedTuple):
+    """The scalar slice of ``EmulatorState`` a chunk step carries (the
+    packed table and ``bank_free`` travel separately; counters stay in
+    the emulator — float accumulation never enters the kernel)."""
+    clock: jax.Array
+    clock_ptr: jax.Array
+    chunk_idx: jax.Array
+    dma: dma_lib.DMAState
+    link_free_rx: jax.Array
+    link_free_tx: jax.Array
+    last_return: jax.Array
+
+
+class PipelineOut(NamedTuple):
+    """Everything the pipeline phase hands the boundary phases."""
+    dev: jax.Array        # int32[chunk] — device actually accessed
+    frm: jax.Array        # int32[chunk] — frame actually accessed
+    row_a: jax.Array      # int32[W] — pre-chunk row of DMA swap member a
+    row_b: jax.Array      # int32[W] — pre-chunk row of DMA swap member b
+    returns: jax.Array    # int32[chunk] — TX return time (unmasked)
+    lat: jax.Array        # int32[chunk] — request latency (masked)
+    held: jax.Array       # int32 — responses delayed by tag matching
+    poisoned: jax.Array   # bool[chunk] — touched a POISONED page
+    bank_free: jax.Array  # int32[2*n_banks] — post-chunk bank busy times
+    rx_last: jax.Array    # int32 — RX link busy-until after the chunk
+    tx_last: jax.Array    # int32 — TX link busy-until after the chunk
+
+
+# --------------------------------------------------------------------------- #
+# sequential (in-kernel) formulations of the ordering-sensitive stages
+# --------------------------------------------------------------------------- #
+# Each is the direct RTL recurrence; ``core.latency`` proves the closed
+# forms equal, so these are bitwise-identical on int32 (no float anywhere).
+
+def _seq_maxplus(arrival: jax.Array, service: jax.Array) -> jax.Array:
+    """``done_i = max(arrival_i, done_{i-1}) + service_i`` as a loop."""
+    n = arrival.shape[0]
+
+    def body(i, carry):
+        prev, done = carry
+        d = jnp.maximum(arrival[i], prev) + service[i]
+        return d, done.at[i].set(d)
+
+    init = (jnp.full((), _MIN, jnp.int32), jnp.zeros(n, jnp.int32))
+    return jax.lax.fori_loop(0, n, body, init)[1]
+
+
+def _seq_bank_resolve(arrival, service, bank, bank_free):
+    """One pass over the chunk with a live ``bank_free`` register file —
+    what the FPGA's per-bank queue head pointers do. Equal to the dense
+    one-hot resolver: folding ``bank_free`` into only the first request
+    of each bank suffices because done times never drop below the seed
+    (service >= 0)."""
+    n = arrival.shape[0]
+    arr = jnp.maximum(arrival, _NEG)
+
+    def body(i, carry):
+        free, done = carry
+        d = jnp.maximum(arr[i], free[bank[i]]) + service[i]
+        return free.at[bank[i]].set(d), done.at[i].set(d)
+
+    free, done = jax.lax.fori_loop(
+        0, n, body, (bank_free, jnp.zeros(n, jnp.int32)))
+    return done, free
+
+
+def _seq_inorder(complete: jax.Array, last_return: jax.Array) -> jax.Array:
+    """Running max over ``max(complete_i, last_return)`` — the HDR-FIFO
+    tag match as a loop."""
+    n = complete.shape[0]
+
+    def body(i, carry):
+        run, out = carry
+        r = jnp.maximum(jnp.maximum(complete[i], last_return), run)
+        return r, out.at[i].set(r)
+
+    init = (jnp.full((), _MIN, jnp.int32), jnp.zeros(n, jnp.int32))
+    return jax.lax.fori_loop(0, n, body, init)[1]
+
+
+# --------------------------------------------------------------------------- #
+# phase 1: the request pipeline (pure reads)
+# --------------------------------------------------------------------------- #
+
+def pipeline_phase(cfg: EmulatorConfig, params: RuntimeParams,
+                   table: jax.Array, sc: StepScalars, bank_free: jax.Array,
+                   page, offset, is_write, size, valid, *,
+                   seq: bool = False, upto: str = "full") -> PipelineOut:
+    """Stages 1-5 of the paper's Fig 2 workflow: RX link, table lookup +
+    DMA-conflict redirect, bank queues + media access, tag-match in-order
+    return, TX link. Touches the table READ-ONLY (schedule contract §1).
+
+    ``seq=True`` selects the in-kernel sequential recurrences (the Pallas
+    body); default is the closed-form scan path. ``upto`` truncates after
+    a named stage ("rx" / "gather" / "resolve") for the per-stage bench —
+    missing fields come back zeroed.
+    """
+    n = page.shape[0]
+    size = jnp.where(valid, size, 0)
+    mp = _seq_maxplus if seq else latency.maxplus_scan
+    zv = jnp.zeros(n, jnp.int32)
+    zs = jnp.zeros((), jnp.int32)
+    zrow = jnp.zeros(table.shape[-1], jnp.int32)
+
+    # --- stage 1: RX link (host -> HMMU). Writes carry payload, reads a
+    # header.
+    issue = sc.clock + params.issue_gap * (1 + jnp.arange(n, dtype=jnp.int32))
+    issue = jnp.where(valid, issue, _NEG)
+    rx_bytes = jnp.where(is_write, size, 16)
+    rx_srv = jnp.where(valid, latency.link_service_cycles(params, rx_bytes), 0)
+    rx_done = mp(
+        jnp.maximum(issue, jnp.where(valid, sc.link_free_rx, _NEG)),
+        rx_srv)
+    arrive = rx_done + jnp.where(valid, params.link_lat // 2, 0)
+    if upto == "rx":
+        return PipelineOut(zv, zv, zrow, zrow, zv, zv, zs,
+                           jnp.zeros(n, bool), bank_free, rx_done[-1], zs)
+
+    # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
+    # One packed-row fetch — the BRAM read per cycle of the paper's
+    # pipeline. The scan path goes through the batched lookup engine
+    # (Pallas gather on TPU, jnp elsewhere; the fused flavour appends the
+    # DMA swap pair, chunk + 2 rows in one launch). Inside the one-kernel
+    # body the table is already VMEM-resident, so the gather is a direct
+    # row index. All paths clamp indices identically.
+    a = jnp.maximum(sc.dma.page_a, 0)
+    b = jnp.maximum(sc.dma.page_b, 0)
+    if seq:
+        pg = jnp.clip(page, 0, table.shape[0] - 1)
+        rows = table[pg]
+        row_a, row_b = table[a], table[b]
+    elif cfg.fuse_swap_gather:
+        rows, swap_rows = kernel_ops.hmmu_lookup_fused(
+            table, page, jnp.stack([a, b]))
+        row_a, row_b = swap_rows[..., 0, :], swap_rows[..., 1, :]
+    else:
+        rows = kernel_ops.hmmu_lookup(table, page)
+        row_a, row_b = table[a], table[b]
+    dev = table_lib.device(rows)
+    frm = table_lib.frame(rows)
+    dev, frm = dma_lib.redirect(
+        cfg, sc.dma, page, offset, arrive, dev, frm, row_a, row_b, params)
+    poisoned = valid & table_lib.is_poisoned(rows)
+    if upto == "gather":
+        return PipelineOut(dev, frm, row_a, row_b, zv, zv, zs, poisoned,
+                           bank_free, rx_done[-1], zs)
+
+    # --- stage 3: per-device bank queues + media access.
+    bank = dev * cfg.n_banks + frm % cfg.n_banks
+    med_srv = jnp.where(
+        valid, latency.device_service_cycles(params, dev, is_write, size), 0)
+    if seq:
+        med_done, bank_free2 = _seq_bank_resolve(arrive, med_srv, bank,
+                                                 bank_free)
+    else:
+        resolve = (latency.resolve_bank_queues_segmented
+                   if latency.pick_bank_resolver(cfg) == "segmented"
+                   else latency.resolve_bank_queues)
+        med_done, bank_free2 = resolve(
+            arrive, med_srv, bank, 2 * cfg.n_banks, bank_free)
+    if upto == "resolve":
+        return PipelineOut(dev, frm, row_a, row_b, zv, zv, zs, poisoned,
+                           bank_free2, rx_done[-1], zs)
+
+    # --- stage 4: tag-match in-order return (paper §III-C) ...
+    inorder = _seq_inorder if seq else consistency.in_order_returns
+    ordered = inorder(jnp.where(valid, med_done, _NEG),
+                      sc.last_return)
+    held = jnp.sum((ordered > med_done) & valid).astype(jnp.int32)
+
+    # --- stage 5: ... then TX link serialization (responses leave in
+    # order).
+    tx_bytes = jnp.where(is_write, 16, size)
+    tx_srv = jnp.where(valid, latency.link_service_cycles(params, tx_bytes), 0)
+    returns = mp(
+        jnp.maximum(ordered, jnp.where(valid, sc.link_free_tx, _NEG)),
+        tx_srv) + jnp.where(valid, params.link_lat // 2, 0)
+    lat = jnp.where(valid, returns - issue, 0)
+    return PipelineOut(dev, frm, row_a, row_b, returns, lat, held, poisoned,
+                       bank_free2, rx_done[-1], returns[-1])
+
+
+# --------------------------------------------------------------------------- #
+# phase 2: the boundary commit (pure writes — ONE combined scatter)
+# --------------------------------------------------------------------------- #
+
+def eff_write_weight(params: RuntimeParams, registry: PolicyRegistry):
+    """Policy-scoped hotness write weighting: only the ``write_bias``
+    policy biases hotness by ``write_weight``; every other policy counts
+    reads and writes equally, so the policy axis is a real comparison."""
+    if "write_bias" in registry.names:
+        return jnp.where(params.policy_id == registry.index("write_bias"),
+                         params.write_weight, 1)
+    return 1
+
+
+def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
+                 table: jax.Array, sc: StepScalars, pipe: PipelineOut,
+                 page, is_write, valid, eff_weight):
+    """Commit the chunk to the table: hotness accumulation, demand-write
+    WEAR, the DMA swap commit, and the OWNER inverse-map update — all as
+    exact int32 deltas in ONE flattened scatter-add (then the decay
+    shift). Every delta is computed against pre-chunk reads (schedule
+    contract §2), and distinct updates target distinct (row, lane) slots
+    except WEAR, where duplicate targets sum exactly as the historical
+    sequential adds did.
+
+    Returns ``(table, dma, done, now, last_ret)``.
+    """
+    n = page.shape[0]
+    w_lanes = table.shape[-1]
+    n_pages = table.shape[0]
+    any_valid = jnp.any(valid)
+    last_ret = jnp.where(
+        any_valid, jnp.max(jnp.where(valid, pipe.returns, sc.last_return)),
+        sc.last_return)
+    now = jnp.maximum(sc.clock + params.issue_gap * n, last_ret)
+
+    # Hotness accumulation (decayed below, after the combined scatter —
+    # nothing else in the scatter touches the HOTNESS lane).
+    hot_w = 1 + (jnp.asarray(eff_weight, jnp.int32) - 1) * \
+        is_write.astype(jnp.int32)
+    hot_w = jnp.where(valid, hot_w, 0)
+    # NVM endurance: demand writes per slow frame (the DMA migration's
+    # full-page write is charged by the swap commit's WEAR deltas).
+    slow_wr = is_write & valid & (pipe.dev == SLOW)
+
+    # DMA swap commit, planned from the stage-2 prefetched rows.
+    swap_a = jnp.maximum(sc.dma.page_a, 0)  # pre-completion swap pair
+    plan = dma_lib.plan_commit(cfg, sc.dma, now, pipe.row_a, pipe.row_b,
+                               params)
+    # OWNER inverse map (fast frame -> owning page, the CLOCK victim
+    # rotation): the promoted page (swap_a, now FAST) owns its new frame.
+    # No swap completed => route the write through an out-of-range
+    # sentinel dropped by the scatter, so row 0's OWNER lane can never be
+    # clobbered by the idle guard index.
+    db = table_lib.device(pipe.row_b)
+    fb = table_lib.frame(pipe.row_b)
+    promoted = plan.done & (db == FAST)
+    own_pre = table[fb, table_lib.OWNER]
+    own_idx = jnp.where(promoted, fb * w_lanes + table_lib.OWNER,
+                        n_pages * w_lanes)
+    own_delta = jnp.where(promoted, swap_a - own_pre, 0)
+
+    idx = jnp.concatenate([
+        page * w_lanes + table_lib.HOTNESS,
+        jnp.where(slow_wr, pipe.frm, 0) * w_lanes + table_lib.WEAR,
+        plan.rows * w_lanes + plan.lanes,
+        own_idx[None],
+    ])
+    upd = jnp.concatenate([
+        hot_w, slow_wr.astype(jnp.int32), plan.delta, own_delta[None],
+    ])
+    table = table.reshape(-1).at[idx].add(upd, mode="drop") \
+        .reshape(n_pages, w_lanes)
+
+    do_decay = (sc.chunk_idx % params.decay_every) == (params.decay_every - 1)
+    table = jax.lax.cond(
+        do_decay,
+        lambda t: t.at[:, table_lib.HOTNESS].set(
+            t[:, table_lib.HOTNESS] >> params.hotness_decay_shift),
+        lambda t: t, table)
+    return table, plan.dma, plan.done, now, last_ret
+
+
+# --------------------------------------------------------------------------- #
+# phase 3: the policy proposal (reads the committed table)
+# --------------------------------------------------------------------------- #
+
+def policy_phase(cfg: EmulatorConfig, params: RuntimeParams,
+                 registry: PolicyRegistry, table: jax.Array, sc: StepScalars,
+                 dma: dma_lib.DMAState, now, page, is_write, valid):
+    """Policy dispatch on the *traced* policy id: ``lax.switch`` over the
+    (static, frozen) registry snapshot makes the policy itself a
+    batchable design axis — inside the Pallas body the id arrives via the
+    scalar-prefetch vector. A single-policy registry skips the switch.
+    Branches come from the snapshot's own function tuple, so
+    re-registering a policy name after the snapshot cannot leak into this
+    compilation. Returns ``(dma, clock_ptr)``."""
+    any_valid = jnp.any(valid)
+    branches = [functools.partial(fn, cfg, params) for fn in registry.fns]
+    ops_ = (table, sc.clock_ptr, page, is_write, valid)
+    if len(branches) == 1:
+        p_want, cand, victim, new_ptr = branches[0](*ops_)
+    else:
+        p_want, cand, victim, new_ptr = jax.lax.switch(
+            params.policy_id, branches, *ops_)
+    # Post-policy proposal mask: device sanity plus FLAGS enforcement — a
+    # pinned candidate or victim vetoes the swap no matter what the
+    # policy proposed (maybe_start re-checks the same pin bits).
+    cand_row, victim_row = table[cand], table[victim]
+    unpinned = ~(table_lib.is_pinned(cand_row) |
+                 table_lib.is_pinned(victim_row))
+    want = p_want & any_valid & unpinned & \
+        (table_lib.device(cand_row) == SLOW) & \
+        (table_lib.device(victim_row) == FAST)
+    dma, started = dma_lib.maybe_start(dma, want, cand, victim, now, table)
+    # CLOCK pointer commit (two cases, see policies.py): a proposal only
+    # consumes its victim frame when the swap actually started; with no
+    # proposal, the policy's pointer motion commits as-is (pin skipping).
+    clock_ptr = jnp.where(started | ~p_want, new_ptr, sc.clock_ptr)
+    return dma, clock_ptr
+
+
+# --------------------------------------------------------------------------- #
+# the whole step: ref composition + truncated variants for the bench
+# --------------------------------------------------------------------------- #
+
+def step_ref(cfg: EmulatorConfig, registry: PolicyRegistry, table: jax.Array,
+             params: RuntimeParams, sc: StepScalars, bank_free: jax.Array,
+             page, offset, is_write, size, valid, *, seq: bool = False):
+    """One chunk end-to-end (reads -> commit -> policy). The jnp
+    reference AND the scan path; ``seq=True`` is the same step with the
+    sequential in-kernel recurrences (what the Pallas body runs).
+
+    Returns ``(table, scalars, bank_free, outs)`` with ``outs`` carrying
+    per-request results (``returns`` masked, ``device`` raw post-redirect,
+    ``latency`` masked) plus the ``held``/``poisoned`` counter inputs.
+    """
+    pipe = pipeline_phase(cfg, params, table, sc, bank_free,
+                          page, offset, is_write, size, valid, seq=seq)
+    table, dma, _, now, last_ret = commit_phase(
+        cfg, params, table, sc, pipe, page, is_write, valid,
+        eff_write_weight(params, registry))
+    dma, clock_ptr = policy_phase(cfg, params, registry, table, sc, dma, now,
+                                  page, is_write, valid)
+    any_valid = jnp.any(valid)
+    sc2 = StepScalars(
+        clock=now, clock_ptr=clock_ptr, chunk_idx=sc.chunk_idx + 1, dma=dma,
+        link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
+        link_free_tx=jnp.where(any_valid, pipe.tx_last, sc.link_free_tx),
+        last_return=last_ret)
+    outs = {"returns": jnp.where(valid, pipe.returns, 0),
+            "device": pipe.dev, "latency": pipe.lat,
+            "held": pipe.held, "poisoned": pipe.poisoned}
+    return table, sc2, pipe.bank_free, outs
+
+
+STAGES = ("rx", "gather", "resolve", "return", "commit", "full")
+
+
+def step_until(cfg: EmulatorConfig, registry: PolicyRegistry,
+               table: jax.Array, params: RuntimeParams, sc: StepScalars,
+               bank_free: jax.Array, page, offset, is_write, size, valid,
+               *, upto: str = "full"):
+    """A :func:`step_ref`-shaped step truncated after ``upto`` (one of
+    :data:`STAGES`) — the per-stage breakdown lever of
+    ``benchmarks/bench_chunk_step.py``. Truncated variants keep the carry
+    structure (clock still advances) so they scan; timing deltas between
+    successive stages isolate each stage's cost."""
+    if upto == "full":
+        return step_ref(cfg, registry, table, params, sc, bank_free,
+                        page, offset, is_write, size, valid)
+    if upto not in STAGES:
+        raise ValueError(f"unknown stage {upto!r}; expected one of {STAGES}")
+    n = page.shape[0]
+    pipe_upto = upto if upto in ("rx", "gather", "resolve") else "full"
+    pipe = pipeline_phase(cfg, params, table, sc, bank_free,
+                          page, offset, is_write, size, valid,
+                          upto=pipe_upto)
+    outs = {"returns": jnp.where(valid, pipe.returns, 0),
+            "device": pipe.dev, "latency": pipe.lat,
+            "held": pipe.held, "poisoned": pipe.poisoned}
+    any_valid = jnp.any(valid)
+    if upto == "commit":
+        table, dma, _, now, last_ret = commit_phase(
+            cfg, params, table, sc, pipe, page, is_write, valid,
+            eff_write_weight(params, registry))
+        sc2 = StepScalars(
+            clock=now, clock_ptr=sc.clock_ptr, chunk_idx=sc.chunk_idx + 1,
+            dma=dma,
+            link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
+            link_free_tx=jnp.where(any_valid, pipe.tx_last, sc.link_free_tx),
+            last_return=last_ret)
+        return table, sc2, pipe.bank_free, outs
+    sc2 = StepScalars(
+        clock=sc.clock + params.issue_gap * n, clock_ptr=sc.clock_ptr,
+        chunk_idx=sc.chunk_idx + 1, dma=sc.dma,
+        link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
+        link_free_tx=jnp.where(any_valid & (pipe_upto == "full"),
+                               pipe.tx_last, sc.link_free_tx),
+        last_return=sc.last_return)
+    return table, sc2, pipe.bank_free, outs
+
+
+# --------------------------------------------------------------------------- #
+# the Pallas path
+# --------------------------------------------------------------------------- #
+
+# RuntimeParams fields carried as float32 in the kernel's float operand;
+# everything else rides the int32 scalar-prefetch vector. Must agree with
+# RuntimeParams.from_config dtypes (asserted by the kernel test suite).
+_FLOAT_PARAM_FIELDS = frozenset({
+    "fast_bytes_per_cycle", "slow_bytes_per_cycle", "link_bytes_per_cycle",
+    "pin_fast_fraction", "power_pj_per_bit_fast",
+    "power_pj_per_bit_slow_read", "power_pj_per_bit_slow_write"})
+
+# Scalar-state slots at the head of the int vector (before int params).
+_N_SC = 11
+
+
+def _pack_scalars(params: RuntimeParams, sc: StepScalars):
+    """(int32[NI], float32[NF]): 11 state scalars + int params, and the
+    float params. ``policy_id`` rides the int vector — that is the
+    scalar-prefetched dispatch operand."""
+    ints = [sc.clock, sc.clock_ptr, sc.chunk_idx, sc.dma.active,
+            sc.dma.page_a, sc.dma.page_b, sc.dma.start, sc.dma.swaps_done,
+            sc.link_free_rx, sc.link_free_tx, sc.last_return]
+    floats = []
+    for name, v in zip(RuntimeParams._fields, params):
+        (floats if name in _FLOAT_PARAM_FIELDS else ints).append(v)
+    return (jnp.stack([jnp.asarray(v, jnp.int32) for v in ints]),
+            jnp.stack([jnp.asarray(v, jnp.float32) for v in floats]))
+
+
+def _unpack_scalars(ints: jax.Array, floats: jax.Array):
+    """Inverse of :func:`_pack_scalars` (inside the kernel body)."""
+    sc = StepScalars(
+        clock=ints[0], clock_ptr=ints[1], chunk_idx=ints[2],
+        dma=dma_lib.DMAState(active=ints[3], page_a=ints[4], page_b=ints[5],
+                             start=ints[6], swaps_done=ints[7]),
+        link_free_rx=ints[8], link_free_tx=ints[9], last_return=ints[10])
+    vals, ii, fi = {}, _N_SC, 0
+    for name in RuntimeParams._fields:
+        if name in _FLOAT_PARAM_FIELDS:
+            vals[name] = floats[fi]
+            fi += 1
+        else:
+            vals[name] = ints[ii]
+            ii += 1
+    return RuntimeParams(**vals), sc
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_step_fn(cfg: EmulatorConfig, registry: PolicyRegistry,
+                    interpret: bool):
+    """Build (and cache) the batched one-kernel step for one static
+    geometry + frozen registry. The returned function takes/returns
+    arrays with an arbitrary leading batch shape; its ``custom_vmap``
+    rule maps a vmapped sweep's design-point axis onto the kernel's grid,
+    so all points launch once per chunk."""
+
+    def _body(ints_ref, table_ref, page_ref, offset_ref, iw_ref, size_ref,
+              valid_ref, floats_ref, bank_free_ref,
+              out_table_ref, out_sc_ref, out_bank_ref,
+              out_ret_ref, out_dev_ref, out_lat_ref, out_poi_ref):
+        bi = pl.program_id(0)
+        params, sc = _unpack_scalars(ints_ref[bi], floats_ref[0])
+        table, sc2, bank_free2, outs = step_ref(
+            cfg, registry, table_ref[0], params, sc, bank_free_ref[0],
+            page_ref[0], offset_ref[0], iw_ref[0] != 0, size_ref[0],
+            valid_ref[0] != 0, seq=True)
+        out_table_ref[0] = table
+        out_sc_ref[0] = jnp.stack(
+            [sc2.clock, sc2.clock_ptr, sc2.chunk_idx, sc2.dma.active,
+             sc2.dma.page_a, sc2.dma.page_b, sc2.dma.start,
+             sc2.dma.swaps_done, sc2.link_free_rx, sc2.link_free_tx,
+             sc2.last_return, outs["held"]])
+        out_bank_ref[0] = bank_free2
+        out_ret_ref[0] = outs["returns"]
+        out_dev_ref[0] = outs["device"]
+        out_lat_ref[0] = outs["latency"]
+        out_poi_ref[0] = outs["poisoned"].astype(jnp.int32)
+
+    @custom_batching.custom_vmap
+    def step(table, page, offset, is_write, size, valid, ints, floats,
+             bank_free):
+        batch = table.shape[:-2]
+        n_pages, w = table.shape[-2:]
+        chunk = page.shape[-1]
+        ni = ints.shape[-1]
+        nf = floats.shape[-1]
+        nb = bank_free.shape[-1]
+        tb = table.reshape(-1, n_pages, w)
+        b = tb.shape[0]
+
+        def vec(x):
+            return x.reshape(b, -1)
+
+        def spec(*shape):
+            return pl.BlockSpec((1, *shape),
+                                lambda bi, ints: (bi,) + (0,) * len(shape))
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=[spec(n_pages, w), spec(chunk), spec(chunk),
+                      spec(chunk), spec(chunk), spec(chunk), spec(nf),
+                      spec(nb)],
+            out_specs=[spec(n_pages, w), spec(_N_SC + 1), spec(nb),
+                       spec(chunk), spec(chunk), spec(chunk), spec(chunk)],
+        )
+        i32 = jnp.int32
+        outs = pl.pallas_call(
+            _body,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((b, n_pages, w), i32),
+                jax.ShapeDtypeStruct((b, _N_SC + 1), i32),
+                jax.ShapeDtypeStruct((b, nb), i32),
+                jax.ShapeDtypeStruct((b, chunk), i32),
+                jax.ShapeDtypeStruct((b, chunk), i32),
+                jax.ShapeDtypeStruct((b, chunk), i32),
+                jax.ShapeDtypeStruct((b, chunk), i32),
+            ],
+            interpret=interpret,
+        )(vec(ints), tb, vec(page), vec(offset), vec(is_write), vec(size),
+          vec(valid), vec(floats), vec(bank_free))
+        tbl2, scv, bf2, ret, dev, lat, poi = outs
+        return (tbl2.reshape(*batch, n_pages, w),
+                scv.reshape(*batch, _N_SC + 1),
+                bf2.reshape(*batch, nb),
+                ret.reshape(*batch, chunk), dev.reshape(*batch, chunk),
+                lat.reshape(*batch, chunk), poi.reshape(*batch, chunk))
+
+    @step.def_vmap
+    def _step_vmap(axis_size, in_batched, *args):
+        # vmap (the sweep's design-point axis) becomes the kernel's
+        # leading grid axis: one launch steps every design point's chunk.
+        # The sweep batches state + params but shares the trace, so
+        # broadcast whichever operands aren't batched.
+        args = tuple(
+            a if b else jnp.broadcast_to(a, (axis_size, *a.shape))
+            for a, b in zip(args, in_batched))
+        return step(*args), (True,) * 7
+
+    return step
+
+
+def use_chunk_step_kernel(cfg: EmulatorConfig) -> bool:
+    """Resolve the ``chunk_step_kernel`` knob (static, host-side): "on"
+    forces the kernel (interpret mode off-TPU — how CPU tests run it),
+    "off" forces the scan path, "auto" follows the same dispatch as
+    ``hmmu_lookup`` (:func:`kernels.ops.use_pallas`) with a VMEM budget
+    check on the resident table."""
+    knob = cfg.chunk_step_kernel
+    if knob == "off":
+        return False
+    if knob == "on":
+        return True
+    if knob != "auto":
+        raise ValueError(f"unknown chunk_step_kernel {knob!r}; expected "
+                         "'auto', 'on' or 'off'")
+    return (kernel_ops.use_pallas() and
+            cfg.n_pages * table_lib.ROW_W * 4 <= VMEM_TABLE_BUDGET)
+
+
+def chunk_step(cfg: EmulatorConfig, registry: PolicyRegistry,
+               table: jax.Array, params: RuntimeParams, sc: StepScalars,
+               bank_free: jax.Array, page, offset, is_write, size, valid):
+    """THE chunk step — one-kernel Pallas path or the scan path, resolved
+    by :func:`use_chunk_step_kernel` (bitwise identical either way).
+    Signature/returns as :func:`step_ref`."""
+    if not use_chunk_step_kernel(cfg):
+        return step_ref(cfg, registry, table, params, sc, bank_free,
+                        page, offset, is_write, size, valid)
+    fn = _pallas_step_fn(cfg, registry, kernel_ops._interpret())
+    ints, floats = _pack_scalars(params, sc)
+    tbl2, scv, bank_free2, returns, dev, lat, poi = fn(
+        table, page, offset, is_write.astype(jnp.int32), size,
+        valid.astype(jnp.int32), ints, floats, bank_free)
+    sc2 = StepScalars(
+        clock=scv[0], clock_ptr=scv[1], chunk_idx=scv[2],
+        dma=dma_lib.DMAState(active=scv[3], page_a=scv[4], page_b=scv[5],
+                             start=scv[6], swaps_done=scv[7]),
+        link_free_rx=scv[8], link_free_tx=scv[9], last_return=scv[10])
+    outs = {"returns": returns, "device": dev, "latency": lat,
+            "held": scv[11], "poisoned": poi != 0}
+    return tbl2, sc2, bank_free2, outs

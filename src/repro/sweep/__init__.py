@@ -7,12 +7,22 @@ evaluate it through the session API — ``repro.Engine.sweep`` runs every
 point against one trace in a single compiled, vmapped emulation,
 optionally sharded across devices, and ``Engine.continue_sweep`` resumes
 the whole grid from its stacked warm states (mesh-shardable too).
-:func:`run_sweep` is the deprecated free-function wrapper over it.
+``stack_params`` / ``sweep_mesh`` live in ``repro.engine`` and are
+re-exported here for convenience.
 """
 
 from .results import SweepResult, load_rows
-from .runner import run_sweep, stack_params, sweep_mesh
 from .spec import RUNTIME_FIELDS, DesignPoint, SweepSpec, build_points
+
+
+def __getattr__(name):
+    # Lazy re-exports: repro.engine itself imports this package (for
+    # SweepResult), so pulling these eagerly would be circular.
+    if name in ("stack_params", "sweep_mesh"):
+        from repro import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "SweepSpec",
@@ -20,7 +30,6 @@ __all__ = [
     "RUNTIME_FIELDS",
     "build_points",
     "stack_params",
-    "run_sweep",
     "sweep_mesh",
     "SweepResult",
     "load_rows",

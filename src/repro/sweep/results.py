@@ -25,8 +25,7 @@ from repro.core import table as table_lib
 
 @dataclasses.dataclass
 class SweepResult:
-    """Batched outcome of :meth:`repro.Engine.sweep` (and the legacy
-    ``run_sweep`` wrapper).
+    """Batched outcome of :meth:`repro.Engine.sweep`.
 
     ``states``/``outs`` carry a leading point axis aligned with
     ``points``; :meth:`rows` reduces them to one summary dict per point.

@@ -23,6 +23,19 @@ def make_trace_arrays(cfg, n, rng, hot_fraction=0.4, n_hot=4):
     return page, offset, is_write, size
 
 
+def engine_run(cfg, t, params=None, registry=None):
+    """Session-API equivalent of the old ``run_trace`` free function:
+    pad, run undonated, return (state, padded outputs, counters summary).
+    Shared by the oracle/policy/system tests that predate the Engine."""
+    from repro import Engine
+    from repro.core import counters as counters_lib, pad_trace
+
+    padded, valid = pad_trace(cfg, t)
+    state, outs = Engine(cfg, registry=registry).run(
+        padded, valid=valid, params=params, donate=False)
+    return state, outs, counters_lib.summary(state.counters)
+
+
 def make_churn_trace(cfg, n, hot_w, period, write_frac, seed=0):
     """The wear-leveling churn workload (rotating write-hot window wider
     than the fast tier). Single source of truth is ``churn_trace`` in

@@ -1,0 +1,221 @@
+"""The one-kernel Pallas chunk step (kernels.chunk_step) is a pure perf
+knob: with ``chunk_step_kernel="on"`` every emulation is BITWISE
+identical to the scan path, across bank_resolver x fuse_swap_gather x
+donation, including the adversarial corners — requests that hit the DMA
+swap pair mid-chunk (progress redirection), poisoned/pinned FLAGS state,
+and the chunk=1 degenerate grid — plus the sequential software oracle.
+
+Also pins the satellite bugfix: the swap-commit OWNER write is routed
+through a ``mode="drop"`` sentinel scatter, so an idle/unfinished DMA
+engine no longer clobbers ``table[0, OWNER]`` with a dummy write.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; CI installs it via the "test" extra
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from conftest import make_trace_arrays
+from repro import Engine
+from repro.core import Trace, dma as dma_lib, init_state, init_table, \
+    pad_trace, small_platform
+from repro.core import table as table_lib
+from repro.kernels import chunk_step as chunk_step_lib
+from repro.sims import trace_sim
+
+
+def _trace(cfg, n, seed=0, **kw):
+    arrays = make_trace_arrays(cfg, n, np.random.default_rng(seed), **kw)
+    return Trace(*(jnp.asarray(x) for x in arrays))
+
+
+def _adversarial_state(cfg, *, midswap=True, flags=True):
+    """A start state exercising the hard corners of the chunk schedule:
+    an in-flight swap whose members the trace will hit mid-chunk (the
+    progress indicator redirects sub-blocks already exchanged), plus
+    pinned and poisoned pages for the FLAGS machinery."""
+    state = init_state(cfg, cfg.runtime())
+    table = state.table
+    if flags:
+        table = table_lib.set_flags(table, [0, 1], table_lib.PIN_FAST)
+        table = table_lib.set_flags(
+            table, [cfg.n_fast_pages + 1], table_lib.PIN_SLOW)
+        table = table_lib.set_flags(
+            table, [cfg.n_fast_pages + 3], table_lib.POISONED)
+    state = state._replace(table=table)
+    if midswap:
+        # swap in flight between slow page a and fast page b, started at
+        # cycle 0 — the first chunks of the run land mid-swap.
+        a = jnp.int32(cfg.n_fast_pages + 2)
+        b = jnp.int32(cfg.n_fast_pages - 1)
+        state = state._replace(dma=state.dma._replace(
+            active=jnp.int32(1), page_a=a, page_b=b, start=jnp.int32(0)))
+    return state
+
+
+def _swap_pair_trace(cfg, n, seed=0):
+    """Random trace biased so ~half the requests hit the in-flight swap
+    pair of :func:`_adversarial_state` at varied offsets (both sides of
+    the progress cutoff), the rest a migrating hot set."""
+    rng = np.random.default_rng(seed)
+    page, off, w, sz = make_trace_arrays(cfg, n, rng, hot_fraction=0.4)
+    hit = rng.random(n) < 0.5
+    pair = np.where(rng.random(n) < 0.5, cfg.n_fast_pages + 2,
+                    cfg.n_fast_pages - 1).astype(np.int32)
+    page = np.where(hit, pair, page).astype(np.int32)
+    off = (rng.integers(0, cfg.page_size // 64, n) * 64).astype(np.int32)
+    return Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
+                 jnp.asarray(sz))
+
+
+def _run_pair(base, knobs, t, state_fn, donate):
+    """Run the same two-leg emulation with chunk_step_kernel off and on:
+    one undonated run from the adversarial start state, then a continued
+    run with the requested donation (donating a run-produced state, per
+    the session contract — a hand-built init_state aliases its zero
+    buffers, which XLA rejects as a double donation)."""
+    out = []
+    for mode in ("off", "on"):
+        cfg = base.with_(chunk_step_kernel=mode, **knobs)
+        padded, valid = pad_trace(cfg, t)
+        engine = Engine(cfg)
+        res = engine.run(padded, valid=valid, state=state_fn(cfg),
+                         donate=False)
+        res = engine.run(padded, valid=valid, state=res.state,
+                         donate=donate)
+        out.append(res)
+    return out
+
+
+def _assert_bitwise(a, b):
+    for k in ("returns", "device", "latency"):
+        np.testing.assert_array_equal(np.asarray(a.outs[k]),
+                                      np.asarray(b.outs[k]))
+    np.testing.assert_array_equal(np.asarray(a.state.table),
+                                  np.asarray(b.state.table))
+    np.testing.assert_array_equal(np.asarray(a.state.bank_free),
+                                  np.asarray(b.state.bank_free))
+    for f in ("clock", "clock_ptr", "link_free_rx", "link_free_tx",
+              "last_return", "chunk_idx"):
+        assert int(getattr(a.state, f)) == int(getattr(b.state, f)), f
+    for f in ("active", "page_a", "page_b", "start", "swaps_done"):
+        assert int(getattr(a.state.dma, f)) == int(getattr(b.state.dma, f))
+
+
+_KNOBS = [
+    dict(bank_resolver="dense", fuse_swap_gather=False),
+    dict(bank_resolver="dense", fuse_swap_gather=True),
+    dict(bank_resolver="segmented", fuse_swap_gather=False),
+    dict(bank_resolver="segmented", fuse_swap_gather=True),
+]
+
+
+@pytest.mark.parametrize("knobs", _KNOBS)
+@pytest.mark.parametrize("donate", [False, True])
+def test_kernel_bitwise_identical_on_adversarial_state(knobs, donate):
+    """Deterministic bit-identity across the full knob matrix, with
+    mid-chunk DMA redirects and pinned/poisoned FLAGS in play (the
+    hypothesis sweep below widens the input space when available)."""
+    base = small_platform(chunk=8, hot_threshold=2, decay_every=8,
+                          policy="hotness")
+    t = _swap_pair_trace(base, 96)
+    off, on = _run_pair(base, knobs, t,
+                        lambda cfg: _adversarial_state(cfg), donate)
+    _assert_bitwise(off, on)
+    assert int(off.state.dma.swaps_done) > 0   # the corner actually fired
+
+
+def test_kernel_chunk1_matches_trace_sim_oracle():
+    """chunk=1 degenerate grid: the kernel path still matches the
+    sequential software oracle request-for-request."""
+    cfg = small_platform(chunk=1, hot_threshold=2, decay_every=8,
+                         chunk_step_kernel="on")
+    arrays = make_trace_arrays(cfg, 160, np.random.default_rng(3))
+    t = Trace(*(jnp.asarray(x) for x in arrays))
+    state, outs = Engine(cfg).run(t)
+    oracle = trace_sim.simulate(cfg, *arrays)
+    np.testing.assert_array_equal(np.asarray(outs["returns"]),
+                                  oracle.returns)
+    np.testing.assert_array_equal(np.asarray(outs["device"]), oracle.device)
+    assert int(state.clock) == oracle.clock
+    assert int(state.dma.swaps_done) == oracle.swaps
+
+
+def test_auto_knob_resolves_and_validates():
+    base = small_platform()
+    assert isinstance(chunk_step_lib.use_chunk_step_kernel(base), bool)
+    assert chunk_step_lib.use_chunk_step_kernel(
+        base.with_(chunk_step_kernel="off")) is False
+    assert chunk_step_lib.use_chunk_step_kernel(
+        base.with_(chunk_step_kernel="on")) is True
+    with pytest.raises(ValueError, match="chunk_step_kernel"):
+        chunk_step_lib.use_chunk_step_kernel(
+            base.with_(chunk_step_kernel="bogus"))
+
+
+@pytest.mark.parametrize("mode", ["off", "on"])
+def test_owner_row0_untouched_without_swap_commit(mode):
+    """Regression (swap-commit OWNER write): with no swap completing, the
+    old set-style commit wrote a dummy value through ``table[0, OWNER]``;
+    the drop-sentinel scatter must leave row 0 bit-identical."""
+    cfg = small_platform(chunk=8, policy="static",
+                         chunk_step_kernel=mode)
+    state = init_state(cfg, cfg.runtime())
+    sentinel = 12345
+    table = state.table.at[0, table_lib.OWNER].set(sentinel)
+    t = _trace(cfg, 64, hot_fraction=0.0)
+    padded, valid = pad_trace(cfg, t)
+    res = Engine(cfg).run(padded, valid=valid,
+                          state=state._replace(table=table), donate=False)
+    assert int(res.state.dma.swaps_done) == 0
+    assert int(res.state.table[0, table_lib.OWNER]) == sentinel
+
+
+def test_owner_row0_untouched_by_unfinished_maybe_complete():
+    """Same regression at the DMA-engine level: idle AND in-flight-but-
+    unfinished engines leave the whole table (row 0 included) unchanged."""
+    cfg = small_platform()
+    table = init_table(cfg).at[0, table_lib.OWNER].set(777)
+    for dma in (dma_lib.DMAState.idle(),
+                dma_lib.DMAState.idle()._replace(
+                    active=jnp.int32(1),
+                    page_a=jnp.int32(cfg.n_fast_pages + 2),
+                    page_b=jnp.int32(0), start=jnp.int32(10**6))):
+        _, t2, done = dma_lib.maybe_complete(cfg, dma, jnp.int32(50), table)
+        assert not bool(done)
+        np.testing.assert_array_equal(np.asarray(t2), np.asarray(table))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.data())
+    @settings(max_examples=10, deadline=None)
+    def test_kernel_bitwise_identical_property(data):
+        """Property: for random knobs, policies, traces, donation and
+        adversarial start states, kernel == scan bit-for-bit."""
+        knobs = dict(
+            bank_resolver=data.draw(st.sampled_from(
+                ["dense", "segmented", "auto"])),
+            fuse_swap_gather=data.draw(st.booleans()),
+        )
+        donate = data.draw(st.booleans())
+        policy = data.draw(st.sampled_from(
+            ["hotness", "write_bias", "wear_level", "static"]))
+        base = small_platform(chunk=8, hot_threshold=2, decay_every=8,
+                              policy=policy)
+        seed = data.draw(st.integers(0, 2**16))
+        midswap = data.draw(st.booleans())
+        flags = data.draw(st.booleans())
+        t = _swap_pair_trace(base, 64, seed=seed)
+        off, on = _run_pair(
+            base, knobs, t,
+            lambda cfg: _adversarial_state(cfg, midswap=midswap,
+                                           flags=flags), donate)
+        _assert_bitwise(off, on)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_kernel_bitwise_identical_property():
+        pass

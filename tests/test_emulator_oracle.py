@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import make_trace_arrays
-from repro.core import Trace, run_trace, small_platform
+from conftest import engine_run, make_trace_arrays
+from repro.core import Trace, small_platform
 from repro.sims import cycle_sim, trace_sim
 
 
@@ -15,7 +15,7 @@ def _run_all(cfg, arrays):
     page, off, w, sz = arrays
     t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
               jnp.asarray(sz))
-    state, outs, _ = run_trace(cfg, t)
+    state, outs, _ = engine_run(cfg, t)
     r1 = trace_sim.simulate(cfg, page, off, w, sz)
     r2 = cycle_sim.simulate(cfg, page, off, w, sz, refresh=False)
     return state, outs, r1, r2
@@ -73,8 +73,8 @@ def test_chunked_counts_invariant(chunk):
     page, off, w, sz = make_trace_arrays(base, 320, rng)
     t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
               jnp.asarray(sz))
-    s1, o1, _ = run_trace(base, t)
-    s2, o2, _ = run_trace(base.with_(chunk=chunk), t)
+    s1, o1, _ = engine_run(base, t)
+    s2, o2, _ = engine_run(base.with_(chunk=chunk), t)
     np.testing.assert_array_equal(np.asarray(o1["device"]),
                                   np.asarray(o2["device"]))
     for f in ("reads_fast", "writes_fast", "reads_slow", "writes_slow"):
@@ -90,6 +90,6 @@ def test_chunked_pipeline_is_faster_in_emulated_time():
     page, off, w, sz = make_trace_arrays(cfg1, 320, rng)
     t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
               jnp.asarray(sz))
-    s1, _, _ = run_trace(cfg1, t)
-    sN, _, _ = run_trace(cfgN, t)
+    s1, _, _ = engine_run(cfg1, t)
+    sN, _, _ = engine_run(cfgN, t)
     assert int(sN.clock) < int(s1.clock)

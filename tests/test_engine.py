@@ -1,9 +1,8 @@
 """The session API (`repro.Engine`) correctness contract:
 
-* Engine.run / Engine.sweep are BITWISE identical to the legacy
-  `emulate` / `run_sweep` wrappers across bank_resolver x
-  fuse_swap_gather x donate combos (the wrappers delegate, the tests
-  pin it);
+* Engine.run is BITWISE invariant across bank_resolver x
+  fuse_swap_gather x donate combos, fresh and continued, and
+  Engine.sweep matches per-point Engine runs bit-for-bit;
 * `run_stream` over K segments — equal-size or ragged — is bitwise
   identical to one concatenated `run`;
 * mesh-sharded, donated continued sweeps equal the single long
@@ -22,22 +21,15 @@ import pytest
 
 from conftest import make_trace_arrays
 from repro import Engine, PolicyRegistry
-from repro.core import (Trace, emulate, emulate_channels, pad_trace,
-                        run_trace, small_platform)
+from repro.core import Trace, pad_trace, small_platform
 from repro.core import policies as policies_lib
 from repro.sims import trace_sim
-from repro.sweep import SweepSpec, build_points, run_sweep
+from repro.sweep import SweepSpec, build_points
 
 
 def _trace(cfg, n, seed=0, **kw):
     arrays = make_trace_arrays(cfg, n, np.random.default_rng(seed), **kw)
     return Trace(*(jnp.asarray(x) for x in arrays))
-
-
-def _legacy(call, *args, **kw):
-    """Run a deprecated wrapper, asserting (and swallowing) its warning."""
-    with pytest.warns(DeprecationWarning, match="legacy"):
-        return call(*args, **kw)
 
 
 def _assert_state_equal(a, b):
@@ -54,14 +46,17 @@ def _assert_state_equal(a, b):
     dict(bank_resolver="segmented", fuse_swap_gather=True),
 ])
 @pytest.mark.parametrize("donate", [False, True])
-def test_engine_run_bitwise_matches_legacy_emulate(knobs, donate):
-    cfg = small_platform(chunk=16, hot_threshold=2, decay_every=8, **knobs)
+def test_engine_run_knobs_bitwise_and_donation(knobs, donate):
+    """Every resolver/fusion knob combo — fresh and continued, donated or
+    not — is bitwise identical to the baseline dense/unfused path, and
+    donation consumes the passed-in state (session contract)."""
+    base = small_platform(chunk=16, hot_threshold=2, decay_every=8)
+    cfg = base.with_(**knobs)
     t = _trace(cfg, 160, hot_fraction=0.5)
-    padded, valid = pad_trace(cfg, t)
     engine = Engine(cfg)
 
     # fresh-state run
-    want_state, want_outs = _legacy(emulate, cfg, padded, valid)
+    want_state, want_outs = Engine(base).run(t)
     got_state, got_outs = engine.run(t)
     for k in ("returns", "device", "latency"):
         np.testing.assert_array_equal(np.asarray(got_outs[k]),
@@ -69,12 +64,11 @@ def test_engine_run_bitwise_matches_legacy_emulate(knobs, donate):
     _assert_state_equal(got_state, want_state)
 
     # continued run, with/without donation
-    s_legacy = _legacy(emulate, cfg, padded, valid)[0]
-    want2 = _legacy(emulate, cfg, padded, valid, s_legacy, donate=donate)
+    want2 = Engine(base).run(t, state=want_state, donate=False)
     got2 = engine.run(t, state=got_state, donate=donate)
     np.testing.assert_array_equal(np.asarray(got2.outs["returns"]),
-                                  np.asarray(want2[1]["returns"]))
-    _assert_state_equal(got2.state, want2[0])
+                                  np.asarray(want2.outs["returns"]))
+    _assert_state_equal(got2.state, want2.state)
     if donate:  # the passed-in state was consumed (session contract)
         with pytest.raises(RuntimeError):
             np.asarray(got_state.table)
@@ -138,24 +132,25 @@ def test_run_stream_continues_and_consumes_state():
         np.asarray(s0.table)
 
 
-def test_engine_sweep_bitwise_matches_legacy_run_sweep():
+def test_engine_sweep_bitwise_matches_per_point_runs():
     base = small_platform(chunk=16, hot_threshold=2, decay_every=8)
     spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram"),
                      fast_fractions=(0.125, 0.25),
                      policies=("static", "hotness"), link_lats=(600, 100))
     # trace length 144 (not 160): keeps this grid's entry-cache key
-    # distinct from test_sweep's, whose compile_count delta asserts ==1
+    # distinct from test_sweep's, whose compile-count delta asserts ==1
     t = _trace(base, 144, hot_fraction=0.5)
     engine = Engine(base)
     got = engine.sweep(spec, t)
-    want = _legacy(run_sweep, spec, t)
-    for k in ("returns", "device", "latency"):
-        np.testing.assert_array_equal(np.asarray(got.outs[k]),
-                                      np.asarray(want.outs[k]))
-    np.testing.assert_array_equal(np.asarray(got.states.table),
-                                  np.asarray(want.states.table))
-    assert [r["label"] for r in got.rows()] == \
-        [r["label"] for r in want.rows()]
+    points = build_points(spec)
+    assert [r["label"] for r in got.rows()] == [pt.label for pt in points]
+    for i, pt in enumerate(points):
+        want_state, want_outs = Engine(pt.cfg).run(t)
+        for k in ("returns", "device", "latency"):
+            np.testing.assert_array_equal(np.asarray(got.outs[k][i]),
+                                          np.asarray(want_outs[k]))
+        np.testing.assert_array_equal(np.asarray(got.states.table[i]),
+                                      np.asarray(want_state.table))
 
 
 def test_engine_sweep_accepts_stacked_params():
@@ -314,28 +309,12 @@ def test_engine_pads_and_trims_unaligned_traces():
     state, outs = engine.run(t)
     assert outs["returns"].shape == (90,)
     padded, valid = pad_trace(cfg, t)
-    want_state, want_outs = _legacy(emulate, cfg, padded, valid)
+    want_state, want_outs = engine.run(padded, valid=valid, donate=False)
     np.testing.assert_array_equal(np.asarray(outs["returns"]),
                                   np.asarray(want_outs["returns"][:90]))
     _assert_state_equal(state, want_state)
     with pytest.raises(ValueError, match="chunk-multiple"):
         engine.run(t, valid=jnp.ones(90, bool))
-
-
-def test_legacy_wrappers_warn_and_delegate():
-    cfg = small_platform(chunk=16, hot_threshold=2)
-    t = _trace(cfg, 64)
-    padded, valid = pad_trace(cfg, t)
-    _legacy(emulate, cfg, padded, valid)
-    _legacy(run_trace, cfg, t)
-    _legacy(run_sweep, SweepSpec(base=cfg, link_lats=(600, 100)), t)
-    per = 32
-    traces = Trace(*(jnp.stack([x[:per], x[per:2 * per]]) for x in t))
-    _legacy(emulate_channels, cfg, traces)
-    # run_trace keeps its padded-outputs contract and summary dict
-    state, outs, summ = _legacy(run_trace, cfg, _trace(cfg, 60))
-    assert outs["returns"].shape == (64,)
-    assert "mean_read_latency_cyc" in summ
 
 
 def test_run_channels_matches_per_channel_runs():

@@ -210,7 +210,7 @@ def test_hmmu_lookup_vmap_dispatches_to_batched_kernel(monkeypatch):
     b, n_pages, chunk = 4, 48, 9
     tables = jnp.asarray(rng.integers(0, 2**20, (b, n_pages, 8)), jnp.int32)
     pages = jnp.asarray(rng.integers(0, n_pages, chunk), jnp.int32)
-    # table batched, pages shared — exactly run_sweep's vmap structure
+    # table batched, pages shared — exactly Engine.sweep's vmap structure
     got = jax.vmap(ops.hmmu_lookup, in_axes=(0, None))(tables, pages)
     want = np.stack([np.asarray(ref.hmmu_lookup(tables[i], pages))
                      for i in range(b)])

@@ -1,18 +1,19 @@
 """The hot-path perf knobs must never change results: every combination
-of bank resolver, gather fusion, scan unroll and buffer donation is
-BITWISE identical to the baseline dense/unfused path — only wall-clock
-may differ. Plus the channel-parallel params/registry threading fix and
-continued (incremental) sweeps."""
+of bank resolver, gather fusion, scan unroll, one-kernel chunk step and
+buffer donation is BITWISE identical to the baseline dense/unfused scan
+path — only wall-clock may differ. Plus the channel-parallel
+params/registry threading and continued (incremental) sweeps."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import make_trace_arrays
-from repro.core import (RuntimeParams, Trace, emulate, emulate_channels,
-                        init_state, pad_trace, small_platform)
+from repro import Engine
+from repro.core import (RuntimeParams, Trace, init_state, pad_trace,
+                        small_platform)
 from repro.core import table as table_lib
 from repro.core.latency import pick_bank_resolver
-from repro.sweep import SweepSpec, build_points, run_sweep
+from repro.sweep import SweepSpec, build_points
 
 
 def _trace(cfg, n, seed=0, **kw):
@@ -22,7 +23,7 @@ def _trace(cfg, n, seed=0, **kw):
 
 def _outputs(cfg, t):
     padded, valid = pad_trace(cfg, t)
-    state, outs = emulate(cfg, padded, valid)
+    state, outs = Engine(cfg).run(padded, valid=valid, donate=False)
     return (np.asarray(outs["returns"]), np.asarray(outs["device"]),
             np.asarray(outs["latency"]), np.asarray(state.table),
             np.asarray(state.bank_free), int(state.clock),
@@ -35,6 +36,9 @@ def _outputs(cfg, t):
     dict(bank_resolver="segmented", fuse_swap_gather=True),
     dict(bank_resolver="auto"),
     dict(bank_resolver="segmented", scan_unroll=4),
+    dict(chunk_step_kernel="on"),
+    dict(bank_resolver="dense", fuse_swap_gather=True,
+         chunk_step_kernel="on"),
 ])
 @pytest.mark.parametrize("chunk", [1, 16])
 def test_perf_knobs_bitwise_identical(knobs, chunk):
@@ -66,12 +70,13 @@ def test_zero_flags_reproduces_unflagged_outputs(knobs):
     base = small_platform(chunk=16, hot_threshold=2, decay_every=8, **knobs)
     t = _trace(base, 160, hot_fraction=0.6)
     padded, valid = pad_trace(base, t)
-    want_state, want_outs = emulate(base, padded, valid)
+    want_state, want_outs = Engine(base).run(padded, valid=valid,
+                                             donate=False)
 
     pin_cfg = base.with_(pin_fast_fraction=0.5)
-    pin_state, pin_outs = emulate(pin_cfg, padded, valid,
-                                  init_state(pin_cfg, pin_cfg.runtime()),
-                                  params=pin_cfg.runtime())
+    pin_state, pin_outs = Engine(pin_cfg).run(
+        padded, valid=valid, state=init_state(pin_cfg, pin_cfg.runtime()),
+        params=pin_cfg.runtime(), donate=False)
     assert not np.array_equal(np.asarray(pin_outs["device"]),
                               np.asarray(want_outs["device"]))
     flg = np.asarray(table_lib.flags(pin_state.table))
@@ -81,7 +86,8 @@ def test_zero_flags_reproduces_unflagged_outputs(knobs):
     zeroed = init_state(pin_cfg, pin_cfg.runtime())
     zeroed = zeroed._replace(
         table=zeroed.table.at[:, table_lib.FLAGS].set(0))
-    got_state, got_outs = emulate(base, padded, valid, zeroed)
+    got_state, got_outs = Engine(base).run(padded, valid=valid,
+                                           state=zeroed, donate=False)
     for k in ("returns", "device", "latency"):
         np.testing.assert_array_equal(np.asarray(got_outs[k]),
                                       np.asarray(want_outs[k]))
@@ -105,11 +111,14 @@ def test_donated_continuation_bitwise_and_consumes_state():
     t = _trace(cfg, 96)
     padded, valid = pad_trace(cfg, t)
 
-    s0, _ = emulate(cfg, padded, valid)
-    want_state, want_outs = emulate(cfg, padded, valid, s0)
+    engine = Engine(cfg)
+    s0, _ = engine.run(padded, valid=valid, donate=False)
+    want_state, want_outs = engine.run(padded, valid=valid, state=s0,
+                                       donate=False)
 
-    s0b, _ = emulate(cfg, padded, valid)
-    got_state, got_outs = emulate(cfg, padded, valid, s0b, donate=True)
+    s0b, _ = engine.run(padded, valid=valid, donate=False)
+    got_state, got_outs = engine.run(padded, valid=valid, state=s0b,
+                                     donate=True)
 
     np.testing.assert_array_equal(np.asarray(got_outs["returns"]),
                                   np.asarray(want_outs["returns"]))
@@ -122,8 +131,8 @@ def test_donated_continuation_bitwise_and_consumes_state():
 
 
 def test_channels_thread_params_and_registry():
-    """Regression: emulate_channels used to drop params/registry, so
-    channel-parallel runs silently ignored swept runtime parameters."""
+    """Regression: channel-parallel runs once silently dropped
+    params/registry — swept runtime parameters must bite per channel."""
     cfg = small_platform(chunk=16, hot_threshold=2)
     params = RuntimeParams.from_config(cfg).with_(
         slow_read_lat=jnp.int32(9999), policy_id=jnp.int32(0))
@@ -131,16 +140,16 @@ def test_channels_thread_params_and_registry():
     per = 64
     traces = Trace(*(jnp.stack([x[:per], x[per:2 * per]])
                      for x in _trace(cfg, 2 * per)))
-    states, outs = emulate_channels(cfg, traces, params, registry)
+    engine = Engine(cfg, registry=registry)
+    states, outs = engine.run_channels(traces, params=params)
     for i in range(2):
         one = Trace(*(x[i] for x in traces))
-        want_state, want_outs = emulate(cfg, one, params=params,
-                                        registry=registry)
+        want_state, want_outs = engine.run(one, params=params)
         np.testing.assert_array_equal(np.asarray(outs["returns"][i]),
                                       np.asarray(want_outs["returns"]))
         assert int(states.clock[i]) == int(want_state.clock)
     # and the params actually bite: default params give different timing
-    _, outs_default = emulate_channels(cfg, traces)
+    _, outs_default = Engine(cfg).run_channels(traces)
     assert not np.array_equal(np.asarray(outs["returns"]),
                               np.asarray(outs_default["returns"]))
 
@@ -156,16 +165,17 @@ def test_continued_sweep_matches_one_long_sweep():
     n = len(t)
     t2 = Trace(*(jnp.concatenate([x, x]) for x in t))
 
-    full = run_sweep(points, t2)
-    first = run_sweep(points, t)
-    cont = run_sweep(points, t, states=first.states)
+    engine = Engine(base)
+    full = engine.sweep(points, t2)
+    first = engine.sweep(points, t)
+    cont = engine.sweep(points, t, states=first.states, donate=False)
     np.testing.assert_array_equal(np.asarray(cont.outs["returns"]),
                                   np.asarray(full.outs["returns"][:, n:]))
     np.testing.assert_array_equal(np.asarray(cont.states.table),
                                   np.asarray(full.states.table))
 
-    first_d = run_sweep(points, t)
-    cont_d = run_sweep(points, t, states=first_d.states, donate=True)
+    first_d = engine.sweep(points, t)
+    cont_d = engine.sweep(points, t, states=first_d.states, donate=True)
     np.testing.assert_array_equal(np.asarray(cont_d.states.table),
                                   np.asarray(full.states.table))
     with pytest.raises(RuntimeError):

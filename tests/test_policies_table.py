@@ -11,9 +11,10 @@ try:  # property tests need hypothesis; CI installs it via the "test" extra
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from conftest import make_churn_trace, make_trace_arrays
-from repro.core import (HybridAllocator, Trace, check_table, emulate,
-                        init_table, pad_trace, run_trace, small_platform)
+from conftest import engine_run, make_churn_trace, make_trace_arrays
+from repro import Engine
+from repro.core import (HybridAllocator, Trace, check_table,
+                        init_table, pad_trace, small_platform)
 from repro.core import table as table_lib
 from repro.core.config import FAST, SLOW
 
@@ -26,7 +27,7 @@ def test_hot_page_gets_promoted():
     page = np.full(n, hot_page, np.int32)
     t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
               jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
-    state, outs, _ = run_trace(cfg, t)
+    state, outs, _ = engine_run(cfg, t)
     assert int(state.dma.swaps_done) >= 1
     assert int(table_lib.device(state.table)[hot_page]) == FAST
     # later accesses hit the fast tier
@@ -40,7 +41,7 @@ def test_static_never_migrates():
     page, off, w, sz = make_trace_arrays(cfg, 256, rng, hot_fraction=0.8)
     t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
               jnp.asarray(sz))
-    state, _, _ = run_trace(cfg, t)
+    state, _, _ = engine_run(cfg, t)
     assert int(state.dma.swaps_done) == 0
     table0 = init_table(cfg)
     np.testing.assert_array_equal(
@@ -56,7 +57,7 @@ def test_table_bijection_preserved_after_many_swaps():
                                          n_hot=6)
     t = Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
               jnp.asarray(sz))
-    state, _, _ = run_trace(cfg, t)
+    state, _, _ = engine_run(cfg, t)
     assert int(state.dma.swaps_done) >= 2
     # check_table also validates the OWNER-lane inverse map
     check_table(cfg, np.asarray(state.table))
@@ -73,7 +74,7 @@ def test_stream_policy_prefetches():
     page = (cfg.n_fast_pages + np.arange(n) % 24).astype(np.int32)
     t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
               jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
-    state, _, _ = run_trace(cfg, t)
+    state, _, _ = engine_run(cfg, t)
     assert int(state.dma.swaps_done) >= 1
 
 
@@ -124,8 +125,8 @@ def test_write_bias_flattens_nvm_wear():
     t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
               jnp.ones(n, bool), jnp.full(n, 64, jnp.int32))
 
-    s_static, _, _ = run_trace(base.with_(policy="static"), t)
-    s_wb, _, _ = run_trace(base.with_(policy="write_bias", write_weight=4), t)
+    s_static, _, _ = engine_run(base.with_(policy="static"), t)
+    s_wb, _, _ = engine_run(base.with_(policy="write_bias", write_weight=4), t)
     assert int(s_wb.dma.swaps_done) > 0
     assert int(jnp.max(table_lib.wear(s_wb.table))) < \
         int(jnp.max(table_lib.wear(s_static.table)))
@@ -139,8 +140,8 @@ def test_wear_level_flattens_wear_at_equal_hit_rate():
                           hot_threshold=4, decay_every=8)
     t = make_churn_trace(base, 8192, hot_w=24, period=512, write_frac=0.7)
 
-    s_hot, o_hot, _ = run_trace(base.with_(policy="hotness"), t)
-    s_wl, o_wl, _ = run_trace(base.with_(policy="wear_level"), t)
+    s_hot, o_hot, _ = engine_run(base.with_(policy="hotness"), t)
+    s_wl, o_wl, _ = engine_run(base.with_(policy="wear_level"), t)
     assert int(s_wl.dma.swaps_done) > 0
 
     def peak(s):
@@ -165,7 +166,7 @@ def test_clock_ptr_does_not_advance_on_dropped_proposals():
     page = (cfg.n_fast_pages + (np.arange(n) % 4)).astype(np.int32)
     t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
               jnp.zeros(n, bool), jnp.full(n, 64, jnp.int32))
-    state, _, _ = run_trace(cfg, t)
+    state, _, _ = engine_run(cfg, t)
     assert int(state.dma.active) == 1        # the one swap never finished
     assert int(state.dma.swaps_done) == 0
     # exactly one proposal started -> the pointer advanced exactly once
@@ -271,7 +272,9 @@ def _run_with_flags(cfg, t, fast_pins=(), slow_pins=(), poison=()):
         table = table_lib.set_flags(table, list(slow_pins), table_lib.PIN_SLOW)
     if len(poison):
         table = table_lib.set_flags(table, list(poison), table_lib.POISONED)
-    return emulate(cfg, padded, valid, state._replace(table=table))
+    return Engine(cfg).run(padded, valid=valid,
+                           state=state._replace(table=table),
+                           donate=False)
 
 
 def _pin_check(cfg, seed, fast_pins, slow_pins):
@@ -344,7 +347,7 @@ def test_wear_counts_writes_only():
     t = Trace(jnp.asarray(page), jnp.zeros(n, jnp.int32),
               jnp.asarray(np.arange(n) % 2 == 0),       # half writes
               jnp.full(n, 64, jnp.int32))
-    state, _, _ = run_trace(cfg, t)
+    state, _, _ = engine_run(cfg, t)
     wear = table_lib.wear(state.table)
     assert int(jnp.sum(wear)) == n // 2
     assert int(wear[3]) == n // 2                       # frame 3 of NVM

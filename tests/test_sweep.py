@@ -7,10 +7,11 @@ import numpy as np
 import pytest
 
 from conftest import make_trace_arrays
-from repro.core import Trace, emulate, pad_trace, small_platform
+from repro import Engine
+from repro.core import Trace, pad_trace, small_platform
+from repro.core.emulator import entry_cache_count
 from repro.sims import trace_sim
-from repro.sweep import SweepSpec, build_points, load_rows, run_sweep
-from repro.sweep.runner import compile_count
+from repro.sweep import SweepSpec, build_points, load_rows
 
 
 def _as_trace(page, off, w, sz):
@@ -38,14 +39,13 @@ def test_vmapped_sweep_bitwise_matches_independent_runs():
     assert len(points) == 16
     t = _trace(base, 160, hot_fraction=0.5)
 
-    before = compile_count()
-    res = run_sweep(points, t)
-    if before is not None:
-        assert compile_count() - before == 1
+    before = entry_cache_count()
+    res = Engine(base).sweep(points, t)
+    assert entry_cache_count() - before == 1
 
     for i, pt in enumerate(points):
         padded, valid = pad_trace(pt.cfg, t)
-        state, outs = emulate(pt.cfg, padded, valid)
+        state, outs = Engine(pt.cfg).run(padded, valid=valid, donate=False)
         for key in ("returns", "device", "latency"):
             got = np.asarray(res.outs[key][i])
             np.testing.assert_array_equal(got, np.asarray(outs[key]))
@@ -69,7 +69,7 @@ def test_chunk1_sweep_points_match_trace_sim_oracle():
     page, off, w, sz = make_trace_arrays(base, 200, np.random.default_rng(3))
     t = _as_trace(page, off, w, sz)
 
-    res = run_sweep(points, t)
+    res = Engine(base).sweep(points, t)
     for i, pt in enumerate(points):
         oracle = trace_sim.simulate(pt.cfg, page, off, w, sz)
         got_returns = np.asarray(res.outs["returns"][i])
@@ -89,7 +89,7 @@ def test_sweep_results_rows_and_axes():
     )
     points = build_points(spec)
     assert len(points) == 4
-    res = run_sweep(points, _trace(base, 64))
+    res = Engine(base).sweep(points, _trace(base, 64))
     rows = res.rows()
     assert [r["tech"] for r in rows] == ["3dxpoint", "3dxpoint", "flash", "flash"]
     assert {r["hot_threshold"] for r in rows} == {2, 16}
@@ -104,12 +104,11 @@ def test_sweep_compilation_shared_across_runtime_bases():
     sets match) must share one compiled executable."""
     base = small_platform(chunk=4)
     t = _trace(base, 48)
-    before = compile_count()
-    run_sweep(build_points(SweepSpec(base=base, link_lats=(600, 100))), t)
+    before = entry_cache_count()
+    Engine(base).sweep(build_points(SweepSpec(base=base, link_lats=(600, 100))), t)
     base2 = base.with_(hot_threshold=7, slow=base.fast)
-    run_sweep(build_points(SweepSpec(base=base2, link_lats=(600, 100))), t)
-    if before is not None:
-        assert compile_count() - before == 1
+    Engine(base2).sweep(build_points(SweepSpec(base=base2, link_lats=(600, 100))), t)
+    assert entry_cache_count() - before == 1
 
 
 def test_sweep_persistence_roundtrip(tmp_path):
@@ -121,7 +120,7 @@ def test_sweep_persistence_roundtrip(tmp_path):
         technologies=("3dxpoint", "stt-ram"),
         extra_axes=(("hot_threshold", (2, 16)),),
     )
-    res = run_sweep(build_points(spec), _trace(base, 64))
+    res = Engine(base).sweep(build_points(spec), _trace(base, 64))
     rows = res.rows()
 
     jpath = tmp_path / "sweep.jsonl"
@@ -148,14 +147,16 @@ def test_sweep_rejects_static_axes():
 
 
 def test_donate_without_states_raises():
-    """Regression: run_sweep(donate=True) without states= used to silently
-    ignore the donation instead of erroring."""
+    """Regression: sweep(donate=True) without states= used to silently
+    ignore the donation instead of erroring; run(donate=True) likewise
+    needs a state to donate."""
     base = small_platform(chunk=8)
     points = build_points(SweepSpec(base=base, link_lats=(600, 100)))
+    engine = Engine(base)
     with pytest.raises(ValueError, match="donate=True requires states="):
-        run_sweep(points, _trace(base, 32), donate=True)
+        engine.sweep(points, _trace(base, 32), donate=True)
     with pytest.raises(ValueError, match="donate=True requires state="):
-        emulate(base, _trace(base, 32), donate=True)
+        engine.run(_trace(base, 32), donate=True)
 
 
 def test_write_weight_is_policy_scoped():
@@ -178,7 +179,7 @@ def test_write_weight_is_policy_scoped():
     page = np.asarray(page, np.int32)
     t = _as_trace(page, np.zeros(n, np.int32), np.asarray(wr), np.full(n, 64, np.int32))
 
-    res = run_sweep(
+    res = Engine(base).sweep(
         SweepSpec(base=base.with_(write_weight=4), policies=("hotness", "write_bias")), t
     )
     hot, wb = res.rows()
@@ -189,8 +190,8 @@ def test_write_weight_is_policy_scoped():
     assert wb["swaps"] > 0
 
     # hotness must be bitwise invariant to the (now scoped) knob
-    r1 = run_sweep(SweepSpec(base=base.with_(write_weight=1), policies=("hotness",)), t)
-    r8 = run_sweep(SweepSpec(base=base.with_(write_weight=8), policies=("hotness",)), t)
+    r1 = Engine(base).sweep(SweepSpec(base=base.with_(write_weight=1), policies=("hotness",)), t)
+    r8 = Engine(base).sweep(SweepSpec(base=base.with_(write_weight=8), policies=("hotness",)), t)
     np.testing.assert_array_equal(np.asarray(r1.outs["returns"]), np.asarray(r8.outs["returns"]))
     np.testing.assert_array_equal(np.asarray(r1.states.table), np.asarray(r8.states.table))
 
@@ -213,7 +214,7 @@ def test_pin_fraction_and_wear_axes_sweepable():
     )
     assert len(points) == 8
     t = _trace(base, 256, hot_fraction=0.7)
-    res = run_sweep(points, t)
+    res = Engine(base).sweep(points, t)
 
     nf = base.n_fast_pages
     n_pin = int(0.75 * nf)
@@ -239,10 +240,11 @@ def test_sweep_sharded_matches_unsharded():
     spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram", "mram"))
     points = build_points(spec)
     t = _trace(base, 64)
-    res = run_sweep(points, t)
+    engine = Engine(base)
+    res = engine.sweep(points, t)
     # mesh of all local devices; point count (3) deliberately not a
     # multiple of any >1 device count, exercising the padding path
-    res_sh = run_sweep(points, t, mesh="auto")
+    res_sh = engine.sweep(points, t, mesh="auto")
     np.testing.assert_array_equal(
         np.asarray(res.outs["returns"]),
         np.asarray(res_sh.outs["returns"]),

@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 import repro.configs as C
-from repro.core import paper_platform, run_trace
+from conftest import engine_run
+from repro.core import paper_platform
 from repro.launch import train as train_mod
 from repro.memtier import ServeEngine
 from repro.memtier.engine import Request
@@ -68,7 +69,7 @@ def test_workload_suite_reproduces_fig8_ordering():
     # the platform's counters agree with the configured volumes
     cfg = paper_platform().with_(chunk=128)
     t, w, n = workload_trace("538.imagick", scale=2e-7)
-    state, _, summ = run_trace(cfg, t)
+    state, _, summ = engine_run(cfg, t)
     got = (summ["GB_read"] + summ["GB_written"]) * 1e9
     want = n * 64
     assert abs(got - want) / want < 0.01
