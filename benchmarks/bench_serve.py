@@ -8,7 +8,7 @@ asserted via ``Engine.compile_count``), per-sequence pin contracts, and
 cold-KV eviction under real memory pressure (the watermarks are set so
 the live page demand crosses them).
 
-Two profiles, both in the committed ``BENCH_serve.json``:
+Three profiles, all in the committed ``BENCH_serve.json``:
 
 * **full** (default): 110k sequences through a 100k-live-slot scheduler
   on a serving-size geometry — the headline ``metrics``;
@@ -18,6 +18,12 @@ Two profiles, both in the committed ``BENCH_serve.json``:
   so CI gates ``--quick --check-against BENCH_serve.json`` like-for-like
   against the committed ``quick_metrics`` at the default tight
   tolerances (schema.check_against); wall-clock is reported, not gated.
+* **degraded** (runs with ``--quick``): the quick profile under a seeded
+  :func:`~repro.core.faults.seeded_plan` that kills ~5% of the fast
+  tier's frames mid-run — the graceful-degradation gate. Hard floors
+  are asserted in-process (SLO attainment >= 0.99, pinned fast-hit
+  >= 0.95 despite the retirement burst), and the deterministic metrics
+  gate like-for-like against the committed ``degraded_metrics``.
 
 Runnable standalone::
 
@@ -31,14 +37,15 @@ last decode return, in us at the 1 GHz fabric clock.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.schema import (add_check_args, bench_payload, run_check,
-                               write_bench_json)
+from benchmarks.schema import (add_check_args, bench_payload, check_against,
+                               run_check, write_bench_json)
 from repro import Engine
-from repro.core import paper_platform
+from repro.core import paper_platform, seeded_plan
 from repro.serve import ContinuousBatchingScheduler, ServeConfig
 
 # Deterministic emulated metrics, gated like-for-like against the
@@ -72,6 +79,15 @@ PROFILES = {
         n_seqs=6_000, decode_lo=8, decode_hi=25, min_live=5_000),
 }
 
+# Graceful-degradation profile: quick, plus a seeded fault plan whose
+# deaths retire ~5% of the fast tier's frames spread across the run
+# (~1100 emulated chunks). The recovery path (retire -> re-place ->
+# renegotiate) must hold the hard floors below.
+PROFILES["degraded"] = dict(
+    PROFILES["quick"],
+    faults=dict(seed=20, fast_frac=0.05, n_chunks=1100),
+    floors=dict(slo_attainment=0.99, pinned_fast_hit_rate=0.95))
+
 
 def _workload(n_seqs: int, lo: int, hi: int, seed: int = 0):
     """Mixed prompts: mostly short, a long tail of 4-page prompts whose
@@ -87,7 +103,14 @@ def run_profile(name: str, verbose: bool = True) -> tuple[dict, dict]:
     prof = PROFILES[name]
     cfg = paper_platform().with_(**prof["geometry"])
     engine = Engine(cfg)
-    sched = ContinuousBatchingScheduler(engine, ServeConfig(**prof["serve"]))
+    serve_kwargs = dict(prof["serve"])
+    if prof.get("faults"):
+        f = prof["faults"]
+        nf = prof["geometry"]["n_fast_pages"]
+        serve_kwargs["faults"] = seeded_plan(
+            f["seed"], pages=np.arange(nf), n_chunks=f["n_chunks"],
+            n_deaths=int(f["fast_frac"] * nf))
+    sched = ContinuousBatchingScheduler(engine, ServeConfig(**serve_kwargs))
     t0 = time.time()
     sched.warmup()
     warm_s = time.time() - t0
@@ -125,11 +148,18 @@ def run_profile(name: str, verbose: bool = True) -> tuple[dict, dict]:
         "pinned_fast_hit_rate": rep.pinned_fast_hit_rate,
         "evictions": rep.evictions,
         "refetches": rep.refetches,
+        "frames_retired": rep.frames_retired,
+        "fault_refetches": rep.fault_refetches,
+        "renegotiations": rep.renegotiations,
         "recompiles_after_warmup": recompiles,
         "warmup_s": warm_s,
         "wall_s": wall_s,
         "req_per_s": rep.n_mem_requests / wall_s if wall_s else 0.0,
     }
+    for metric, floor in prof.get("floors", {}).items():
+        assert metrics[metric] >= floor, \
+            f"degradation floor broken: {metric} {metrics[metric]:.4f} " \
+            f"< {floor} with {rep.frames_retired} frames retired"
     if verbose:
         print(f"  [{name}] {rep.n_sequences} seqs "
               f"(peak {rep.live_seqs_high_water} live), "
@@ -142,6 +172,10 @@ def run_profile(name: str, verbose: bool = True) -> tuple[dict, dict]:
         print(f"  [{name}] pinned fast-hit {rep.pinned_fast_hit_rate:.3f} "
               f"({rep.pinned_accesses} accesses), evictions {rep.evictions}, "
               f"refetches {rep.refetches}, recompiles {recompiles}")
+        if rep.frames_retired:
+            print(f"  [{name}] degradation: {rep.frames_retired} frames "
+                  f"retired, {rep.fault_refetches} fault refetches, "
+                  f"{rep.renegotiations} contract renegotiations")
     return metrics, rep.per_bucket
 
 
@@ -189,7 +223,8 @@ def main() -> None:
     args = ap.parse_args()
 
     quick_metrics, per_bucket = run_profile("quick")
-    summaries = {"quick": quick_metrics}
+    degraded_metrics, _ = run_profile("degraded")
+    summaries = {"quick": quick_metrics, "degraded": degraded_metrics}
     if args.quick:
         metrics = quick_metrics
     else:
@@ -199,10 +234,11 @@ def main() -> None:
     payload = bench_payload(
         "serve", metrics,
         config={k: dict(geometry=p["geometry"], serve=p["serve"],
-                        n_seqs=p["n_seqs"])
+                        n_seqs=p["n_seqs"], faults=p.get("faults"),
+                        floors=p.get("floors"))
                 for k, p in PROFILES.items()},
         cases=[dict(size=s, **row) for s, row in sorted(per_bucket.items())],
-        quick_metrics=quick_metrics)
+        quick_metrics=quick_metrics, degraded_metrics=degraded_metrics)
     if args.out:
         print(f"  written to {write_bench_json(args.out, payload)}")
     if args.bucket_table:
@@ -212,6 +248,19 @@ def main() -> None:
         write_summary_md(args.summary_md, summaries)
     run_check(payload, args, GATED_METRICS, higher_better=HIGHER_BETTER,
               metrics_key="quick_metrics" if args.quick else "metrics")
+    if args.check_against:
+        # The degradation gate rides the same tiered check, against the
+        # committed degraded_metrics (frames_retired joins the gate so a
+        # silently-inert fault plan fails loudly).
+        ok = check_against(
+            payload, args.check_against,
+            GATED_METRICS + ["frames_retired"],
+            warn_tolerance=args.warn_tolerance,
+            fail_tolerance=args.fail_tolerance,
+            higher_better=HIGHER_BETTER + ("frames_retired",),
+            metrics_key="degraded_metrics")
+        if not ok:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -109,6 +109,12 @@ class EmulatorConfig:
     pin_fast_fraction: float = 0.0  # fraction of the fast tier pinned
     #   (FLAGS |= PIN_FAST) at init — pages the paper's §III-G malloc hints
     #   nail to DRAM; pinned frames are never CLOCK victims
+    endurance_budget: int = 0       # frame retirement threshold in WEAR-lane
+    #   line-writes: when a slow frame's WEAR crosses the budget at a chunk
+    #   boundary, the frame is retired — its resident page is POISONED and a
+    #   rescue migration remaps it to a healthy frame (core.faults has the
+    #   fault-injection companion). <= 0 disables retirement entirely (the
+    #   default: runs are bitwise-identical to the pre-retirement emulator)
 
     # --- misc ----------------------------------------------------------------------
     power_pj_per_bit_fast: float = 1.2   # dynamic-power estimate coefficients
@@ -207,6 +213,8 @@ class RuntimeParams(NamedTuple):
     write_weight: jax.Array
     wear_slack: jax.Array          # int32 — wear_level destination tolerance
     pin_fast_fraction: jax.Array   # float32 — fast-tier share pinned at init
+    endurance_budget: jax.Array    # int32 — frame retirement threshold
+    #   (<= 0 disables retirement; see EmulatorConfig.endurance_budget)
     policy_id: jax.Array
     # power model coefficients
     power_pj_per_bit_fast: jax.Array        # float32
@@ -235,6 +243,7 @@ class RuntimeParams(NamedTuple):
             write_weight=i32(cfg.write_weight),
             wear_slack=i32(cfg.wear_slack),
             pin_fast_fraction=f32(cfg.pin_fast_fraction),
+            endurance_budget=i32(cfg.endurance_budget),
             policy_id=i32(policies.policy_id(cfg.policy)),
             power_pj_per_bit_fast=f32(cfg.power_pj_per_bit_fast),
             power_pj_per_bit_slow_read=f32(cfg.power_pj_per_bit_slow_read),

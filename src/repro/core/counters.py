@@ -31,28 +31,35 @@ class Counters(NamedTuple):
     reorder_held: jax.Array      # int32 — responses delayed by tag matching
     energy_pj: jax.Array         # float32 — dynamic energy estimate
     poison_faults: jax.Array     # int32 — accesses to POISONED pages
-    #   (retired/worn-out frames, table FLAGS lane): the access completes
-    #   — the emulated hardware has no fault path — but the platform
-    #   surfaces the violation the way the paper's counters surface
-    #   traffic, so endurance studies can assert "nothing touched a
-    #   retired page".
+    #   (dead frames, table FLAGS lane): the access completes — the
+    #   emulated device returns corrupt data rather than stalling — but
+    #   the platform surfaces the fault the way the paper's counters
+    #   surface traffic. With retirement enabled the resident page is
+    #   rescued to a healthy frame, so a nonzero count here measures the
+    #   rescue-latency window (plus any tombstone touches).
+    frames_retired: jax.Array    # int32 — frames taken out of service
+    #   (endurance_budget crossings + FaultPlan deaths that fired)
+    transient_faults: jax.Array  # int32 — FaultPlan transient injections
 
     @staticmethod
     def zeros() -> "Counters":
         i = jnp.int32(0)
         f = jnp.float32(0.0)
-        return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f, i)
+        return Counters(i, i, i, i, f, f, f, f, f, i, i, i, f, i, i, i)
 
 
 def update(p, c: Counters, *, device: jax.Array,
            is_write: jax.Array, size: jax.Array, valid: jax.Array,
            latency: jax.Array, held: jax.Array,
-           poisoned: jax.Array | None = None) -> Counters:
+           poisoned: jax.Array | None = None,
+           retired: jax.Array | None = None,
+           injected: jax.Array | None = None) -> Counters:
     """Accumulate one chunk. All request fields are int32[chunk]. ``p`` is
     an ``EmulatorConfig`` or traced ``RuntimeParams`` (shared power
     coefficients). ``poisoned`` is a bool[chunk] mask of requests that
-    touched a POISONED page (already masked by validity); None counts
-    none."""
+    touched a POISONED page (already masked by validity); ``retired`` an
+    int32 count of frames retired at this boundary; ``injected`` a
+    bool[chunk] mask of transient fault injections; None counts none."""
     v = valid
     w = is_write & v
     r = (~is_write) & v
@@ -87,6 +94,10 @@ def update(p, c: Counters, *, device: jax.Array,
         energy_pj=c.energy_pj + energy,
         poison_faults=c.poison_faults +
         (jnp.int32(0) if poisoned is None else cnt(poisoned)),
+        frames_retired=c.frames_retired +
+        (jnp.int32(0) if retired is None else jnp.int32(retired)),
+        transient_faults=c.transient_faults +
+        (jnp.int32(0) if injected is None else cnt(injected)),
     )
 
 
@@ -104,4 +115,6 @@ def summary(c: Counters) -> dict:
         "reorder_held": g(c.reorder_held),
         "energy_mJ": g(c.energy_pj) / 1e9,
         "poison_faults": g(c.poison_faults),
+        "frames_retired": g(c.frames_retired),
+        "transient_faults": g(c.transient_faults),
     }

@@ -98,15 +98,20 @@ class SwapCommit(NamedTuple):
     add-commit is bitwise identical to the historical set-commit."""
     dma: DMAState
     done: jax.Array    # bool — swap finished this boundary
-    rows: jax.Array    # int32[8] target rows (idle/no-op entries hit row 0
+    rows: jax.Array    # int32[10] target rows (idle/no-op entries hit row 0
     #   with delta 0 — the guard-index convention of the old set path)
-    lanes: jax.Array   # int32[8] target lanes, aligned with ``rows``
-    delta: jax.Array   # int32[8] value to add at (row, lane)
+    lanes: jax.Array   # int32[10] target lanes, aligned with ``rows``
+    delta: jax.Array   # int32[10] value to add at (row, lane)
+    tombstone: jax.Array  # int32 — page parked on a dead frame by this
+    #   commit (POISONED|RETIRED stamped via the FLAGS deltas), else -1
+    rescued: jax.Array    # int32 — page whose pending rescue this commit
+    #   completed (POISONED cleared), else -1
 
 
 def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
                 row_a: jax.Array, row_b: jax.Array,
-                params: RuntimeParams | None = None) -> SwapCommit:
+                params: RuntimeParams | None = None,
+                rescue_page=None) -> SwapCommit:
     """Plan the chunk-boundary swap commit from prefetched rows.
 
     ``row_a``/``row_b`` are the packed *pre-chunk* table rows of the swap
@@ -121,6 +126,25 @@ def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
     and charge the migration's full-page write to the WEAR lane of
     whichever slow frame received data (endurance accounting for the swap
     traffic itself, in line-sized units comparable to demand writes).
+
+    Poison travel (retirement rescues): POISONED marks "the frame under
+    this page is dead", so when a swap involving a poisoned member
+    commits, the poison stays with the *frame*: the counterpart page —
+    which now sits on the dead frame — becomes a ``POISONED|RETIRED``
+    tombstone (pins force-cleared; the serving layer renegotiates), and
+    the formerly poisoned member comes out clean on the healthy frame.
+    This one rule covers both scheduled rescue migrations and the
+    adversarial corner where a frame dies while its page is already a
+    swap endpoint.
+
+    ``rescue_page`` is the emulator's rescue register
+    (``EmulatorState.rescue_page``): poison only travels for the page the
+    retirement subsystem actually marked dying (the register holds at
+    most one). POISONED set by anything else — tests poison pages purely
+    for the observability counter — commits exactly as before, and with
+    ``rescue_page`` absent (None / -1, the default and every legacy
+    caller) every FLAGS delta is zero, so the commit stays
+    bitwise-identical to the pre-retirement engine.
     """
     done = (dma.active == 1) & (now >= dma.start + swap_duration(cfg, params))
 
@@ -147,13 +171,29 @@ def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
     # captured device constants. The DEVICE/DEVICE/FRAME/FRAME/EPOCH/
     # EPOCH/WEAR/WEAR lane vector is built from an iota for the same
     # reason.
+    # Poison travel (see docstring): new FLAGS as pure int32 deltas against
+    # the prefetched pre-chunk values. Bit constants are Python literals
+    # for the same Pallas reason as above.
+    rp = -1 if rescue_page is None else rescue_page
+    fla, flb = table_lib.flags(row_a), table_lib.flags(row_b)
+    dead_a = ((fla & table_lib.POISONED) != 0) & (a == rp) & (a >= 0)
+    dead_b = ((flb & table_lib.POISONED) != 0) & (b == rp) & (b >= 0)
+    dead_bits = table_lib.POISONED | table_lib.RETIRED
+    new_fla = jnp.where(dead_b, (fla | dead_bits) & ~table_lib.PINNED,
+                        jnp.where(dead_a, fla & ~dead_bits, fla))
+    new_flb = jnp.where(dead_a, (flb | dead_bits) & ~table_lib.PINNED,
+                        jnp.where(dead_b, flb & ~dead_bits, flb))
+
     rows = jnp.stack([ia, ib, ia, ib, ia, ib,
-                      jnp.where(chg_a, fb, 0), jnp.where(chg_b, fa, 0)])
-    k = jnp.repeat(jnp.arange(4, dtype=jnp.int32), 2)
+                      jnp.where(chg_a, fb, 0), jnp.where(chg_b, fa, 0),
+                      ia, ib])
+    k = jnp.repeat(jnp.arange(5, dtype=jnp.int32), 2)
     lanes = jnp.where(
         k == 0, table_lib.DEVICE,
         jnp.where(k == 1, table_lib.FRAME,
-                  jnp.where(k == 2, table_lib.EPOCH, table_lib.WEAR)))
+                  jnp.where(k == 2, table_lib.EPOCH,
+                            jnp.where(k == 3, table_lib.WEAR,
+                                      table_lib.FLAGS))))
     delta = jnp.stack([jnp.where(commit_a, db - da, 0),
                        jnp.where(commit_b, da - db, 0),
                        jnp.where(commit_a, fb - fa, 0),
@@ -161,7 +201,13 @@ def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
                        jnp.where(commit_a, now - ea, 0),
                        jnp.where(commit_b, now - eb, 0),
                        jnp.where(chg_a, charge, 0),
-                       jnp.where(chg_b, charge, 0)])
+                       jnp.where(chg_b, charge, 0),
+                       jnp.where(commit_a, new_fla - fla, 0),
+                       jnp.where(commit_b, new_flb - flb, 0)])
+
+    any_dead = (commit_a & dead_a) | (commit_b & dead_b)
+    tombstone = jnp.where(any_dead, jnp.where(dead_a, b, a), -1)
+    rescued = jnp.where(any_dead, jnp.where(dead_a, a, b), -1)
 
     new = DMAState(
         active=jnp.where(done, 0, dma.active).astype(jnp.int32),
@@ -170,11 +216,14 @@ def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
         start=dma.start,
         swaps_done=dma.swaps_done + done.astype(jnp.int32),
     )
-    return SwapCommit(dma=new, done=done, rows=rows, lanes=lanes, delta=delta)
+    return SwapCommit(dma=new, done=done, rows=rows, lanes=lanes,
+                      delta=delta, tombstone=jnp.int32(tombstone),
+                      rescued=jnp.int32(rescued))
 
 
 def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
-                   table: jax.Array, params: RuntimeParams | None = None
+                   table: jax.Array, params: RuntimeParams | None = None,
+                   rescue_page=None
                    ) -> tuple["DMAState", jax.Array, jax.Array]:
     """At a chunk boundary: commit the in-flight swap if it has finished
     by ``now`` (see :func:`plan_commit` for the semantics). Standalone
@@ -183,7 +232,8 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
     Returns (state, table, done_flag)."""
     ia = jnp.maximum(dma.page_a, 0)
     ib = jnp.maximum(dma.page_b, 0)
-    plan = plan_commit(cfg, dma, now, table[ia], table[ib], params)
+    plan = plan_commit(cfg, dma, now, table[ia], table[ib], params,
+                       rescue_page)
     table = table.at[plan.rows, plan.lanes].add(plan.delta)
     return plan.dma, table, plan.done
 
@@ -193,17 +243,21 @@ def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,
                 table: jax.Array | None = None
                 ) -> tuple[DMAState, jax.Array]:
     """Start a new swap if the engine is idle, the policy wants one, and
-    neither swap member is pinned (when ``table`` is given, its FLAGS lane
-    is the engine's own guard — defense in depth below the emulator's
-    post-policy mask, so user-registered policies cannot migrate pinned
-    pages either). Returns ``(state, started)``; callers thread
-    ``started`` back into the CLOCK pointer commit, so a dropped proposal
-    (engine busy, pinned member, re-masked want) never advances the
-    pointer past an unconsumed victim frame."""
+    neither swap member is pinned or a retirement tombstone (when
+    ``table`` is given, its FLAGS lane is the engine's own guard —
+    defense in depth below the emulator's post-policy mask, so
+    user-registered policies cannot migrate pinned pages or exhume dead
+    frames either; a merely POISONED member is allowed — that is how
+    rescue migrations move a page off its dead frame). Returns
+    ``(state, started)``; callers thread ``started`` back into the CLOCK
+    pointer commit, so a dropped proposal (engine busy, pinned member,
+    re-masked want) never advances the pointer past an unconsumed victim
+    frame."""
     if table is not None:
-        pinned = ((table[page_a, table_lib.FLAGS] |
-                   table[page_b, table_lib.FLAGS]) & table_lib.PINNED) != 0
-        want = want & ~pinned
+        veto_bits = table_lib.PINNED | table_lib.RETIRED
+        vetoed = ((table[page_a, table_lib.FLAGS] |
+                   table[page_b, table_lib.FLAGS]) & veto_bits) != 0
+        want = want & ~vetoed
     start_it = (dma.active == 0) & want
     return DMAState(
         active=jnp.where(start_it, 1, dma.active).astype(jnp.int32),

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from . import counters as counters_lib, dma as dma_lib, table as table_lib
 from .config import EmulatorConfig, RuntimeParams, static_key
+from .faults import FaultPlan
 from .policies import PolicyRegistry
 from repro.kernels import chunk_step as chunk_step_lib
 
@@ -73,6 +74,12 @@ class EmulatorState(NamedTuple):
     link_free_tx: jax.Array   # int32
     last_return: jax.Array    # int32
     counters: counters_lib.Counters
+    rescue_page: jax.Array    # int32 — page awaiting rescue off a dead
+    #   frame (-1 when idle); at most one rescue is in flight at a time
+    #   (kernels.chunk_step.retire_phase documents the lifecycle)
+    min_wear: jax.Array       # int32 — global min slow-frame WEAR,
+    #   rescrubbed at decay boundaries (wear_level's slack reference)
+    fault_cursor: jax.Array   # int32 — next unconsumed FaultPlan death
 
 
 def init_state(cfg: EmulatorConfig,
@@ -93,6 +100,7 @@ def init_state(cfg: EmulatorConfig,
         bank_free=jnp.zeros(2 * cfg.n_banks, jnp.int32),
         link_free_rx=z, link_free_tx=z, last_return=z,
         counters=counters_lib.Counters.zeros(),
+        rescue_page=jnp.int32(-1), min_wear=z, fault_cursor=z,
     )
 
 
@@ -107,8 +115,8 @@ def pad_trace(cfg: EmulatorConfig, t: Trace) -> tuple[Trace, jax.Array]:
 
 
 def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
-                registry: PolicyRegistry, state: EmulatorState,
-                chunk: tuple[Trace, jax.Array]):
+                registry: PolicyRegistry, faults: FaultPlan,
+                state: EmulatorState, chunk: tuple[Trace, jax.Array]):
     """One scan step = one chunk through the fused step.
 
     The five pipeline stages (RX link -> lookup/redirect -> bank queues ->
@@ -130,32 +138,47 @@ def _chunk_step(cfg: EmulatorConfig, params: RuntimeParams,
         clock=state.clock, clock_ptr=state.clock_ptr,
         chunk_idx=state.chunk_idx, dma=state.dma,
         link_free_rx=state.link_free_rx, link_free_tx=state.link_free_tx,
-        last_return=state.last_return)
+        last_return=state.last_return, rescue_page=state.rescue_page,
+        min_wear=state.min_wear, fault_cursor=state.fault_cursor)
     table, sc, bank_free, outs = chunk_step_lib.chunk_step(
         cfg, registry, state.table, params, sc, state.bank_free,
-        page, offset, is_write, size, valid)
+        page, offset, is_write, size, valid, faults)
     ctr = counters_lib.update(params, state.counters, device=outs["device"],
                               is_write=is_write, size=size, valid=valid,
                               latency=outs["latency"], held=outs["held"],
-                              poisoned=outs["poisoned"])
+                              poisoned=outs["poisoned"],
+                              retired=outs["retired"] >= 0,
+                              injected=outs["injected"])
     new_state = EmulatorState(
         table=table, clock_ptr=sc.clock_ptr, chunk_idx=sc.chunk_idx,
         dma=sc.dma, clock=sc.clock, bank_free=bank_free,
         link_free_rx=sc.link_free_rx, link_free_tx=sc.link_free_tx,
-        last_return=sc.last_return, counters=ctr)
+        last_return=sc.last_return, counters=ctr,
+        rescue_page=sc.rescue_page, min_wear=sc.min_wear,
+        fault_cursor=sc.fault_cursor)
+    n = page.shape[0]
+    # The boundary's retired/tombstone page scalars broadcast to the
+    # chunk's request positions so the scan's stacked outputs reshape to
+    # the flat trace like everything else; harvesters take unique >= 0.
     out = {"returns": outs["returns"],
            "device": jnp.where(valid, outs["device"], -1),
-           "latency": outs["latency"]}
+           "latency": outs["latency"],
+           "faulted": (outs["poisoned"] | outs["injected"]) & valid,
+           "retired_page": jnp.full((n,), 1, jnp.int32) * outs["retired"],
+           "tombstone": jnp.full((n,), 1, jnp.int32) * outs["tombstone"]}
     return new_state, out
 
 
 def _emulate_impl(cfg: EmulatorConfig, registry: PolicyRegistry, trace: Trace,
                   valid: jax.Array | None = None,
                   state: EmulatorState | None = None,
-                  params: RuntimeParams | None = None
+                  params: RuntimeParams | None = None,
+                  faults: FaultPlan | None = None
                   ) -> tuple[EmulatorState, dict]:
     if params is None:
         params = RuntimeParams.from_config(cfg)
+    if faults is None:
+        faults = FaultPlan.empty()
     n = len(trace)
     assert n % cfg.chunk == 0, "pad the trace to a chunk multiple first"
     if valid is None:
@@ -165,31 +188,37 @@ def _emulate_impl(cfg: EmulatorConfig, registry: PolicyRegistry, trace: Trace,
     chunks = jax.tree.map(lambda x: x.reshape(n // cfg.chunk, cfg.chunk),
                           (trace, valid))
     state, outs = jax.lax.scan(
-        functools.partial(_chunk_step, cfg, params, registry), state, chunks,
-        unroll=cfg.scan_unroll)
+        functools.partial(_chunk_step, cfg, params, registry, faults), state,
+        chunks, unroll=cfg.scan_unroll)
     outs = jax.tree.map(lambda x: x.reshape(n), outs)
     return state, outs
 
 
 def _emulate_batch_impl(cfg: EmulatorConfig, registry: PolicyRegistry,
                         trace: Trace, valid: jax.Array,
-                        states, params: RuntimeParams):
+                        states, params: RuntimeParams,
+                        faults: FaultPlan | None = None):
     """The sweep executor's computation: :func:`_emulate_impl` vmapped over
     a stacked ``RuntimeParams`` batch. ``states`` is an optional stacked
     ``EmulatorState`` with the same leading point axis (a previous
-    ``SweepResult.states``) — fresh per-point state when None. Argument
-    order matches ``_emulate_impl`` so one ``donate_argnums`` spec serves
-    both entry points."""
+    ``SweepResult.states``) — fresh per-point state when None. ``faults``
+    is either one shared plan (broadcast to every point) or a stacked
+    per-point batch (``FaultPlan.is_batched`` — failure rate as a design
+    axis). Argument order matches ``_emulate_impl`` so one
+    ``donate_argnums`` spec serves both entry points."""
+    if faults is None:
+        faults = FaultPlan.empty()
+    f_ax = 0 if faults.is_batched else None
     if states is None:
-        def one(p):
-            return _emulate_impl(cfg, registry, trace, valid, None, p)
+        def one(p, f):
+            return _emulate_impl(cfg, registry, trace, valid, None, p, f)
 
-        return jax.vmap(one)(params)
+        return jax.vmap(one, in_axes=(0, f_ax))(params, faults)
 
-    def one(s, p):
-        return _emulate_impl(cfg, registry, trace, valid, s, p)
+    def one(s, p, f):
+        return _emulate_impl(cfg, registry, trace, valid, s, p, f)
 
-    return jax.vmap(one)(states, params)
+    return jax.vmap(one, in_axes=(0, 0, f_ax))(states, params, faults)
 
 
 # ---------------------------------------------------------------------------

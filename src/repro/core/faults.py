@@ -1,0 +1,134 @@
+"""Deterministic fault injection for the emulated hybrid memory.
+
+A :class:`FaultPlan` is a *traced pytree* of scheduled hardware faults,
+so fault scenarios are sweepable design points like any other axis: a
+stacked plan batch vmaps through the one-compilation sweep engine and
+AMAT x lifetime x SLO can be studied under increasing failure rates in
+one compiled program. Two fault classes (both keyed on the absolute
+``chunk_idx`` of the carried :class:`~repro.core.emulator.EmulatorState`,
+so plans stay meaningful across continued runs and serving dispatches):
+
+``transient``
+    int32[nt, 2] rows of (chunk, page): at boundary ``chunk`` every
+    access to ``page`` within that chunk completes but returns corrupt
+    data — the request is marked in the per-request ``injected`` output
+    and counted in ``Counters.transient_faults``. No table effect (the
+    frame survives); the serving layer refetches the page's contents.
+
+``deaths``
+    int32[nd, 2] rows of (chunk, page), sorted by chunk: an early frame
+    death. At the first boundary at or after ``chunk`` whose rescue
+    register is free, the frame currently under ``page`` dies — the page
+    is POISONED exactly like an ``endurance_budget`` crossing and a
+    rescue migration is scheduled (``core.table`` docstring has the
+    lifecycle). Deaths are consumed serially through the
+    ``fault_cursor`` register (one in-flight rescue at a time — the DMA
+    engine has one channel), so closely spaced deaths retire on later
+    boundaries than scheduled; the plan order is preserved.
+
+Sentinel rows pad both arrays to static shapes: ``chunk = -1`` rows in
+``transient`` never match (boundaries count from 0) and ``chunk =
+NEVER`` rows in ``deaths`` are never due. An empty plan is therefore a
+single sentinel row per class, and running with ``FaultPlan.empty()`` is
+bitwise-identical to not injecting faults at all.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Death rows at this chunk stamp are never due (padding sentinel).
+NEVER = 2**30
+
+
+class FaultPlan(NamedTuple):
+    """Scheduled faults as a traced pytree (see module docstring)."""
+
+    transient: jax.Array  # int32[nt, 2] (chunk, page); chunk=-1 padding
+    deaths: jax.Array     # int32[nd, 2] (chunk, page) sorted; chunk=NEVER pad
+
+    @staticmethod
+    def empty() -> "FaultPlan":
+        """A plan injecting nothing (single sentinel row per class)."""
+        return FaultPlan(
+            transient=jnp.full((1, 2), -1, jnp.int32),
+            deaths=jnp.asarray([[NEVER, 0]], jnp.int32))
+
+    @staticmethod
+    def of(transient=(), deaths=()) -> "FaultPlan":
+        """Build a plan from explicit (chunk, page) event lists. Deaths
+        are sorted by chunk; empty classes get one sentinel row."""
+        return FaultPlan(transient=_rows(transient, -1),
+                         deaths=_rows(sorted(map(tuple, deaths)), NEVER))
+
+    @property
+    def shape_sig(self) -> tuple:
+        """Static shape signature (joins the entry-point cache key)."""
+        return (self.transient.shape, self.deaths.shape)
+
+    @property
+    def is_batched(self) -> bool:
+        """True for a stacked per-design-point plan batch."""
+        return self.transient.ndim == 3
+
+
+def _rows(events, sentinel_chunk: int) -> jax.Array:
+    rows = np.asarray(list(events), np.int32).reshape(-1, 2)
+    if rows.shape[0] == 0:
+        rows = np.asarray([[sentinel_chunk, 0]], np.int32)
+    return jnp.asarray(rows)
+
+
+def seeded_plan(seed: int, *, pages, n_chunks: int, n_deaths: int = 0,
+                n_transient: int = 0, start_chunk: int = 0) -> FaultPlan:
+    """A deterministic plan over candidate ``pages``: ``n_deaths``
+    distinct frames die, evenly spread across ``[start_chunk, n_chunks)``
+    (rescues serialize through one DMA channel — even spacing keeps the
+    retirement backlog shallow), plus ``n_transient`` transient faults at
+    random (chunk, page) points. Same seed, same plan."""
+    pages = np.asarray(pages, np.int32)
+    rng = np.random.default_rng(seed)
+    deaths = []
+    if n_deaths:
+        if n_deaths > pages.size:
+            raise ValueError(f"n_deaths={n_deaths} > {pages.size} pages")
+        victims = rng.choice(pages, size=n_deaths, replace=False)
+        stamps = np.linspace(start_chunk, max(n_chunks - 1, start_chunk),
+                             n_deaths).astype(np.int64)
+        deaths = list(zip(stamps.tolist(), victims.tolist()))
+    transient = []
+    if n_transient:
+        t_pages = rng.choice(pages, size=n_transient, replace=True)
+        t_chunks = rng.integers(start_chunk, max(n_chunks, start_chunk + 1),
+                                size=n_transient)
+        transient = list(zip(t_chunks.tolist(), t_pages.tolist()))
+    return FaultPlan.of(transient=transient, deaths=deaths)
+
+
+def pad_plan(plan: FaultPlan, nt: int, nd: int) -> FaultPlan:
+    """Pad a plan's event arrays with sentinel rows to (nt, nd) — plans
+    in one stacked sweep batch must share shapes, and a padded plan
+    injects exactly the same faults."""
+    def pad(rows, n, sentinel):
+        if rows.shape[0] > n:
+            raise ValueError(f"plan has {rows.shape[0]} events > pad {n}")
+        fill = jnp.asarray([[sentinel, 0]], jnp.int32)
+        reps = jnp.tile(fill, (n - rows.shape[0], 1))
+        return jnp.concatenate([rows, reps]) if reps.shape[0] else rows
+    return FaultPlan(transient=pad(plan.transient, nt, -1),
+                     deaths=pad(plan.deaths, nd, NEVER))
+
+
+def stack_plans(plans: list[FaultPlan]) -> FaultPlan:
+    """Stack same-shape plans into a per-design-point batch for sweeps.
+    All plans must share (nt, nd) — see :func:`pad_plan`."""
+    sigs = {p.shape_sig for p in plans}
+    if len(sigs) != 1:
+        raise ValueError(f"plans disagree on event-array shapes: {sigs}")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+
+
+__all__ = ["FaultPlan", "NEVER", "seeded_plan", "stack_plans", "pad_plan"]

@@ -24,6 +24,12 @@ Policy interface::
     propose(cfg, params, table, ptr, pages, is_write, valid)
         -> (want: bool[], slow_page: int32[], fast_victim: int32[], new_ptr)
 
+A policy may additionally declare a keyword parameter named ``min_wear``
+(see ``wear_level``): the emulator detects it by signature inspection at
+trace time and passes the maintained global min-wear register
+(``EmulatorState.min_wear``). Plain seven-argument policies keep working
+unchanged.
+
 ``cfg`` carries static geometry, ``params`` the traced knobs
 (``hot_threshold``, ``n_fast_pages``, ...), ``table`` the packed
 ``int32[n_pages, ROW_W]`` metadata store. New policies register via
@@ -169,12 +175,14 @@ def update_hotness(p, table: jax.Array, pages: jax.Array,
 
 def _chunk_candidate(table, pages, valid, extra_mask=None):
     """Hottest slow-resident page among this chunk's accesses. Pinned
-    pages (PIN_SLOW — nailed to NVM) are never candidates; the emulator
-    would veto them anyway, and a vetoed hottest page would livelock the
-    proposal stream. ``extra_mask`` further restricts eligibility
-    (wear_level's destination freshness)."""
+    pages (PIN_SLOW — nailed to NVM) and retirement tombstones (parked on
+    dead frames) are never candidates; the emulator would veto them
+    anyway, and a vetoed hottest page would livelock the proposal stream.
+    ``extra_mask`` further restricts eligibility (wear_level's
+    destination freshness)."""
     rows = table[pages]
-    ok = valid & (table_lib.device(rows) == SLOW) & ~table_lib.is_pinned(rows)
+    ok = valid & (table_lib.device(rows) == SLOW) & \
+        ~table_lib.is_pinned(rows) & ~table_lib.is_retired(rows)
     if extra_mask is not None:
         ok = ok & extra_mask
     heat = jnp.where(ok, table_lib.hotness(rows), -1)
@@ -191,10 +199,12 @@ _CLOCK_WINDOW = 8
 
 
 def _clock_victim(table, ptr, nf):
-    """First unpinned CLOCK victim within ``_CLOCK_WINDOW`` frames of the
-    pointer. Returns ``(victim_page, found, skip)`` where ``skip`` is the
-    number of pinned frames stepped over to reach it (== the window width
-    when every probed frame is pinned and ``found`` is False).
+    """First eligible CLOCK victim within ``_CLOCK_WINDOW`` frames of the
+    pointer — pinned owners and retirement tombstones (a dead fast frame
+    is permanently out of the victim rotation) are stepped over alike.
+    Returns ``(victim_page, found, skip)`` where ``skip`` is the
+    number of skipped frames stepped over to reach it (== the window width
+    when every probed frame is ineligible and ``found`` is False).
 
     Policies fold it into the pointer-commit contract as
     ``new_ptr = (ptr + skip + want) % nf``: the pinned run is consumed
@@ -205,7 +215,8 @@ def _clock_victim(table, ptr, nf):
     offs = jnp.arange(_CLOCK_WINDOW, dtype=jnp.int32)
     frames = (ptr + offs) % nf
     owners = table_lib.owner(table)[frames]
-    pinned = table_lib.is_pinned(table[owners])
+    rows = table[owners]
+    pinned = table_lib.is_pinned(rows) | table_lib.is_retired(rows)
     first = jnp.argmin(pinned).astype(jnp.int32)   # first False, else 0
     found = ~pinned[first]
     victim = owners[first]
@@ -267,7 +278,7 @@ def stream_policy(cfg, params, table, ptr, pages, is_write, valid):
     target = jnp.clip(last + stride, 0, table.shape[0] - 1)
     target_row = table[target]
     target_is_slow = (table_lib.device(target_row) == SLOW) & \
-        ~table_lib.is_pinned(target_row)
+        ~table_lib.is_pinned(target_row) & ~table_lib.is_retired(target_row)
 
     hw, hc, _, _ = hotness_policy(cfg, params, table, ptr, pages, is_write,
                                   valid)
@@ -286,7 +297,7 @@ def hotness_global_policy(cfg, params, table, ptr, pages, is_write, valid):
     comparison against the realizable policies above."""
     dev = table_lib.device(table)
     hot = table_lib.hotness(table)
-    pinned = table_lib.is_pinned(table)
+    pinned = table_lib.is_pinned(table) | table_lib.is_retired(table)
     heat_all = jnp.where((dev == SLOW) & ~pinned, hot, -1)
     cand = jnp.argmax(heat_all).astype(jnp.int32)
     heat = heat_all[cand]
@@ -297,17 +308,29 @@ def hotness_global_policy(cfg, params, table, ptr, pages, is_write, valid):
 
 
 @register("wear_level")
-def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid):
+def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid,
+                      min_wear=None):
     """Endurance-aware promotion (paper Table I's write-endurance
     asymmetry as a first-class policy axis): same hottest-page promotion
     rule as ``hotness``, but the demotion *destination* is chosen
     wear-aware. A swap demotes the CLOCK victim into the candidate's slow
     frame, and that frame absorbs the full-page migration write plus the
     victim's future demand writes — so candidates whose frame has already
-    absorbed more than ``params.wear_slack`` writes beyond the least-worn
-    frame seen in this chunk are skipped, steering migration traffic
-    toward fresh frames and flattening the WEAR histogram (max-lifetime
-    leveling) at near-equal hit rate."""
+    absorbed more than ``params.wear_slack`` writes beyond the global
+    minimum are skipped, steering migration traffic toward fresh frames
+    and flattening the WEAR histogram (max-lifetime leveling) at
+    near-equal hit rate.
+
+    ``min_wear`` is the emulator-maintained global min-wear register
+    (``EmulatorState.min_wear``): the true minimum over every slow
+    frame's WEAR, refreshed at decay boundaries (a hardware-style
+    periodic scrub riding the aging tick — between refreshes the
+    register is stale but monotone, since wear only grows, so the
+    ``wear_slack`` band is conservative by at most one decay period's
+    writes). ``wear_slack`` is therefore measured against the *whole
+    histogram's* floor; policies invoked outside the emulator (tests,
+    notebooks) may pass ``min_wear=None`` to fall back to the historical
+    chunk-local floor over this chunk's slow frames."""
     rows = table[pages]
     slow = valid & (table_lib.device(rows) == SLOW)
     frm = table_lib.frame(rows)
@@ -315,7 +338,10 @@ def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid):
     # frame rows (the page rows above are the stage-2-style gather every
     # chunk-local policy already pays).
     frame_wear = table[jnp.where(slow, frm, 0), table_lib.WEAR]
-    wmin = jnp.min(jnp.where(slow, frame_wear, 2 ** 30))
+    if min_wear is None:
+        wmin = jnp.min(jnp.where(slow, frame_wear, 2 ** 30))
+    else:
+        wmin = min_wear
     fresh = frame_wear <= wmin + params.wear_slack
     cand, cheat = _chunk_candidate(table, pages, valid, extra_mask=fresh)
     victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)

@@ -27,12 +27,26 @@ FLAGS bits (the paper's §III-G placement hints, hardened into the table):
                   candidate nor a CLOCK victim (hinted DRAM allocations);
     ``PIN_SLOW``  page is nailed to the slow tier — never promoted
                   (bulk/streaming allocations the hint keeps out of DRAM);
-    ``POISONED``  page is retired (e.g. a worn-out NVM frame) — accesses
-                  still complete but raise the ``poison_faults`` counter.
+    ``POISONED``  the frame under this page is dead (its WEAR crossed
+                  ``endurance_budget``, or a ``FaultPlan`` death fired) —
+                  accesses still complete but raise ``poison_faults`` and
+                  a rescue migration to a healthy frame is pending;
+    ``RETIRED``   permanent tombstone: the page is parked on a dead frame
+                  to keep it out of service (always POISONED too). It is
+                  never a migration candidate, CLOCK victim or rescue
+                  target — the frame is permanently out of circulation.
+
+Retirement lifecycle: a frame death stamps POISONED on the resident page
+(pins force-cleared — the hardware broke the contract; serving
+renegotiates) and schedules a rescue swap with a healthy donor. When the
+swap commits, the rescued page clears POISONED and the donor — now
+sitting on the dead frame — becomes the ``POISONED|RETIRED`` tombstone.
 
 Pin bits are enforced twice on the hot path (the emulator's post-policy
 proposal mask AND ``dma.maybe_start``), so no policy — including
-user-registered ones — can migrate a pinned page.
+user-registered ones — can migrate a pinned page; the same double
+enforcement keeps poisoned pages out of policy proposals and tombstones
+out of every swap, so a pinned page can never land on a poisoned frame.
 
 DEVICE/FRAME/HOTNESS/EPOCH/FLAGS are keyed by page number; WEAR and OWNER
 reuse the same rows keyed by frame number (frames < n_pages always).
@@ -70,8 +84,9 @@ LANES = ("device", "frame", "hotness", "wear", "owner", "epoch", "flags")
 PIN_FAST = 1 << 0
 PIN_SLOW = 1 << 1
 POISONED = 1 << 2
+RETIRED = 1 << 3
 PINNED = PIN_FAST | PIN_SLOW
-KNOWN_FLAGS = PIN_FAST | PIN_SLOW | POISONED
+KNOWN_FLAGS = PIN_FAST | PIN_SLOW | POISONED | RETIRED
 
 
 class TableRows(NamedTuple):
@@ -123,6 +138,11 @@ def is_pinned(table: jax.Array) -> jax.Array:
 
 def is_poisoned(table: jax.Array) -> jax.Array:
     return (table[..., FLAGS] & POISONED) != 0
+
+
+def is_retired(table: jax.Array) -> jax.Array:
+    """True where the page is a permanent tombstone on a dead frame."""
+    return (table[..., FLAGS] & RETIRED) != 0
 
 
 def set_flags(table: jax.Array, pages, bits: int) -> jax.Array:
@@ -194,7 +214,10 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
     * the OWNER lane is the exact inverse of the fast-tier mapping;
     * the FLAGS lane carries only known bits, never both pin bits at
       once, and every pin bit agrees with the page's DEVICE lane (a
-      PIN_FAST page on the slow tier means a pinned page migrated).
+      PIN_FAST page on the slow tier means a pinned page migrated);
+    * RETIRED implies POISONED (a tombstone is always on a dead frame)
+      and no page is both PINNED and POISONED (retirement force-clears
+      pins, so a pinned page never sits on a poisoned frame).
 
     Raises on violation (used by tests and the emulator's debug mode).
     """
@@ -234,6 +257,15 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
     if stray.size:
         raise AssertionError(
             f"PIN_SLOW page {stray[0]} migrated to the fast tier")
+    orphan = np.nonzero(((flg & RETIRED) != 0) & ((flg & POISONED) == 0))[0]
+    if orphan.size:
+        raise AssertionError(
+            f"RETIRED page {orphan[0]} is not POISONED ({flg[orphan[0]]:#x})")
+    hot = np.nonzero(((flg & PINNED) != 0) & ((flg & POISONED) != 0))[0]
+    if hot.size:
+        raise AssertionError(
+            f"page {hot[0]} is pinned on a poisoned frame "
+            f"({flg[hot[0]]:#x})")
 
 
 class HybridAllocator:
@@ -254,6 +286,7 @@ class HybridAllocator:
         }
         self._owned: dict[int, list[int]] = {}
         self._pinned: dict[int, list[int]] = {}
+        self._retired: set[int] = set()
         self._next_handle = 0
 
     def alloc(self, n_pages: int, hint: int = FAST,
@@ -287,7 +320,24 @@ class HybridAllocator:
     def free(self, handle: int) -> None:
         self._pinned.pop(handle, None)
         for p in self._owned.pop(handle):
+            if p in self._retired:
+                continue  # dead frames never return to the free pools
             self._free[FAST if p < self.cfg.n_fast_pages else SLOW].append(p)
+
+    def retire(self, pages) -> None:
+        """Take ``pages`` permanently out of circulation (their frames
+        died — emulation reported them POISONED/RETIRED). Free copies are
+        removed from the pools immediately; owned copies are dropped when
+        their handle is freed. Capacity degrades gracefully: subsequent
+        allocations simply see smaller pools."""
+        dead = {int(p) for p in np.atleast_1d(np.asarray(pages, np.int64))}
+        self._retired.update(dead)
+        for d in (FAST, SLOW):
+            self._free[d] = [p for p in self._free[d] if p not in dead]
+
+    @property
+    def retired_pages(self) -> set[int]:
+        return set(self._retired)
 
     def apply_flags(self, table: jax.Array) -> jax.Array:
         """Stamp the pin bits of every live pinned allocation into

@@ -51,6 +51,7 @@ from repro.core.config import (EmulatorConfig, RuntimeParams,
 from repro.core.emulator import (EmulatorState, Trace, as_registry,
                                  entry_cache_count, entry_point, init_state,
                                  pad_trace)
+from repro.core.faults import FaultPlan
 from repro.core.policies import PolicyRegistry
 from repro.sweep.results import SweepResult
 from repro.sweep.spec import DesignPoint, SweepSpec, build_points
@@ -184,21 +185,31 @@ class Engine:
                            self.params if params is None else params)
         return jax.tree.map(jnp.array, state)
 
-    def _entry_for(self, n: int, *, carried: bool, donate: bool):
+    def _entry_for(self, n: int, *, carried: bool, donate: bool,
+                   fsig=None):
         """The compiled single-run entry point for an ``n``-request
         padded trace — the single source of truth for the run-path
         shape-sig layout (``benchmarks/bench_engine.py`` uses it for its
         raw-jit baseline). ``carried`` selects the continued-state
         program (fresh state is otherwise built inside the program, and
-        donation only ever applies to a carried state)."""
+        donation only ever applies to a carried state). ``fsig`` is the
+        :class:`FaultPlan` shape signature (None = no plan) — a plan's
+        event-array shapes are executable determinants like everything
+        else in the sig."""
         return entry_point(self._static, self.registry,
                            donate=donate and carried,
-                           shape_sig=(n, False, not carried))
+                           shape_sig=(n, False, not carried, fsig))
 
-    def _dispatch(self, trace, valid, state, params, donate):
+    @staticmethod
+    def _fault_sig(faults):
+        return None if faults is None else (faults.shape_sig,
+                                            faults.is_batched)
+
+    def _dispatch(self, trace, valid, state, params, donate, faults=None):
         fn = self._entry_for(len(trace), carried=state is not None,
-                             donate=donate)
-        return fn(self._static, self.registry, trace, valid, state, params)
+                             donate=donate, fsig=self._fault_sig(faults))
+        return fn(self._static, self.registry, trace, valid, state, params,
+                  faults)
 
     @staticmethod
     def _resolve_donate(donate: bool | None, state) -> bool:
@@ -229,7 +240,8 @@ class Engine:
     def run(self, trace: Trace, *, params: RuntimeParams | None = None,
             state: EmulatorState | None = None,
             valid: jax.Array | None = None,
-            donate: bool | None = None) -> RunResult:
+            donate: bool | None = None,
+            faults: FaultPlan | None = None) -> RunResult:
         """Run one trace through the platform at one design point.
 
         The trace is padded to a chunk multiple automatically (outputs
@@ -237,6 +249,9 @@ class Engine:
         with an already-padded trace. ``state`` continues a previous run
         and is **donated (consumed) by default** — the packed table
         updates in place; pass ``donate=False`` to keep it readable.
+        ``faults`` injects a :class:`~repro.core.faults.FaultPlan`
+        (events keyed on the carried state's absolute ``chunk_idx``);
+        None is bitwise-identical to the empty plan.
         """
         params = self.params if params is None else params
         donate = self._resolve_donate(donate, state)
@@ -249,7 +264,8 @@ class Engine:
         elif n % self.cfg.chunk:
             raise ValueError("explicit valid= requires a chunk-multiple "
                              "trace (use pad_trace, or drop valid=)")
-        state, outs = self._dispatch(trace, valid, state, params, donate)
+        state, outs = self._dispatch(trace, valid, state, params, donate,
+                                     faults)
         if len(trace) != n:
             outs = jax.tree.map(lambda x: x[:n], outs)
         return RunResult(state, outs)
@@ -258,7 +274,8 @@ class Engine:
                    params: RuntimeParams | None = None,
                    state: EmulatorState | None = None,
                    donate: bool | None = None,
-                   prefetch: int = 0) -> RunResult:
+                   prefetch: int = 0,
+                   faults: FaultPlan | None = None) -> RunResult:
         """Emulate a trace delivered as segments — the serving-scale path
         for streams larger than device memory.
 
@@ -277,6 +294,12 @@ class Engine:
         copy of segment ``k+1`` (often a lazily *generated* segment)
         with the in-flight emulation of segment ``k``. Results are
         bitwise identical at any depth.
+
+        One ``faults`` plan spans the whole stream: its events are keyed
+        on the carried state's absolute ``chunk_idx``, so the same plan
+        is threaded into every segment dispatch and each event fires in
+        whichever segment reaches its stamp (the serving scheduler
+        relies on this across dispatch boundaries).
         """
         params = self.params if params is None else params
         donate = self._resolve_donate(donate, state)
@@ -297,14 +320,14 @@ class Engine:
             carry = Trace(*(x[m:] for x in buf)) if m < len(buf) else None
             state, outs = self._dispatch(
                 head, self._ones_valid(m), state, params,
-                donate if first else True)
+                donate if first else True, faults)
             parts.append(outs)
             first = False
         if carry is not None and len(carry):
             n = len(carry)
             padded, valid = pad_trace(self.cfg, carry)
             state, outs = self._dispatch(padded, valid, state, params,
-                                         donate if first else True)
+                                         donate if first else True, faults)
             parts.append(jax.tree.map(lambda x: x[:n], outs))
         if not parts:
             z = jnp.zeros(0, jnp.int32)
@@ -315,17 +338,21 @@ class Engine:
         return RunResult(state, outs)
 
     def run_channels(self, traces: Trace, *,
-                     params: RuntimeParams | None = None):
+                     params: RuntimeParams | None = None,
+                     faults: FaultPlan | None = None):
         """FPGA-style spatial parallelism: emulate independent trace
         channels at once (``traces`` has a leading channel axis; each
         channel's length must be a chunk multiple). Returns
-        ``(states, outs)`` with the channel axis leading. ``params``
-        applies to every channel."""
+        ``(states, outs)`` with the channel axis leading. ``params`` —
+        and the optional shared ``faults`` plan — apply to every
+        channel."""
         params = self.params if params is None else params
         fn = entry_point(self._static, self.registry,
-                         shape_sig=("channels", tuple(traces.page.shape)))
+                         shape_sig=("channels", tuple(traces.page.shape),
+                                    self._fault_sig(faults)))
         batched = jax.vmap(
-            lambda t: fn(self._static, self.registry, t, None, None, params))
+            lambda t: fn(self._static, self.registry, t, None, None, params,
+                         faults))
         return batched(traces)
 
     # ------------------------------------------------------------------
@@ -362,7 +389,8 @@ class Engine:
 
     def sweep(self, spec: SweepSpec | list[DesignPoint] | RuntimeParams,
               trace: Trace, *, mesh=None, states=None,
-              donate: bool | None = None) -> SweepResult:
+              donate: bool | None = None,
+              faults: FaultPlan | None = None) -> SweepResult:
         """Evaluate every design point of ``spec`` on ``trace`` in ONE
         compiled, vmapped emulation.
 
@@ -386,13 +414,20 @@ class Engine:
         (the session contract — the passed-in states are CONSUMED where
         their sharding already matches; resharded states donate the
         transferred copy).
+
+        ``faults``: one shared :class:`FaultPlan` applied to every
+        point, or a stacked per-point batch (``faults.stack_plans`` —
+        pad with ``pad_plan`` first so shapes agree) making the failure
+        rate itself a swept design axis. A stacked batch is padded and
+        sharded alongside the params.
         """
         points, registry, params = self._sweep_batch(spec)
         return self._sweep_exec(points, registry, params, trace,
-                                mesh=mesh, states=states, donate=donate)
+                                mesh=mesh, states=states, donate=donate,
+                                faults=faults)
 
     def _sweep_exec(self, points, registry, params, trace, *,
-                    mesh, states, donate) -> SweepResult:
+                    mesh, states, donate, faults=None) -> SweepResult:
         """Run an already-normalized (points, registry, stacked params)
         batch — shared by :meth:`sweep` and :meth:`continue_sweep`."""
         n = len(points)
@@ -418,18 +453,23 @@ class Engine:
             if states is not None:
                 states, _ = _pad_to_multiple(states, n, size)
                 states = jax.device_put(states, sharding)
+            if faults is not None and faults.is_batched:
+                faults, _ = _pad_to_multiple(faults, n, size)
+                faults = jax.device_put(faults, sharding)
         fn = entry_point(self._static, registry, batch=True, donate=donate,
                          shape_sig=(len(padded), n + n_padded,
-                                    states is None, mesh))
+                                    states is None, mesh,
+                                    self._fault_sig(faults)))
         states, outs = fn(self._static, registry, padded, valid, states,
-                          params)
+                          params, faults)
         if n_padded:
             states, outs = jax.tree.map(lambda x: x[:n], (states, outs))
         return SweepResult(points=points, states=states, outs=outs,
                            params=stacked, registry=registry)
 
     def continue_sweep(self, result: SweepResult, trace: Trace, *,
-                       mesh=None, donate: bool = True) -> SweepResult:
+                       mesh=None, donate: bool = True,
+                       faults: FaultPlan | None = None) -> SweepResult:
         """Continue a previous sweep on a further trace segment — every
         point resumes from its own warm state, donated (consumed) by
         default, optionally fanned out over ``mesh`` (the stacked states
@@ -445,9 +485,10 @@ class Engine:
         if result.params is not None:
             return self._sweep_exec(result.points, result.registry,
                                     result.params, trace, mesh=mesh,
-                                    states=result.states, donate=donate)
+                                    states=result.states, donate=donate,
+                                    faults=faults)
         return self.sweep(result.points, trace, mesh=mesh,
-                          states=result.states, donate=donate)
+                          states=result.states, donate=donate, faults=faults)
 
 
 __all__ = ["Engine", "RunResult", "PolicyRegistry", "stack_params",

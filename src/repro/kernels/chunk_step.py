@@ -36,12 +36,20 @@ and ``core.emulator`` documents):
    decay shift. One in-place update instead of ~a dozen copying
    scatters — the restructure that makes the scan path fast and the
    kernel possible.
-3. **Policy** — the proposal phase reads the *committed* table (policies
+3. **Retire** — the retirement subsystem (:func:`retire_phase`) reads
+   the committed table and stamps at most one dying frame's resident
+   page POISONED: a second, sentinel-guarded single-row FLAGS scatter —
+   the one documented extension to the "one scatter" rule, a dropped
+   no-op whenever retirement is idle.
+4. **Policy** — the proposal phase reads the *committed* table (policies
    see this chunk's accesses and completed migration, exactly as
-   before), then ``dma.maybe_start`` and the CLOCK pointer commit.
+   before), then ``dma.maybe_start`` and the CLOCK pointer commit. A
+   pending rescue preempts the policy's proposal on the single DMA
+   channel.
 
-Nothing mid-pipeline reads a mid-chunk write; FLAGS is never written on
-the hot path at all.
+Nothing mid-pipeline reads a mid-chunk write; FLAGS is only written at
+boundaries (the swap commit's poison travel and the retirement stamp),
+never on the hot path.
 
 TPU note: the body gathers/scatters table rows by value index, which
 interpret mode (and the bit-identity suite) exercises everywhere; on a
@@ -53,6 +61,7 @@ VMEM (paper geometry: 294912 rows x 8 lanes x 4 B ~ 9.4 MB of ~16 MB).
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import NamedTuple
 
 import jax
@@ -62,6 +71,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import consistency, dma as dma_lib, latency
+from repro.core import faults as faults_lib
+from repro.core import policies as policies_lib
 from repro.core import table as table_lib
 from repro.core.config import FAST, SLOW, EmulatorConfig, RuntimeParams
 from repro.core.policies import PolicyRegistry
@@ -81,7 +92,12 @@ VMEM_TABLE_BUDGET = 12 * 2 ** 20
 class StepScalars(NamedTuple):
     """The scalar slice of ``EmulatorState`` a chunk step carries (the
     packed table and ``bank_free`` travel separately; counters stay in
-    the emulator — float accumulation never enters the kernel)."""
+    the emulator — float accumulation never enters the kernel).
+
+    The trailing three registers are the retirement subsystem's state
+    (rescue register, global min-wear register, FaultPlan death cursor);
+    they default so pre-retirement callers constructing scalars by
+    keyword keep working."""
     clock: jax.Array
     clock_ptr: jax.Array
     chunk_idx: jax.Array
@@ -89,6 +105,9 @@ class StepScalars(NamedTuple):
     link_free_rx: jax.Array
     link_free_tx: jax.Array
     last_return: jax.Array
+    rescue_page: jax.Array = -1   # page awaiting rescue off a dead frame
+    min_wear: jax.Array = 0       # global min slow-frame WEAR (scrubbed)
+    fault_cursor: jax.Array = 0   # next unconsumed FaultPlan death row
 
 
 class PipelineOut(NamedTuple):
@@ -285,7 +304,18 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
     except WEAR, where duplicate targets sum exactly as the historical
     sequential adds did.
 
-    Returns ``(table, dma, done, now, last_ret)``.
+    Retirement extensions (both exactly zero-effect when the subsystem is
+    idle): the swap commit's FLAGS triples carry poison travel for the
+    page in the rescue register (``dma.plan_commit``), and the global
+    min-wear register is rescrubbed on decay boundaries — a periodic
+    whole-histogram min over the slow frames' WEAR lane riding the aging
+    tick, so ``wear_level``'s slack band is measured against the true
+    floor at decay granularity.
+
+    Returns ``(table, dma, done, now, last_ret, min_wear, tombstone)``;
+    ``tombstone`` is the page this commit parked on a dead frame (-1 if
+    none — when set, the pending rescue completed and the register
+    clears).
     """
     n = page.shape[0]
     w_lanes = table.shape[-1]
@@ -308,7 +338,7 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
     # DMA swap commit, planned from the stage-2 prefetched rows.
     swap_a = jnp.maximum(sc.dma.page_a, 0)  # pre-completion swap pair
     plan = dma_lib.plan_commit(cfg, sc.dma, now, pipe.row_a, pipe.row_b,
-                               params)
+                               params, sc.rescue_page)
     # OWNER inverse map (fast frame -> owning page, the CLOCK victim
     # rotation): the promoted page (swap_a, now FAST) owns its new frame.
     # No swap completed => route the write through an out-of-range
@@ -340,7 +370,86 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
         lambda t: t.at[:, table_lib.HOTNESS].set(
             t[:, table_lib.HOTNESS] >> params.hotness_decay_shift),
         lambda t: t, table)
-    return table, plan.dma, plan.done, now, last_ret
+    # Min-wear scrub: slow frames are rows [0, n_slow) of the WEAR lane.
+    n_slow = n_pages - params.n_fast_pages
+    wmin_global = jnp.min(jnp.where(
+        jnp.arange(n_pages, dtype=jnp.int32) < n_slow,
+        table[:, table_lib.WEAR], 2 ** 30))
+    min_wear = jnp.where(do_decay, wmin_global, sc.min_wear)
+    return table, plan.dma, plan.done, now, last_ret, min_wear, \
+        plan.tombstone
+
+
+# --------------------------------------------------------------------------- #
+# phase 2.5: endurance-driven frame retirement (reads the committed table)
+# --------------------------------------------------------------------------- #
+
+def retire_phase(cfg: EmulatorConfig, params: RuntimeParams,
+                 table: jax.Array, sc: StepScalars, rescue_page,
+                 fault_cursor, faults: faults_lib.FaultPlan, page, valid):
+    """Detect at most ONE frame death per boundary and mark its resident
+    page POISONED (pins force-cleared — a dying frame exits every pin
+    contract; the serving layer renegotiates). Two detectors, gated on a
+    free rescue register (one rescue in flight at a time — the single DMA
+    engine):
+
+    * **FaultPlan deaths** (priority): the next death row fires once its
+      chunk stamp is due. A due row whose page is already POISONED or a
+      RETIRED tombstone is consumed without effect (the frame is already
+      dead).
+    * **Endurance crossings**: with ``endurance_budget > 0``, any page
+      *observed this boundary* (the chunk's accesses plus the in-flight
+      swap members — the only rows whose WEAR can have just moved) that
+      is slow-resident on a frame whose WEAR exceeds the budget.
+
+    The stamp is one sentinel-guarded single-row FLAGS scatter — the
+    documented second boundary write after the combined commit scatter,
+    and a dropped no-op whenever nothing fires (``endurance_budget <= 0``
+    and an empty plan leave the table bitwise-untouched).
+
+    Returns ``(table, rescue_page, fault_cursor, retired_page)`` with
+    ``retired_page`` = the page marked this boundary, else -1.
+    """
+    n_pages = table.shape[0]
+    free = rescue_page < 0
+
+    # FaultPlan death detector (serialized through the cursor).
+    deaths = faults.deaths
+    nd = deaths.shape[0]
+    cur = jnp.minimum(fault_cursor, nd - 1)
+    due = (fault_cursor < nd) & (deaths[cur, 0] <= sc.chunk_idx)
+    consume = due & free
+    ev_p = jnp.clip(deaths[cur, 1], 0, n_pages - 1)
+    ev_flags = table[ev_p, table_lib.FLAGS]
+    death_fire = consume & \
+        ((ev_flags & (table_lib.POISONED | table_lib.RETIRED)) == 0)
+    fault_cursor = fault_cursor + consume.astype(jnp.int32)
+
+    # Endurance detector over the boundary's observed pages.
+    a, b = sc.dma.page_a, sc.dma.page_b
+    cand = jnp.concatenate([
+        page, jnp.stack([jnp.maximum(a, 0), jnp.maximum(b, 0)])])
+    cand_ok = jnp.concatenate([valid, jnp.stack([a >= 0, b >= 0])])
+    cand = jnp.clip(cand, 0, n_pages - 1)
+    rows = table[cand]
+    wear = table[jnp.where(table_lib.device(rows) == SLOW,
+                           table_lib.frame(rows), 0), table_lib.WEAR]
+    over = cand_ok & (params.endurance_budget > 0) & \
+        (table_lib.device(rows) == SLOW) & \
+        (wear > params.endurance_budget) & \
+        ((table_lib.flags(rows) &
+          (table_lib.POISONED | table_lib.RETIRED)) == 0)
+    j = jnp.argmax(over)
+    wear_fire = free & ~death_fire & over[j]
+
+    fire = death_fire | wear_fire
+    p_ret = jnp.where(death_fire, ev_p, cand[j])
+    new_fl = (table[p_ret, table_lib.FLAGS] | table_lib.POISONED) & \
+        ~table_lib.PINNED
+    table = table.at[jnp.where(fire, p_ret, n_pages),
+                     table_lib.FLAGS].set(new_fl, mode="drop")
+    rescue_page = jnp.where(fire, p_ret, rescue_page)
+    return table, rescue_page, fault_cursor, jnp.where(fire, p_ret, -1)
 
 
 # --------------------------------------------------------------------------- #
@@ -349,16 +458,32 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
 
 def policy_phase(cfg: EmulatorConfig, params: RuntimeParams,
                  registry: PolicyRegistry, table: jax.Array, sc: StepScalars,
-                 dma: dma_lib.DMAState, now, page, is_write, valid):
+                 dma: dma_lib.DMAState, now, page, is_write, valid,
+                 rescue_page, min_wear):
     """Policy dispatch on the *traced* policy id: ``lax.switch`` over the
     (static, frozen) registry snapshot makes the policy itself a
     batchable design axis — inside the Pallas body the id arrives via the
     scalar-prefetch vector. A single-policy registry skips the switch.
     Branches come from the snapshot's own function tuple, so
     re-registering a policy name after the snapshot cannot leak into this
-    compilation. Returns ``(dma, clock_ptr)``."""
+    compilation. A branch declaring a ``min_wear`` keyword (signature
+    inspection at trace time — see policies.py) receives the maintained
+    global min-wear register.
+
+    While a rescue is pending (``rescue_page >= 0``) policy proposals are
+    suppressed and the single DMA channel is offered the rescue migration
+    instead: a slow-resident dying page promotes into a CLOCK victim
+    frame (consuming the victim from the rotation exactly like a policy
+    promotion); a fast-resident dying page swaps with the first healthy
+    slow-resident page of this chunk's access stream (the donor parks on
+    the dead frame as the tombstone — poison travel in the swap commit).
+    Returns ``(dma, clock_ptr)``."""
     any_valid = jnp.any(valid)
-    branches = [functools.partial(fn, cfg, params) for fn in registry.fns]
+    branches = [
+        functools.partial(fn, cfg, params, min_wear=min_wear)
+        if "min_wear" in inspect.signature(fn).parameters
+        else functools.partial(fn, cfg, params)
+        for fn in registry.fns]
     ops_ = (table, sc.clock_ptr, page, is_write, valid)
     if len(branches) == 1:
         p_want, cand, victim, new_ptr = branches[0](*ops_)
@@ -374,11 +499,39 @@ def policy_phase(cfg: EmulatorConfig, params: RuntimeParams,
     want = p_want & any_valid & unpinned & \
         (table_lib.device(cand_row) == SLOW) & \
         (table_lib.device(victim_row) == FAST)
-    dma, started = dma_lib.maybe_start(dma, want, cand, victim, now, table)
+
+    # Rescue migration override (exactly no-effect while the register is
+    # idle — every committed value reduces to the policy's).
+    pending = rescue_page >= 0
+    resc = jnp.clip(rescue_page, 0, table.shape[0] - 1)
+    r_slow = table_lib.device(table[resc]) == SLOW
+    r_victim, r_found, r_skip = policies_lib._clock_victim(
+        table, sc.clock_ptr, params.n_fast_pages)
+    pg = jnp.clip(page, 0, table.shape[0] - 1)
+    rows_pg = table[pg]
+    donor_ok = valid & (table_lib.device(rows_pg) == SLOW) & \
+        ((table_lib.flags(rows_pg) &
+          (table_lib.PINNED | table_lib.RETIRED | table_lib.POISONED)) == 0)
+    dj = jnp.argmax(donor_ok)
+    r_want = pending & jnp.where(r_slow, r_found, donor_ok[dj])
+    final_want = jnp.where(pending, r_want, want)
+    page_a = jnp.where(pending, jnp.where(r_slow, resc, pg[dj]), cand)
+    page_b = jnp.where(pending, jnp.where(r_slow, r_victim, resc), victim)
+
+    dma, started = dma_lib.maybe_start(dma, final_want, page_a, page_b, now,
+                                       table)
     # CLOCK pointer commit (two cases, see policies.py): a proposal only
     # consumes its victim frame when the swap actually started; with no
     # proposal, the policy's pointer motion commits as-is (pin skipping).
-    clock_ptr = jnp.where(started | ~p_want, new_ptr, sc.clock_ptr)
+    # A started slow-resident rescue consumes its victim the same way; a
+    # fast-resident rescue touches no CLOCK frame. While a rescue is
+    # merely pending (engine busy, no donor yet) the pointer holds — the
+    # suppressed policy proposal consumed nothing.
+    ptr_rescue = (sc.clock_ptr + r_skip + 1) % params.n_fast_pages
+    clock_ptr = jnp.where(
+        pending,
+        jnp.where(r_slow & started, ptr_rescue, sc.clock_ptr),
+        jnp.where(started | ~p_want, new_ptr, sc.clock_ptr))
     return dma, clock_ptr
 
 
@@ -388,31 +541,53 @@ def policy_phase(cfg: EmulatorConfig, params: RuntimeParams,
 
 def step_ref(cfg: EmulatorConfig, registry: PolicyRegistry, table: jax.Array,
              params: RuntimeParams, sc: StepScalars, bank_free: jax.Array,
-             page, offset, is_write, size, valid, *, seq: bool = False):
-    """One chunk end-to-end (reads -> commit -> policy). The jnp
-    reference AND the scan path; ``seq=True`` is the same step with the
-    sequential in-kernel recurrences (what the Pallas body runs).
+             page, offset, is_write, size, valid,
+             faults: faults_lib.FaultPlan | None = None, *,
+             seq: bool = False):
+    """One chunk end-to-end (reads -> commit -> retire -> policy). The
+    jnp reference AND the scan path; ``seq=True`` is the same step with
+    the sequential in-kernel recurrences (what the Pallas body runs).
+    ``faults`` defaults to the empty plan (bitwise no-op).
 
     Returns ``(table, scalars, bank_free, outs)`` with ``outs`` carrying
     per-request results (``returns`` masked, ``device`` raw post-redirect,
-    ``latency`` masked) plus the ``held``/``poisoned`` counter inputs.
+    ``latency`` masked), the ``held``/``poisoned``/``injected`` counter
+    inputs, and the boundary's ``retired``/``tombstone`` page scalars
+    (-1 when none).
     """
+    if faults is None:
+        faults = faults_lib.FaultPlan.empty()
     pipe = pipeline_phase(cfg, params, table, sc, bank_free,
                           page, offset, is_write, size, valid, seq=seq)
-    table, dma, _, now, last_ret = commit_phase(
+    # Transient fault injection: purely observational — the access
+    # completes (the emulated device returned corrupt data); the serving
+    # layer refetches.
+    tc, tp = faults.transient[:, 0], faults.transient[:, 1]
+    injected = ((page[:, None] == tp[None, :]) &
+                (tc[None, :] == sc.chunk_idx)).any(axis=1) & valid
+    table, dma, done, now, last_ret, min_wear, tombstone = commit_phase(
         cfg, params, table, sc, pipe, page, is_write, valid,
         eff_write_weight(params, registry))
+    rescue_page = jnp.where(done & (tombstone >= 0), -1,
+                            jnp.asarray(sc.rescue_page, jnp.int32))
+    table, rescue_page, fault_cursor, retired = retire_phase(
+        cfg, params, table, sc, rescue_page,
+        jnp.asarray(sc.fault_cursor, jnp.int32), faults, page, valid)
     dma, clock_ptr = policy_phase(cfg, params, registry, table, sc, dma, now,
-                                  page, is_write, valid)
+                                  page, is_write, valid, rescue_page,
+                                  min_wear)
     any_valid = jnp.any(valid)
     sc2 = StepScalars(
         clock=now, clock_ptr=clock_ptr, chunk_idx=sc.chunk_idx + 1, dma=dma,
         link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
         link_free_tx=jnp.where(any_valid, pipe.tx_last, sc.link_free_tx),
-        last_return=last_ret)
+        last_return=last_ret, rescue_page=rescue_page,
+        min_wear=jnp.asarray(min_wear, jnp.int32), fault_cursor=fault_cursor)
     outs = {"returns": jnp.where(valid, pipe.returns, 0),
             "device": pipe.dev, "latency": pipe.lat,
-            "held": pipe.held, "poisoned": pipe.poisoned}
+            "held": pipe.held, "poisoned": pipe.poisoned,
+            "injected": injected, "retired": retired,
+            "tombstone": jnp.asarray(tombstone, jnp.int32)}
     return table, sc2, pipe.bank_free, outs
 
 
@@ -422,15 +597,17 @@ STAGES = ("rx", "gather", "resolve", "return", "commit", "full")
 def step_until(cfg: EmulatorConfig, registry: PolicyRegistry,
                table: jax.Array, params: RuntimeParams, sc: StepScalars,
                bank_free: jax.Array, page, offset, is_write, size, valid,
-               *, upto: str = "full"):
+               faults: faults_lib.FaultPlan | None = None, *,
+               upto: str = "full"):
     """A :func:`step_ref`-shaped step truncated after ``upto`` (one of
     :data:`STAGES`) — the per-stage breakdown lever of
     ``benchmarks/bench_chunk_step.py``. Truncated variants keep the carry
-    structure (clock still advances) so they scan; timing deltas between
-    successive stages isolate each stage's cost."""
+    structure (clock still advances; the retirement registers pass
+    through untouched) so they scan; timing deltas between successive
+    stages isolate each stage's cost."""
     if upto == "full":
         return step_ref(cfg, registry, table, params, sc, bank_free,
-                        page, offset, is_write, size, valid)
+                        page, offset, is_write, size, valid, faults)
     if upto not in STAGES:
         raise ValueError(f"unknown stage {upto!r}; expected one of {STAGES}")
     n = page.shape[0]
@@ -443,7 +620,7 @@ def step_until(cfg: EmulatorConfig, registry: PolicyRegistry,
             "held": pipe.held, "poisoned": pipe.poisoned}
     any_valid = jnp.any(valid)
     if upto == "commit":
-        table, dma, _, now, last_ret = commit_phase(
+        table, dma, _, now, last_ret, min_wear, _ = commit_phase(
             cfg, params, table, sc, pipe, page, is_write, valid,
             eff_write_weight(params, registry))
         sc2 = StepScalars(
@@ -451,7 +628,8 @@ def step_until(cfg: EmulatorConfig, registry: PolicyRegistry,
             dma=dma,
             link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
             link_free_tx=jnp.where(any_valid, pipe.tx_last, sc.link_free_tx),
-            last_return=last_ret)
+            last_return=last_ret, rescue_page=sc.rescue_page,
+            min_wear=min_wear, fault_cursor=sc.fault_cursor)
         return table, sc2, pipe.bank_free, outs
     sc2 = StepScalars(
         clock=sc.clock + params.issue_gap * n, clock_ptr=sc.clock_ptr,
@@ -459,7 +637,8 @@ def step_until(cfg: EmulatorConfig, registry: PolicyRegistry,
         link_free_rx=jnp.where(any_valid, pipe.rx_last, sc.link_free_rx),
         link_free_tx=jnp.where(any_valid & (pipe_upto == "full"),
                                pipe.tx_last, sc.link_free_tx),
-        last_return=sc.last_return)
+        last_return=sc.last_return, rescue_page=sc.rescue_page,
+        min_wear=sc.min_wear, fault_cursor=sc.fault_cursor)
     return table, sc2, pipe.bank_free, outs
 
 
@@ -476,16 +655,17 @@ _FLOAT_PARAM_FIELDS = frozenset({
     "power_pj_per_bit_slow_read", "power_pj_per_bit_slow_write"})
 
 # Scalar-state slots at the head of the int vector (before int params).
-_N_SC = 11
+_N_SC = 14
 
 
 def _pack_scalars(params: RuntimeParams, sc: StepScalars):
-    """(int32[NI], float32[NF]): 11 state scalars + int params, and the
+    """(int32[NI], float32[NF]): 14 state scalars + int params, and the
     float params. ``policy_id`` rides the int vector — that is the
     scalar-prefetched dispatch operand."""
     ints = [sc.clock, sc.clock_ptr, sc.chunk_idx, sc.dma.active,
             sc.dma.page_a, sc.dma.page_b, sc.dma.start, sc.dma.swaps_done,
-            sc.link_free_rx, sc.link_free_tx, sc.last_return]
+            sc.link_free_rx, sc.link_free_tx, sc.last_return,
+            sc.rescue_page, sc.min_wear, sc.fault_cursor]
     floats = []
     for name, v in zip(RuntimeParams._fields, params):
         (floats if name in _FLOAT_PARAM_FIELDS else ints).append(v)
@@ -499,7 +679,8 @@ def _unpack_scalars(ints: jax.Array, floats: jax.Array):
         clock=ints[0], clock_ptr=ints[1], chunk_idx=ints[2],
         dma=dma_lib.DMAState(active=ints[3], page_a=ints[4], page_b=ints[5],
                              start=ints[6], swaps_done=ints[7]),
-        link_free_rx=ints[8], link_free_tx=ints[9], last_return=ints[10])
+        link_free_rx=ints[8], link_free_tx=ints[9], last_return=ints[10],
+        rescue_page=ints[11], min_wear=ints[12], fault_cursor=ints[13])
     vals, ii, fi = {}, _N_SC, 0
     for name in RuntimeParams._fields:
         if name in _FLOAT_PARAM_FIELDS:
@@ -521,36 +702,45 @@ def _pallas_step_fn(cfg: EmulatorConfig, registry: PolicyRegistry,
     so all points launch once per chunk."""
 
     def _body(ints_ref, table_ref, page_ref, offset_ref, iw_ref, size_ref,
-              valid_ref, floats_ref, bank_free_ref,
+              valid_ref, floats_ref, bank_free_ref, transient_ref,
+              deaths_ref,
               out_table_ref, out_sc_ref, out_bank_ref,
-              out_ret_ref, out_dev_ref, out_lat_ref, out_poi_ref):
+              out_ret_ref, out_dev_ref, out_lat_ref, out_poi_ref,
+              out_inj_ref):
         bi = pl.program_id(0)
         params, sc = _unpack_scalars(ints_ref[bi], floats_ref[0])
+        faults = faults_lib.FaultPlan(transient=transient_ref[0],
+                                      deaths=deaths_ref[0])
         table, sc2, bank_free2, outs = step_ref(
             cfg, registry, table_ref[0], params, sc, bank_free_ref[0],
             page_ref[0], offset_ref[0], iw_ref[0] != 0, size_ref[0],
-            valid_ref[0] != 0, seq=True)
+            valid_ref[0] != 0, faults, seq=True)
         out_table_ref[0] = table
         out_sc_ref[0] = jnp.stack(
             [sc2.clock, sc2.clock_ptr, sc2.chunk_idx, sc2.dma.active,
              sc2.dma.page_a, sc2.dma.page_b, sc2.dma.start,
              sc2.dma.swaps_done, sc2.link_free_rx, sc2.link_free_tx,
-             sc2.last_return, outs["held"]])
+             sc2.last_return, sc2.rescue_page, sc2.min_wear,
+             sc2.fault_cursor, outs["held"], outs["retired"],
+             outs["tombstone"]])
         out_bank_ref[0] = bank_free2
         out_ret_ref[0] = outs["returns"]
         out_dev_ref[0] = outs["device"]
         out_lat_ref[0] = outs["latency"]
         out_poi_ref[0] = outs["poisoned"].astype(jnp.int32)
+        out_inj_ref[0] = outs["injected"].astype(jnp.int32)
 
     @custom_batching.custom_vmap
     def step(table, page, offset, is_write, size, valid, ints, floats,
-             bank_free):
+             bank_free, transient, deaths):
         batch = table.shape[:-2]
         n_pages, w = table.shape[-2:]
         chunk = page.shape[-1]
         ni = ints.shape[-1]
         nf = floats.shape[-1]
         nb = bank_free.shape[-1]
+        nt = transient.shape[-2]
+        nd = deaths.shape[-2]
         tb = table.reshape(-1, n_pages, w)
         b = tb.shape[0]
 
@@ -566,9 +756,10 @@ def _pallas_step_fn(cfg: EmulatorConfig, registry: PolicyRegistry,
             grid=(b,),
             in_specs=[spec(n_pages, w), spec(chunk), spec(chunk),
                       spec(chunk), spec(chunk), spec(chunk), spec(nf),
-                      spec(nb)],
-            out_specs=[spec(n_pages, w), spec(_N_SC + 1), spec(nb),
-                       spec(chunk), spec(chunk), spec(chunk), spec(chunk)],
+                      spec(nb), spec(nt, 2), spec(nd, 2)],
+            out_specs=[spec(n_pages, w), spec(_N_SC + 3), spec(nb),
+                       spec(chunk), spec(chunk), spec(chunk), spec(chunk),
+                       spec(chunk)],
         )
         i32 = jnp.int32
         outs = pl.pallas_call(
@@ -576,8 +767,9 @@ def _pallas_step_fn(cfg: EmulatorConfig, registry: PolicyRegistry,
             grid_spec=grid_spec,
             out_shape=[
                 jax.ShapeDtypeStruct((b, n_pages, w), i32),
-                jax.ShapeDtypeStruct((b, _N_SC + 1), i32),
+                jax.ShapeDtypeStruct((b, _N_SC + 3), i32),
                 jax.ShapeDtypeStruct((b, nb), i32),
+                jax.ShapeDtypeStruct((b, chunk), i32),
                 jax.ShapeDtypeStruct((b, chunk), i32),
                 jax.ShapeDtypeStruct((b, chunk), i32),
                 jax.ShapeDtypeStruct((b, chunk), i32),
@@ -585,24 +777,27 @@ def _pallas_step_fn(cfg: EmulatorConfig, registry: PolicyRegistry,
             ],
             interpret=interpret,
         )(vec(ints), tb, vec(page), vec(offset), vec(is_write), vec(size),
-          vec(valid), vec(floats), vec(bank_free))
-        tbl2, scv, bf2, ret, dev, lat, poi = outs
+          vec(valid), vec(floats), vec(bank_free),
+          transient.reshape(-1, nt, 2), deaths.reshape(-1, nd, 2))
+        tbl2, scv, bf2, ret, dev, lat, poi, inj = outs
         return (tbl2.reshape(*batch, n_pages, w),
-                scv.reshape(*batch, _N_SC + 1),
+                scv.reshape(*batch, _N_SC + 3),
                 bf2.reshape(*batch, nb),
                 ret.reshape(*batch, chunk), dev.reshape(*batch, chunk),
-                lat.reshape(*batch, chunk), poi.reshape(*batch, chunk))
+                lat.reshape(*batch, chunk), poi.reshape(*batch, chunk),
+                inj.reshape(*batch, chunk))
 
     @step.def_vmap
     def _step_vmap(axis_size, in_batched, *args):
         # vmap (the sweep's design-point axis) becomes the kernel's
         # leading grid axis: one launch steps every design point's chunk.
-        # The sweep batches state + params but shares the trace, so
-        # broadcast whichever operands aren't batched.
+        # The sweep batches state + params but shares the trace (and, for
+        # a shared fault scenario, the plan), so broadcast whichever
+        # operands aren't batched.
         args = tuple(
             a if b else jnp.broadcast_to(a, (axis_size, *a.shape))
             for a, b in zip(args, in_batched))
-        return step(*args), (True,) * 7
+        return step(*args), (True,) * 8
 
     return step
 
@@ -627,23 +822,29 @@ def use_chunk_step_kernel(cfg: EmulatorConfig) -> bool:
 
 def chunk_step(cfg: EmulatorConfig, registry: PolicyRegistry,
                table: jax.Array, params: RuntimeParams, sc: StepScalars,
-               bank_free: jax.Array, page, offset, is_write, size, valid):
+               bank_free: jax.Array, page, offset, is_write, size, valid,
+               faults: faults_lib.FaultPlan | None = None):
     """THE chunk step — one-kernel Pallas path or the scan path, resolved
     by :func:`use_chunk_step_kernel` (bitwise identical either way).
     Signature/returns as :func:`step_ref`."""
+    if faults is None:
+        faults = faults_lib.FaultPlan.empty()
     if not use_chunk_step_kernel(cfg):
         return step_ref(cfg, registry, table, params, sc, bank_free,
-                        page, offset, is_write, size, valid)
+                        page, offset, is_write, size, valid, faults)
     fn = _pallas_step_fn(cfg, registry, kernel_ops._interpret())
     ints, floats = _pack_scalars(params, sc)
-    tbl2, scv, bank_free2, returns, dev, lat, poi = fn(
+    tbl2, scv, bank_free2, returns, dev, lat, poi, inj = fn(
         table, page, offset, is_write.astype(jnp.int32), size,
-        valid.astype(jnp.int32), ints, floats, bank_free)
+        valid.astype(jnp.int32), ints, floats, bank_free,
+        faults.transient, faults.deaths)
     sc2 = StepScalars(
         clock=scv[0], clock_ptr=scv[1], chunk_idx=scv[2],
         dma=dma_lib.DMAState(active=scv[3], page_a=scv[4], page_b=scv[5],
                              start=scv[6], swaps_done=scv[7]),
-        link_free_rx=scv[8], link_free_tx=scv[9], last_return=scv[10])
+        link_free_rx=scv[8], link_free_tx=scv[9], last_return=scv[10],
+        rescue_page=scv[11], min_wear=scv[12], fault_cursor=scv[13])
     outs = {"returns": returns, "device": dev, "latency": lat,
-            "held": scv[11], "poisoned": poi != 0}
+            "held": scv[14], "poisoned": poi != 0, "injected": inj != 0,
+            "retired": scv[15], "tombstone": scv[16]}
     return tbl2, sc2, bank_free2, outs

@@ -42,9 +42,13 @@ def _stamp(table, active, page_a, page_b, pages, live, *, n_pages):
     in_swap_b = (active != 0) & (pages == page_b)
     dev = jnp.where(in_swap_a, FAST, jnp.where(in_swap_b, SLOW, dev))
     bit = jnp.where(dev == FAST, table_lib.PIN_FAST, table_lib.PIN_SLOW)
-    bit = jnp.where(live, bit, 0).astype(jnp.int32)
-    idx = jnp.where(live, pages, n_pages)   # sentinel rows drop
     cur = table[jnp.clip(pages, 0, n_pages - 1), table_lib.FLAGS]
+    # Never pin a page whose frame is dying or dead: a pin on a POISONED
+    # page would both violate the table invariant and veto its own
+    # rescue. The scheduler re-places such contracts on healthy pages.
+    healthy = (cur & (table_lib.POISONED | table_lib.RETIRED)) == 0
+    bit = jnp.where(live & healthy, bit, 0).astype(jnp.int32)
+    idx = jnp.where(live & healthy, pages, n_pages)  # sentinel rows drop
     return table.at[idx, table_lib.FLAGS].set(cur | bit, mode="drop")
 
 

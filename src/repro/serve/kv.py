@@ -12,12 +12,21 @@ cost of a scheduler step is O(pages touched), not O(python objects).
 Eviction models the serving stack swapping cold KV pages out to host
 memory under pressure: when the free pool drops below the low watermark,
 the coldest unpinned pages (oldest ``last_access`` stamp, never a page
-touched this step, never a contracted page) are released back to the
-allocator until the high watermark is restored. A sequence whose evicted
-page is needed again re-allocates it (a *refetch*, counted by the
-scheduler) — with windowed attention the candidates are precisely the
-pages the attention pass will never stream again, so refetches indicate
-an undersized window or an overcommitted tier.
+touched this step, never a contracted page, never a page referenced by a
+built-but-undispatched request — the ``protected`` set) are released
+back to the allocator until the high watermark is restored. A sequence
+whose evicted page is needed again re-allocates it (a *refetch*, counted
+by the scheduler) — with windowed attention the candidates are precisely
+the pages the attention pass will never stream again, so refetches
+indicate an undersized window or an overcommitted tier.
+
+Endurance retirement: :meth:`PagedKVMap.retire_pages` takes pages the
+emulator reported dead (a retired frame's tombstone and its rescued
+counterpart — the serving layer conservatively kills both) permanently
+out of circulation. Dead pages are compacted out of the free stacks
+eagerly and ``_free`` silently drops them, so a retired page id is never
+handed out again; live owners are detached so the next access refetches
+onto a healthy page.
 """
 from __future__ import annotations
 
@@ -67,10 +76,12 @@ class PagedKVMap:
         self.owner = np.full(n, -1, np.int32)      # slot owning each page
         self.owner_idx = np.full(n, -1, np.int32)  # page index within seq
         self.pinned = np.zeros(n, bool)
+        self.dead = np.zeros(n, bool)                    # retired frames
         self.last_access = np.full(n, _NEVER, np.int64)  # free = _NEVER
         self.low_mark = int(free_low_frac * n)
         self.high_mark = max(int(free_high_frac * n), self.low_mark + 1)
         self.evictions = 0
+        self.retired = 0
 
     @property
     def free_total(self) -> int:
@@ -120,7 +131,38 @@ class PagedKVMap:
         self._free(pages)
         return pages, pinned
 
+    def retire_pages(self, pages: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Take ``pages`` permanently out of circulation (their emulated
+        frames died). Free-stack copies are compacted away; live owners
+        are detached (their ``page_of`` entry becomes -1, triggering a
+        refetch on next access). Returns ``(live, slots, idxs)`` — the
+        subset that was owned when it died, with each page's owning slot
+        and page index, so the scheduler can re-place contract pages."""
+        pages = np.asarray(pages, np.int32).reshape(-1)
+        pages = np.unique(pages[pages >= 0])
+        pages = pages[~self.dead[pages]]
+        if len(pages) == 0:
+            e = np.empty(0, np.int32)
+            return e, e, e
+        self.dead[pages] = True
+        self.retired += len(pages)
+        for s in self._stacks.values():
+            keep = s.buf[:s.top][~self.dead[s.buf[:s.top]]]
+            s.buf[:len(keep)] = keep
+            s.top = len(keep)
+        live = pages[self.owner[pages] >= 0]
+        slots = self.owner[live].copy()
+        idxs = self.owner_idx[live].copy()
+        self.page_of[slots, idxs] = -1
+        self.owner[live] = -1
+        self.owner_idx[live] = -1
+        self.pinned[live] = False
+        self.last_access[pages] = _NEVER
+        return live, slots, idxs
+
     def _free(self, pages: np.ndarray) -> None:
+        pages = pages[~self.dead[pages]]   # retired frames never return
         if len(pages) == 0:
             return
         self.owner[pages] = -1
@@ -135,23 +177,34 @@ class PagedKVMap:
         if len(slow):
             self._stacks[SLOW].push(slow)
 
-    def evictable(self, step: int) -> int:
-        """Pages eviction could reclaim right now: allocated, unpinned,
-        and not touched this step."""
-        return int(((self.owner >= 0) & ~self.pinned
-                    & (self.last_access < step)).sum())
+    def _evict_cand(self, step: int,
+                    protected: np.ndarray | None) -> np.ndarray:
+        cand = (self.owner >= 0) & ~self.pinned & (self.last_access < step)
+        if protected is not None and len(protected):
+            cand[protected] = False
+        return cand
 
-    def maybe_evict(self, step: int, extra_needed: int = 0) -> np.ndarray:
+    def evictable(self, step: int,
+                  protected: np.ndarray | None = None) -> int:
+        """Pages eviction could reclaim right now: allocated, unpinned,
+        not touched this step, and not in the ``protected`` set."""
+        return int(self._evict_cand(step, protected).sum())
+
+    def maybe_evict(self, step: int, extra_needed: int = 0,
+                    protected: np.ndarray | None = None) -> np.ndarray:
         """Evict cold pages when free pages dip under the low watermark
         (plus any immediately-needed allocation). Victims are the oldest
-        unpinned allocated pages not touched this step; eviction stops at
-        the high watermark or when candidates run out. Returns the
-        evicted pages (their owners' ``page_of`` entries become -1)."""
+        unpinned allocated pages not touched this step and not in
+        ``protected`` (pages referenced by built-but-undispatched
+        requests — evicting one would recycle a page id an already-built
+        trace still names); eviction stops at the high watermark or when
+        candidates run out. Returns the evicted pages (their owners'
+        ``page_of`` entries become -1)."""
         want_free = self.low_mark + extra_needed
         if self.free_total >= want_free:
             return np.empty(0, np.int32)
         target = max(self.high_mark + extra_needed - self.free_total, 0)
-        cand = (self.owner >= 0) & ~self.pinned & (self.last_access < step)
+        cand = self._evict_cand(step, protected)
         n_cand = int(cand.sum())
         k = min(target, n_cand)
         if k == 0:

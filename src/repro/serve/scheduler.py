@@ -30,6 +30,19 @@ Design rules that make it scale to 100k+ live sequences on one host:
   widths, so the FLAGS lifecycle of a variable-size admission batch
   reuses one compiled program and never syncs the host.
 
+Graceful degradation under faults: when a :class:`~repro.core.faults.
+FaultPlan` rides along (``ServeConfig.faults``, threaded into every
+dispatch — event chunk indices are absolute, so one plan spans the whole
+run), harvest feeds recovery. Pages the emulator retired (the tombstone
+parked on the dead frame and its rescued swap partner — both
+conservatively dropped) leave circulation via ``PagedKVMap.
+retire_pages``; dead *contract* pages are re-placed and re-stamped
+immediately; transiently-faulted KV pages are invalidated so their
+owners refetch. Contracts stranded off the fast tier (admission spills
+or post-death re-placements) sit in a renegotiation queue and re-pin to
+DRAM as fast pages free, so a retirement burst dents the pinned
+fast-hit rate only transiently.
+
 Latency accounting: each sequence's end-to-end latency is the emulated
 span from its first prefill request issuing to its last decode request
 returning (``returns - latency`` of the first request vs ``returns`` of
@@ -76,6 +89,7 @@ class ServeConfig:
     slo_latency_us: float = 100_000.0     # per-sequence latency SLO
     pinned_slo: float = 0.90              # pinned fast-hit-rate SLO
     record_traces: bool = False           # keep host copies for replay tests
+    faults: object = None                 # FaultPlan injected every dispatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +115,9 @@ class ServeReport:
     live_seqs_high_water: int
     compile_count: int
     per_bucket: dict             # size -> dispatches/requests/service stats
+    frames_retired: int = 0      # pages killed by endurance retirement
+    fault_refetches: int = 0     # refetches forced by faults/retirement
+    renegotiations: int = 0      # contracts re-pinned to the fast tier
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -162,11 +179,11 @@ class _SlotStack:
 
 
 class _Inflight:
-    __slots__ = ("outs", "rid", "pinned", "n_valid", "size")
+    __slots__ = ("outs", "rid", "pinned", "pages", "n_valid", "size")
 
-    def __init__(self, outs, rid, pinned, n_valid, size):
+    def __init__(self, outs, rid, pinned, pages, n_valid, size):
         self.outs, self.rid, self.pinned = outs, rid, pinned
-        self.n_valid, self.size = n_valid, size
+        self.pages, self.n_valid, self.size = pages, n_valid, size
 
 
 class ContinuousBatchingScheduler:
@@ -197,6 +214,10 @@ class ContinuousBatchingScheduler:
         self._pending = _ReqBuf()
         self._inflight: collections.deque[_Inflight] = collections.deque()
         self._release_q: collections.deque = collections.deque()
+        # Contracts pinned off the fast tier (spilled at admission, or
+        # re-placed after a frame death landed them slow): (slot, idx,
+        # rid), re-pinned to DRAM as fast pages free up.
+        self._reneg: collections.deque = collections.deque()
         self._stamp_width = cfg.max_admit_per_step * cfg.pin_pages_per_seq
         self._rr = 0                  # round-robin service pointer
         self._step_no = 0
@@ -205,6 +226,8 @@ class ContinuousBatchingScheduler:
         self._n_decoding = 0          # live slots with decode work left
         self._n_occupied = 0
         self.refetches = 0
+        self.fault_refetches = 0
+        self.renegotiations = 0
         self._buckets_stats: dict[int, dict] = {}
         self.dispatch_log: list[tuple[int, int]] = []
         self.inflight_high_water = 0
@@ -252,7 +275,8 @@ class ContinuousBatchingScheduler:
             z = jnp.zeros(s, jnp.int32)
             tr = Trace(page=z, offset=z, is_write=jnp.zeros(s, bool),
                        size=jnp.full(s, _LINE, jnp.int32))
-            st = self.engine.run(tr, state=st).state
+            st = self.engine.run(tr, state=st,
+                                 faults=self.cfg.faults).state
         if self.cfg.pin_pages_per_seq:
             w = self._stamp_width
             st = stamp_pin_pages(st, np.zeros(0, np.int32), width=w)
@@ -263,6 +287,7 @@ class ContinuousBatchingScheduler:
         """One scheduling step: decode service, admission, dispatch.
         Returns the number of memory requests built."""
         self._step_no += 1
+        self._renegotiate_contracts()
         parts: list[dict] = []
         done = self._decode(parts)
         self._admit(parts)
@@ -321,6 +346,106 @@ class ContinuousBatchingScheduler:
         """Valid memory requests dispatched so far."""
         return self._dispatched
 
+    # -- fault recovery -------------------------------------------------
+    def _protected_pages(self) -> np.ndarray:
+        """Pages referenced by built-but-undispatched requests. They must
+        not be evicted, freed, or renegotiated away: the pending trace
+        already names them, and recycling a named page would hand another
+        sequence's data the same address."""
+        parts = [p["page"] for p in self._pending._parts]
+        if not parts:
+            return np.empty(0, np.int32)
+        return np.concatenate(parts)
+
+    def _renegotiate_contracts(self) -> None:
+        """Re-pin contracts stranded off the fast tier (§III-G
+        renegotiation): whenever fast pages free up, the oldest stranded
+        contract migrates onto one — old page released and freed, new
+        page stamped — so a burst of spills or frame deaths degrades the
+        pinned fast-hit rate only transiently."""
+        if not self._reneg:
+            return
+        kv = self.kv
+        nf = self.engine.cfg.n_fast_pages
+        w = self._stamp_width
+        prot = self._protected_pages()
+        deferred = []
+        while self._reneg and len(kv._stacks[FAST]):
+            slot, idx, rid = self._reneg.popleft()
+            if self._slot_rid[slot] != rid:
+                continue                 # sequence finished; moot
+            old = int(kv.page_of[slot, idx])
+            if old < 0 or old < nf:
+                continue                 # refetch pending, or already fast
+            if len(prot) and old in prot:
+                deferred.append((slot, idx, rid))
+                continue                 # a pending request names it
+            fresh = kv.alloc(1, hint=FAST)
+            if self.cfg.pin_pages_per_seq:
+                self.carry = release_pin_pages(
+                    self.carry, np.array([old], np.int32), width=w)
+            kv.page_of[slot, idx] = -1
+            kv._free(np.array([old], np.int32))
+            kv.assign(np.array([slot]), np.array([idx], np.int32), fresh,
+                      self._step_no)
+            if self.cfg.pin_pages_per_seq:
+                self.carry = stamp_pin_pages(self.carry, fresh, width=w)
+            self.renegotiations += 1
+        self._reneg.extendleft(reversed(deferred))
+
+    def _replace_contracts(self, slots: np.ndarray,
+                           idxs: np.ndarray) -> None:
+        """Re-place contract pages whose frames died: allocate fresh
+        pages (fast-tier hint), stamp new pins, and queue any slow
+        spills for renegotiation. The refetched contents count as
+        fault refetches."""
+        k = len(slots)
+        if k == 0:
+            return
+        self.kv.maybe_evict(self._step_no, k,
+                            protected=self._protected_pages())
+        fresh = self.kv.alloc(k, hint=FAST)
+        self.kv.assign(slots, idxs, fresh, self._step_no)
+        if self.cfg.pin_pages_per_seq:
+            self.carry = stamp_pin_pages(self.carry, fresh,
+                                         width=self._stamp_width)
+        nf = self.engine.cfg.n_fast_pages
+        for s, i in zip(slots[fresh >= nf], idxs[fresh >= nf]):
+            self._reneg.append((int(s), int(i), int(self._slot_rid[s])))
+        self.fault_refetches += k
+
+    def _recover_faults(self, rec: _Inflight) -> None:
+        """Serving-level graceful degradation: retire pages the emulator
+        killed this dispatch (the tombstone parked on the dead frame and
+        its rescued swap partner — both conservatively dropped, ~2 pages
+        per death), re-place dead contract pages immediately, and
+        invalidate transiently-faulted KV pages so their owners refetch.
+        """
+        rp = np.asarray(rec.outs["retired_page"]).reshape(-1)
+        tb = np.asarray(rec.outs["tombstone"]).reshape(-1)
+        dead = np.concatenate([rp[rp >= 0], tb[tb >= 0]])
+        if len(dead):
+            live, slots, idxs = self.kv.retire_pages(dead)
+            contract = idxs < self.cfg.pin_pages_per_seq
+            self._replace_contracts(slots[contract], idxs[contract])
+            # Non-contract pages refetch lazily on their next access.
+        faulted = np.asarray(rec.outs["faulted"]).reshape(-1)[:rec.n_valid]
+        if faulted.any():
+            fp = np.unique(rec.pages[faulted])
+            fp = fp[fp >= 0]
+            # Contract pages refill in place (they are pinned to stay
+            # put); dead/unowned pages are already handled above.
+            fp = fp[~self.kv.dead[fp] & (self.kv.owner[fp] >= 0)
+                    & ~self.kv.pinned[fp]]
+            prot = self._protected_pages()
+            if len(prot):
+                fp = fp[~np.isin(fp, prot)]
+            if len(fp):
+                self.kv.page_of[self.kv.owner[fp],
+                                self.kv.owner_idx[fp]] = -1
+                self.kv._free(fp)
+                self.fault_refetches += len(fp)
+
     # -- decode service -------------------------------------------------
     def _decode(self, parts: list[dict]) -> np.ndarray:
         cfg = self.cfg
@@ -351,7 +476,8 @@ class ContinuousBatchingScheduler:
         need_new = (self._slot_tokens[sv] % cfg.positions_per_page == 0) \
             & (pages_sv < cfg.max_pages_per_seq)
         n_missing, n_new = int(missing.sum()), int(need_new.sum())
-        self.kv.maybe_evict(self._step_no, n_missing + n_new)
+        self.kv.maybe_evict(self._step_no, n_missing + n_new,
+                            protected=self._protected_pages())
         if n_missing:                       # refetch evicted window pages
             r, c = np.nonzero(missing)
             fresh = self.kv.alloc(n_missing, hint=SLOW)
@@ -399,7 +525,9 @@ class ContinuousBatchingScheduler:
         # free-plus-evictable pages, with one decode page of headroom, so
         # eviction pressure comes from decode churn rather than a
         # pathological admission burst.
-        budget = self.kv.free_total + self.kv.evictable(self._step_no)
+        protected = self._protected_pages()
+        budget = self.kv.free_total + self.kv.evictable(self._step_no,
+                                                        protected)
         k = int(np.searchsorted(np.cumsum(plen + 1), budget, side="right"))
         if k == 0:
             if self._n_occupied == 0:
@@ -414,7 +542,7 @@ class ContinuousBatchingScheduler:
         self._q_head += k
 
         total = int(plen.sum())
-        self.kv.maybe_evict(self._step_no, total)
+        self.kv.maybe_evict(self._step_no, total, protected=protected)
         slot_rep = np.repeat(slots, plen)
         starts = np.cumsum(plen) - plen
         idx = np.arange(total, dtype=np.int32) - np.repeat(starts, plen)
@@ -428,9 +556,20 @@ class ContinuousBatchingScheduler:
         self.kv.assign(slot_rep, idx, pages, self._step_no)
 
         if cfg.pin_pages_per_seq:
-            pin_pages = pages[idx < cfg.pin_pages_per_seq]
+            pin_pages = pages[pin_mask]
             self.carry = stamp_pin_pages(self.carry, pin_pages,
                                          width=self._stamp_width)
+            # Contracts whose fast-tier hint spilled slow renegotiate
+            # back onto DRAM as fast pages free up.
+            nf = self.engine.cfg.n_fast_pages
+            spill = pin_pages >= nf
+            if spill.any():
+                s_sp = slot_rep[pin_mask][spill]
+                i_sp = idx[pin_mask][spill]
+                r_sp = np.repeat(rids, plen)[pin_mask][spill]
+                self._reneg.extend(
+                    (int(s), int(i), int(r))
+                    for s, i, r in zip(s_sp, i_sp, r_sp))
 
         ppw = cfg.prefill_writes_per_page
         pref_pages = np.repeat(pages, ppw)
@@ -488,10 +627,12 @@ class ContinuousBatchingScheduler:
                       is_write=jnp.asarray(batch["is_write"]),
                       size=jnp.asarray(batch["size"]))
         valid = None if n_valid == size else jnp.arange(size) < n_valid
-        state, outs = self.engine.run(trace, state=self.carry, valid=valid)
+        state, outs = self.engine.run(trace, state=self.carry, valid=valid,
+                                      faults=self.cfg.faults)
         self.carry = state
         self._inflight.append(_Inflight(outs, batch["rid"][:n_valid],
                                         batch["pinned"][:n_valid],
+                                        batch["page"][:n_valid],
                                         n_valid, size))
         self.inflight_high_water = max(self.inflight_high_water,
                                        len(self._inflight))
@@ -537,6 +678,7 @@ class ContinuousBatchingScheduler:
         b["service_lat_max"] = max(b["service_lat_max"], float(lat.max()))
         b["pinned_accesses"] += int(pin.sum())
         b["pinned_fast_hits"] += int((pin & (dev == FAST)).sum())
+        self._recover_faults(rec)
         if self.cfg.record_traces:
             self.outs_log.append(
                 {k: np.asarray(v)[:n] for k, v in rec.outs.items()})
@@ -583,4 +725,7 @@ class ContinuousBatchingScheduler:
             inflight_high_water=self.inflight_high_water,
             live_seqs_high_water=self.live_seqs_high_water,
             compile_count=self.engine.compile_count,
-            per_bucket=per_bucket)
+            per_bucket=per_bucket,
+            frames_retired=self.kv.retired,
+            fault_refetches=self.fault_refetches,
+            renegotiations=self.renegotiations)

@@ -60,6 +60,8 @@ class SweepResult:
         held = np.asarray(c.reorder_held)
         energy = np.asarray(c.energy_pj)
         faults = np.asarray(c.poison_faults)
+        retired = np.asarray(c.frames_retired)
+        injected = np.asarray(c.transient_faults)
         clock = np.asarray(self.states.clock)
         swaps = np.asarray(self.states.dma.swaps_done)
         wear = np.asarray(table_lib.wear(self.states.table))
@@ -81,6 +83,8 @@ class SweepResult:
                     "nvm_total_writes": int(wear[i].sum()),
                     "reorder_held": int(held[i]),
                     "poison_faults": int(faults[i]),
+                    "frames_retired": int(retired[i]),
+                    "transient_faults": int(injected[i]),
                     "max_latency_cyc": int(max_lat[i]),
                     "energy_mJ": float(energy[i]) / 1e9,
                     "emulated_ms": int(clock[i]) / 1e6,

@@ -35,6 +35,7 @@ RUNTIME_FIELDS = frozenset(
         "write_weight",
         "wear_slack",
         "pin_fast_fraction",
+        "endurance_budget",
         "power_pj_per_bit_fast",
         "power_pj_per_bit_slow_read",
         "power_pj_per_bit_slow_write",

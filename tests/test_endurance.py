@@ -1,0 +1,577 @@
+"""Endurance-driven frame retirement + fault injection (robustness PR).
+
+Three layers of guarantees:
+
+* **Disabled path is bitwise-frozen**: with ``endurance_budget=0`` and
+  no ``FaultPlan``, every chunk_step_kernel x bank_resolver x donation
+  combo (and the sharded sweep) reproduces digests captured on the tree
+  *before* the retirement subsystem existed — the subsystem is free when
+  off.
+* **Retirement respects the table contract**: with a budget (or injected
+  frame deaths) the packed-table invariants hold at every chunk
+  boundary, pinned pages are never on POISONED frames, and RETIRED
+  tombstones are permanent.
+* **The serving layer degrades gracefully**: dead pages leave the
+  ``PagedKVMap`` forever, dead contract pages re-place immediately, and
+  stranded contracts renegotiate back onto the fast tier.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_trace_arrays
+from repro import Engine
+from repro.core import (FaultPlan, HybridAllocator, Trace, check_table,
+                        init_state, pad_plan, pad_trace, seeded_plan,
+                        small_platform, stack_plans)
+from repro.core import table as table_lib
+from repro.core.faults import NEVER
+from repro.serve.kv import PagedKVMap
+from repro.serve.scheduler import ContinuousBatchingScheduler, ServeConfig
+from repro.serve.contracts import stamp_pin_pages
+from repro.sweep import SweepSpec
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# Counter fields that existed before this PR — the goldens hash exactly
+# these (``frames_retired``/``transient_faults`` were added with the
+# subsystem and are structurally new, not a behavior change).
+_OLD_FIELDS = ("reads_fast", "writes_fast", "reads_slow", "writes_slow",
+               "bytes_read_fast", "bytes_write_fast", "bytes_read_slow",
+               "bytes_write_slow", "sum_read_latency", "n_reads",
+               "max_latency", "reorder_held", "energy_pj", "poison_faults")
+
+# sha256[:16] digests captured on the pre-endurance tree (same scenario,
+# same hash recipe). Within a policy every kernel/resolver/donate combo
+# agreed bitwise, so one digest per policy freezes all eight.
+_GOLDEN = {
+    "hotness": "215ccbe438b786ef",
+    "static": "68e0c1d46b0ddd6a",
+    "stream": "215ccbe438b786ef",
+    "write_bias": "215ccbe438b786ef",
+    "hotness_global": "cfc30b7e8553cbe3",
+}
+_GOLDEN_SWEEP = "22dd7d03165f7c23"
+_GOLDEN_SWEEP_CONT = "a2dc85fb841f5986"
+
+_POLICIES = sorted(_GOLDEN)
+_DEAD = table_lib.POISONED | table_lib.RETIRED
+
+
+def _adversarial_state(cfg):
+    """Pins, a pre-poisoned observability page, and a mid-flight swap —
+    the state the goldens were captured against."""
+    state = init_state(cfg, cfg.runtime())
+    table = state.table
+    table = table_lib.set_flags(table, [0, 1], table_lib.PIN_FAST)
+    table = table_lib.set_flags(table, [cfg.n_fast_pages + 1],
+                                table_lib.PIN_SLOW)
+    table = table_lib.set_flags(table, [cfg.n_fast_pages + 3],
+                                table_lib.POISONED)
+    state = state._replace(table=table)
+    a = jnp.int32(cfg.n_fast_pages + 2)
+    b = jnp.int32(cfg.n_fast_pages - 1)
+    return state._replace(dma=state.dma._replace(
+        active=jnp.int32(1), page_a=a, page_b=b, start=jnp.int32(0)))
+
+
+def _swap_pair_trace(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    page, off, w, sz = make_trace_arrays(cfg, n, rng, hot_fraction=0.4)
+    hit = rng.random(n) < 0.5
+    pair = np.where(rng.random(n) < 0.5, cfg.n_fast_pages + 2,
+                    cfg.n_fast_pages - 1).astype(np.int32)
+    page = np.where(hit, pair, page).astype(np.int32)
+    off = (rng.integers(0, cfg.page_size // 64, n) * 64).astype(np.int32)
+    return Trace(jnp.asarray(page), jnp.asarray(off), jnp.asarray(w),
+                 jnp.asarray(sz))
+
+
+def _digest_run(res):
+    h = hashlib.sha256()
+    for k in ("returns", "device", "latency"):
+        h.update(np.ascontiguousarray(np.asarray(res.outs[k])).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(res.state.table)).tobytes())
+    h.update(np.ascontiguousarray(
+        np.asarray(res.state.bank_free)).tobytes())
+    for f in ("clock", "clock_ptr", "chunk_idx", "link_free_rx",
+              "link_free_tx", "last_return"):
+        h.update(str(int(getattr(res.state, f))).encode())
+    for f in ("active", "page_a", "page_b", "start", "swaps_done"):
+        h.update(str(int(getattr(res.state.dma, f))).encode())
+    for f in _OLD_FIELDS:
+        h.update(f.encode())
+        h.update(np.asarray(res.state.counters._asdict()[f]).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _digest_sweep(result):
+    h = hashlib.sha256()
+    for k in sorted(result.outs):
+        h.update(np.ascontiguousarray(np.asarray(result.outs[k])).tobytes())
+    h.update(np.ascontiguousarray(
+        np.asarray(result.states.table)).tobytes())
+    for f in _OLD_FIELDS:
+        h.update(f.encode())
+        h.update(np.ascontiguousarray(
+            np.asarray(result.states.counters._asdict()[f])).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _golden_base(policy):
+    return small_platform(chunk=8, hot_threshold=2, decay_every=8,
+                          policy=policy)
+
+
+# ---------------------------------------------------------------------
+# disabled path == pre-endurance goldens, bitwise
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("policy", _POLICIES)
+def test_disabled_path_matches_pre_endurance_goldens(policy):
+    """endurance_budget=0 + no FaultPlan reproduces the pre-PR digests on
+    every kernel x resolver x donation combo (two-leg run against the
+    adversarial state, exactly the capture scenario)."""
+    base = _golden_base(policy)
+    t = _swap_pair_trace(base, 96)
+    for kernel in ("off", "on"):
+        for resolver in ("dense", "segmented"):
+            cfg = base.with_(chunk_step_kernel=kernel,
+                             bank_resolver=resolver)
+            padded, valid = pad_trace(cfg, t)
+            engine = Engine(cfg)
+            for donate in (False, True):
+                res = engine.run(padded, valid=valid,
+                                 state=_adversarial_state(cfg),
+                                 donate=False)
+                res = engine.run(padded, valid=valid, state=res.state,
+                                 donate=donate)
+                key = f"{kernel}/{resolver}/donate={donate}"
+                assert _digest_run(res) == _GOLDEN[policy], \
+                    f"{policy}/{key} diverged from the pre-endurance golden"
+
+
+def test_empty_plan_matches_golden_too():
+    """An explicit ``FaultPlan.empty()`` is the same disabled path: the
+    sentinel rows never fire, bitwise."""
+    base = _golden_base("hotness")
+    t = _swap_pair_trace(base, 96)
+    for kernel in ("off", "on"):
+        cfg = base.with_(chunk_step_kernel=kernel)
+        padded, valid = pad_trace(cfg, t)
+        engine = Engine(cfg)
+        res = engine.run(padded, valid=valid, state=_adversarial_state(cfg),
+                         donate=False, faults=FaultPlan.empty())
+        res = engine.run(padded, valid=valid, state=res.state,
+                         faults=FaultPlan.empty())
+        assert _digest_run(res) == _GOLDEN["hotness"]
+
+
+def test_disabled_sweep_matches_golden():
+    base = small_platform(chunk=8, hot_threshold=2, decay_every=8)
+    spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram"),
+                     fast_fractions=(0.125,), policies=("hotness", "static"),
+                     link_lats=(40,))
+    rng = np.random.default_rng(11)
+    t = Trace(*(jnp.asarray(x)
+                for x in make_trace_arrays(base, 128, rng, hot_fraction=0.3)))
+    engine = Engine(base)
+    result = engine.sweep(spec, t)
+    assert _digest_sweep(result) == _GOLDEN_SWEEP
+    cont = engine.continue_sweep(result, t, donate=False)
+    assert _digest_sweep(cont) == _GOLDEN_SWEEP_CONT
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import hashlib, sys
+import jax.numpy as jnp
+import numpy as np
+from conftest import make_trace_arrays
+from repro import Engine
+from repro.core import Trace, small_platform
+from repro.sweep import SweepSpec
+
+OLD = ("reads_fast", "writes_fast", "reads_slow", "writes_slow",
+       "bytes_read_fast", "bytes_write_fast", "bytes_read_slow",
+       "bytes_write_slow", "sum_read_latency", "n_reads", "max_latency",
+       "reorder_held", "energy_pj", "poison_faults")
+
+base = small_platform(chunk=8, hot_threshold=2, decay_every=8)
+spec = SweepSpec(base=base, technologies=("3dxpoint", "stt-ram"),
+                 fast_fractions=(0.125,), policies=("hotness", "static"),
+                 link_lats=(40,))
+rng = np.random.default_rng(11)
+t = Trace(*(jnp.asarray(x)
+            for x in make_trace_arrays(base, 128, rng, hot_fraction=0.3)))
+result = Engine(base).sweep(spec, t, mesh="auto")
+h = hashlib.sha256()
+for k in sorted(result.outs):
+    h.update(np.ascontiguousarray(np.asarray(result.outs[k])).tobytes())
+h.update(np.ascontiguousarray(np.asarray(result.states.table)).tobytes())
+for f in OLD:
+    h.update(f.encode())
+    h.update(np.ascontiguousarray(
+        np.asarray(result.states.counters._asdict()[f])).tobytes())
+print(h.hexdigest()[:16])
+"""
+
+
+def test_disabled_sweep_sharded_matches_golden():
+    """The 2-device sharded sweep reproduces the unsharded golden —
+    sharding never changes the numbers, endurance plumbing included."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    here = os.path.dirname(__file__)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here,
+         env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                       capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.strip().splitlines()[-1] == _GOLDEN_SWEEP
+
+
+if HAVE_HYPOTHESIS:
+    _ENGINES = {}
+
+    def _cached_engine(kernel):
+        if kernel not in _ENGINES:
+            cfg = _golden_base("hotness").with_(chunk_step_kernel=kernel)
+            _ENGINES[kernel] = Engine(cfg)
+        return _ENGINES[kernel]
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), kernel=st.sampled_from(["off", "on"]))
+    def test_empty_plan_is_bitwise_free(seed, kernel):
+        """Property: for arbitrary traces, running with
+        ``FaultPlan.empty()`` is bitwise-identical to running with no
+        plan at all — outputs, table, counters, and the new registers."""
+        engine = _cached_engine(kernel)
+        cfg = engine.cfg
+        t = _swap_pair_trace(cfg, 64, seed=seed)
+        padded, valid = pad_trace(cfg, t)
+        a = engine.run(padded, valid=valid, donate=False)
+        b = engine.run(padded, valid=valid, donate=False,
+                       faults=FaultPlan.empty())
+        for k in a.outs:
+            np.testing.assert_array_equal(np.asarray(a.outs[k]),
+                                          np.asarray(b.outs[k]), err_msg=k)
+        for f in a.state._fields:
+            np.testing.assert_array_equal(
+                np.asarray(jnp.asarray(getattr(a.state, f))
+                           if not isinstance(getattr(a.state, f), tuple)
+                           else 0),
+                np.asarray(jnp.asarray(getattr(b.state, f))
+                           if not isinstance(getattr(b.state, f), tuple)
+                           else 0), err_msg=f)
+        np.testing.assert_array_equal(
+            np.asarray(a.state.counters), np.asarray(b.state.counters))
+        np.testing.assert_array_equal(
+            np.asarray(a.state.dma), np.asarray(b.state.dma))
+
+
+# ---------------------------------------------------------------------
+# retirement semantics
+# ---------------------------------------------------------------------
+def _write_burst_trace(cfg, n, lo, hi, seed=0):
+    """Writes hammering slow pages [lo, hi) — drives WEAR up fast."""
+    rng = np.random.default_rng(seed)
+    page = rng.integers(lo, hi, n).astype(np.int32)
+    off = (rng.integers(0, cfg.page_size // 64, n) * 64).astype(np.int32)
+    return Trace(jnp.asarray(page), jnp.asarray(off),
+                 jnp.ones(n, bool), jnp.full(n, 64, jnp.int32))
+
+
+@pytest.mark.parametrize("kernel", ["off", "on"])
+def test_budget_retirement_invariants_every_boundary(kernel):
+    """With a small endurance budget, frames retire; the packed-table
+    invariants (RETIRED => POISONED, never PINNED & POISONED, bijection)
+    hold after every chunk boundary, and retirement monotonically
+    accumulates permanent tombstones."""
+    cfg = small_platform(chunk=8, policy="hotness", decay_every=8,
+                         endurance_budget=6,
+                         chunk_step_kernel=kernel)
+    engine = Engine(cfg)
+    state = engine.init_state()
+    nf, n = cfg.n_fast_pages, cfg.n_pages
+    rng = np.random.default_rng(1)
+    seen_retired = set()
+    for i in range(40):        # one chunk per run => check every boundary
+        t = _write_burst_trace(cfg, cfg.chunk, nf, n, seed=i)
+        state, outs = engine.run(t, state=state)
+        table = np.asarray(state.table)
+        check_table(cfg, table)
+        flags = table[:, table_lib.FLAGS]
+        assert not (((flags & table_lib.PINNED) != 0)
+                    & ((flags & table_lib.POISONED) != 0)).any()
+        retired = set(np.flatnonzero((flags & table_lib.RETIRED) != 0)
+                      .tolist())
+        assert seen_retired <= retired, "a tombstone was resurrected"
+        seen_retired = retired
+    assert int(state.counters.frames_retired) > 0, \
+        "budget=6 under a write hammer never retired a frame"
+    assert len(seen_retired) > 0
+    # Retired pages are tombstones on dead frames: all POISONED too.
+    flags = np.asarray(state.table)[:, table_lib.FLAGS]
+    assert ((flags[sorted(seen_retired)] & table_lib.POISONED) != 0).all()
+
+
+def test_scan_and_kernel_agree_with_retirement_active():
+    """The fused kernel and the scan path stay bitwise-identical with
+    the retirement machinery firing (budget + injected deaths)."""
+    base = small_platform(chunk=8, policy="hotness", decay_every=8,
+                          endurance_budget=8)
+    t = _write_burst_trace(base, 96, base.n_fast_pages, base.n_pages)
+    plan = FaultPlan.of(deaths=[(2, 3), (5, base.n_fast_pages + 7)],
+                        transient=[(1, base.n_fast_pages + 2)])
+    digests = []
+    for kernel in ("off", "on"):
+        cfg = base.with_(chunk_step_kernel=kernel)
+        engine = Engine(cfg)
+        res = engine.run(t, donate=False, faults=plan)
+        digests.append(_digest_run(res))
+        assert int(res.state.counters.frames_retired) > 0
+    assert digests[0] == digests[1]
+
+
+def test_adversarial_midswap_death_poison_travels():
+    """Kill the frame under a page that is a live DMA swap endpoint: the
+    rescue rides the in-flight swap — at commit the data lands on the
+    healthy frame, the counterpart becomes the tombstone, and the table
+    invariants never break."""
+    cfg = small_platform(chunk=8, policy="hotness", decay_every=8)
+    engine = Engine(cfg)
+    state = engine.init_state()
+    a = cfg.n_fast_pages + 2            # slow-resident swap member
+    b = cfg.n_fast_pages - 1            # fast-resident counterpart
+    state = state._replace(dma=state.dma._replace(
+        active=jnp.int32(1), page_a=jnp.int32(a), page_b=jnp.int32(b),
+        start=jnp.int32(0)))
+    plan = FaultPlan.of(deaths=[(0, a)])
+    t = _swap_pair_trace(cfg, 64, seed=3)
+    state, outs = engine.run(t, state=state, faults=plan)
+    table = np.asarray(state.table)
+    check_table(cfg, table)
+    assert int(state.counters.frames_retired) == 1
+    flags = table[:, table_lib.FLAGS]
+    dead = np.flatnonzero((flags & table_lib.RETIRED) != 0)
+    assert len(dead) == 1
+    # The rescued page (the dying swap member) is clean again; its
+    # counterpart was sacrificed as the tombstone.
+    assert (flags[a] & _DEAD) == 0 or a in dead
+    tombs = np.asarray(outs["tombstone"])
+    assert (tombs >= 0).any()
+    assert int(tombs.max()) == int(dead[0])
+
+
+def test_min_wear_register_tracks_global_floor():
+    """The carried min-wear register re-scrubs on decay boundaries and
+    stays a monotone lower bound of the true slow-tier wear floor."""
+    cfg = small_platform(chunk=8, policy="wear_level", decay_every=8,
+                         wear_slack=2)
+    engine = Engine(cfg)
+    state = engine.init_state()
+    for i in range(6):
+        t = _write_burst_trace(cfg, 32, cfg.n_fast_pages, cfg.n_pages,
+                               seed=i)
+        state, _ = engine.run(t, state=state)
+    wear = np.asarray(table_lib.wear(state.table))
+    n_slow = cfg.n_pages - cfg.n_fast_pages
+    true_floor = int(wear[:n_slow].min())
+    assert 0 <= int(state.min_wear) <= true_floor
+
+
+# ---------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------
+def test_seeded_plan_deterministic_and_paddable():
+    p1 = seeded_plan(7, pages=np.arange(64), n_chunks=100, n_deaths=4,
+                     n_transient=6)
+    p2 = seeded_plan(7, pages=np.arange(64), n_chunks=100, n_deaths=4,
+                     n_transient=6)
+    np.testing.assert_array_equal(np.asarray(p1.deaths),
+                                  np.asarray(p2.deaths))
+    np.testing.assert_array_equal(np.asarray(p1.transient),
+                                  np.asarray(p2.transient))
+    p3 = seeded_plan(8, pages=np.arange(64), n_chunks=100, n_deaths=4,
+                     n_transient=6)
+    assert not np.array_equal(np.asarray(p1.deaths), np.asarray(p3.deaths))
+    # deaths sorted by chunk; padding preserves events
+    d = np.asarray(p1.deaths)
+    assert (np.diff(d[:, 0]) >= 0).all()
+    padded = pad_plan(p1, 10, 10)
+    assert padded.shape_sig == ((10, 2), (10, 2))
+    np.testing.assert_array_equal(np.asarray(padded.deaths)[:4], d)
+    assert (np.asarray(padded.deaths)[4:, 0] == NEVER).all()
+
+
+def test_stacked_fault_sweep_design_points():
+    """A stacked per-point plan batch sweeps fault scenarios as design
+    points in one compiled program: points with deaths retire frames,
+    the empty point retires none."""
+    base = small_platform(chunk=8, policy="hotness", decay_every=8)
+    spec = SweepSpec(base=base, policies=("hotness", "static"))
+    plans = [
+        pad_plan(FaultPlan.of(deaths=[(1, base.n_fast_pages + 2),
+                                      (4, base.n_fast_pages + 5)]), 4, 4),
+        pad_plan(FaultPlan.empty(), 4, 4),
+    ]
+    faults = stack_plans(plans)
+    rng = np.random.default_rng(5)
+    t = Trace(*(jnp.asarray(x)
+                for x in make_trace_arrays(base, 64, rng)))
+    result = Engine(base).sweep(spec, t, faults=faults)
+    rows = result.rows()
+    assert rows[0]["frames_retired"] > 0
+    assert rows[1]["frames_retired"] == 0
+    for i in range(2):
+        check_table(result.points[i].cfg, np.asarray(result.states.table[i]))
+
+
+# ---------------------------------------------------------------------
+# serving-level degradation
+# ---------------------------------------------------------------------
+def test_allocator_retire_permanent():
+    cfg = small_platform()
+    alloc = HybridAllocator(cfg)
+    h, pages = alloc.alloc(4)
+    alloc.retire(pages[:2])
+    alloc.free(h)
+    free = alloc.free_pages
+    total_free = free[0] + free[1]
+    assert total_free == cfg.n_pages - 2
+    assert alloc.retired_pages == {int(p) for p in pages[:2]}
+    # retired pages are never handed out again
+    _, fresh = alloc.alloc(cfg.n_pages - 2)
+    assert not (set(fresh.tolist()) & alloc.retired_pages)
+
+
+def test_kv_protected_pages_survive_eviction():
+    """Regression (eviction-recency bug): pages named by built-but-
+    undispatched requests must not be evicted, however cold."""
+    cfg = small_platform()
+    kv = PagedKVMap(cfg, max_live_seqs=8, max_pages_per_seq=4,
+                    free_low_frac=1.0, free_high_frac=1.0)  # always evict
+    pages = kv.alloc(6)
+    slots = np.repeat(np.arange(2), 3)
+    idx = np.tile(np.arange(1, 4, dtype=np.int32), 2)  # idx 0 would pin
+    kv.assign(slots, idx, pages, step=1)
+    protected = pages[:3]
+    victims = kv.maybe_evict(step=5, extra_needed=0, protected=protected)
+    assert not (set(victims.tolist()) & set(protected.tolist()))
+    assert set(victims.tolist()) == set(pages[3:].tolist())
+    # unprotected call takes them all
+    kv2 = PagedKVMap(cfg, max_live_seqs=8, max_pages_per_seq=4,
+                     free_low_frac=1.0, free_high_frac=1.0)
+    pages2 = kv2.alloc(6)
+    kv2.assign(slots, idx, pages2, step=1)
+    victims2 = kv2.maybe_evict(step=5)
+    assert set(victims2.tolist()) == set(pages2.tolist())
+
+
+def test_kv_retire_pages_never_return():
+    cfg = small_platform()
+    kv = PagedKVMap(cfg, max_live_seqs=4, max_pages_per_seq=4)
+    pages = kv.alloc(4)
+    kv.assign(np.zeros(4, np.int64), np.arange(4, dtype=np.int32),
+              pages, step=1)
+    free_before = kv.free_total
+    live, slots, idxs = kv.retire_pages(pages[:2])
+    assert set(live.tolist()) == set(pages[:2].tolist())
+    assert (slots == 0).all()
+    assert (kv.page_of[0, idxs] == -1).all()
+    assert kv.retired == 2
+    # dead pages dropped from circulation: freeing them is a no-op, and
+    # nothing ever allocates them again
+    kv._free(pages[:2])
+    assert kv.free_total == free_before
+    got = kv.alloc(kv.free_total)
+    assert not (set(got.tolist()) & set(pages[:2].tolist()))
+    # retiring a free page compacts it out of the stacks
+    free_page = got[-1:]
+    kv._free(got)
+    t0 = kv.free_total
+    kv.retire_pages(free_page)
+    assert kv.free_total == t0 - 1
+
+
+def test_stamp_pin_skips_poisoned_pages():
+    cfg = small_platform()
+    engine = Engine(cfg)
+    state = engine.init_state()
+    sick = cfg.n_fast_pages + 4
+    state = state._replace(table=table_lib.set_flags(
+        state.table, [sick], table_lib.POISONED))
+    state = stamp_pin_pages(state, np.asarray([sick, 0], np.int32))
+    flags = np.asarray(state.table)[:, table_lib.FLAGS]
+    assert (flags[sick] & table_lib.PINNED) == 0, \
+        "stamped a pin onto a dying frame"
+    assert (flags[0] & table_lib.PIN_FAST) != 0
+    check_table(cfg, np.asarray(state.table))
+
+
+def test_serving_recovery_under_faults():
+    """End-to-end seeded-fault serving run: frames retire, recovery
+    re-places contracts, pinned pages are never on poisoned frames, and
+    every sequence still completes."""
+    cfg = small_platform(chunk=8, policy="hotness", decay_every=8)
+    engine = Engine(cfg)
+    plan = seeded_plan(3, pages=np.arange(cfg.n_pages), n_chunks=400,
+                       n_deaths=6, n_transient=12)
+    sched = ContinuousBatchingScheduler(engine, ServeConfig(
+        sorted_batch_sizes=(16, 32, 64), max_live_seqs=32,
+        max_pages_per_seq=4, slo_latency_us=1e9, faults=plan))
+    sched.warmup()
+    warm = engine.compile_count
+    rng = np.random.default_rng(0)
+    sched.submit(rng.integers(1, 4, 40), rng.integers(2, 8, 40))
+    sched.run()
+    rep = sched.report()
+    assert engine.compile_count == warm, "fault plumbing caused recompiles"
+    assert rep.n_sequences == 40
+    assert rep.frames_retired > 0
+    assert rep.slo_attainment == 1.0
+    table = np.asarray(sched.carry.table)
+    check_table(cfg, table)
+    flags = table[:, table_lib.FLAGS]
+    assert not (((flags & table_lib.PINNED) != 0)
+                & ((flags & table_lib.POISONED) != 0)).any()
+    # dead pages left KV circulation for good
+    dead = np.flatnonzero(sched.kv.dead)
+    assert len(dead) == rep.frames_retired
+    assert (sched.kv.owner[dead] == -1).all()
+
+
+def test_contract_renegotiation_repins_to_fast():
+    """Contracts stranded slow (spilled admission) re-pin onto the fast
+    tier as pages free up."""
+    cfg = small_platform(chunk=8, policy="static")
+    engine = Engine(cfg)
+    nf = cfg.n_fast_pages
+    sched = ContinuousBatchingScheduler(engine, ServeConfig(
+        sorted_batch_sizes=(16, 32), max_live_seqs=64,
+        max_pages_per_seq=3, slo_latency_us=1e9))
+    sched.warmup()
+    # Exhaust the fast stack so admission spills every contract slow.
+    hog = sched.kv.alloc(len(sched.kv._stacks[0]), hint=0)
+    sched.submit(np.full(8, 2), np.full(8, 4))
+    sched.step()
+    assert len(sched._reneg) > 0, "no contract spilled despite a full tier"
+    # Free the fast pages; the next steps renegotiate.
+    sched.kv._free(hog)
+    sched.run()
+    rep = sched.report()
+    assert rep.renegotiations > 0
+    assert rep.n_sequences == 8
+    check_table(cfg, np.asarray(sched.carry.table))
