@@ -4,7 +4,7 @@ compiled, vmapped emulation (repro.sweep).
 
 Reports per-point summaries (AMAT, fast-tier hit rate, migrations, NVM
 wear, held responses, energy) plus the executor's compile count: the
-entire grid shares a single ``emulate`` compilation, which is what makes
+entire grid shares a single compiled emulation program, which is what makes
 sweeping cheap enough to be the default workflow.
 
 Runnable standalone for the perf trajectory::

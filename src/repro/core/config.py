@@ -182,7 +182,7 @@ class RuntimeParams(NamedTuple):
     Everything the emulation pipeline reads per design point (technology
     timings, bandwidths, link/issue timing, policy knobs, the fast-tier
     boundary, the policy selector) lives here as a scalar array, so
-    ``emulate`` compiles once per :func:`static_key` and any number of
+    the emulation program compiles once per :func:`static_key` and any number of
     design points run through the same XLA computation — vmapping over a
     stacked ``RuntimeParams`` batch is the sweep engine's core mechanism.
 

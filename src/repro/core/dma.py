@@ -188,12 +188,7 @@ def plan_commit(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
                       jnp.where(chg_a, fb, 0), jnp.where(chg_b, fa, 0),
                       ia, ib])
     k = jnp.repeat(jnp.arange(5, dtype=jnp.int32), 2)
-    lanes = jnp.where(
-        k == 0, table_lib.DEVICE,
-        jnp.where(k == 1, table_lib.FRAME,
-                  jnp.where(k == 2, table_lib.EPOCH,
-                            jnp.where(k == 3, table_lib.WEAR,
-                                      table_lib.FLAGS))))
+    lanes = table_lib.swap_commit_lanes(k)
     delta = jnp.stack([jnp.where(commit_a, db - da, 0),
                        jnp.where(commit_b, da - db, 0),
                        jnp.where(commit_a, fb - fa, 0),
@@ -255,8 +250,8 @@ def maybe_start(dma: DMAState, want: jax.Array, page_a: jax.Array,
     frame."""
     if table is not None:
         veto_bits = table_lib.PINNED | table_lib.RETIRED
-        vetoed = ((table[page_a, table_lib.FLAGS] |
-                   table[page_b, table_lib.FLAGS]) & veto_bits) != 0
+        vetoed = ((table_lib.flags_at(table, page_a) |
+                   table_lib.flags_at(table, page_b)) & veto_bits) != 0
         want = want & ~vetoed
     start_it = (dma.active == 0) & want
     return DMAState(

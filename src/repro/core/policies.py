@@ -165,11 +165,10 @@ def update_hotness(p, table: jax.Array, pages: jax.Array,
     ww = p.write_weight if write_weight is None else write_weight
     w = 1 + (ww - 1) * is_write.astype(jnp.int32)
     w = jnp.where(valid, w, 0)
-    table = table.at[pages, table_lib.HOTNESS].add(w, mode="drop")
+    table = table_lib.add_hotness(table, pages, w)
     return jax.lax.cond(
         do_decay,
-        lambda t: t.at[:, table_lib.HOTNESS].set(
-            t[:, table_lib.HOTNESS] >> p.hotness_decay_shift),
+        lambda t: table_lib.decay_hotness(t, p.hotness_decay_shift),
         lambda t: t, table)
 
 
@@ -241,7 +240,7 @@ def hotness_policy(cfg, params, table, ptr, pages, is_write, valid):
     cand, heat = _chunk_candidate(table, pages, valid)
     victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)
     want = vfound & (heat >= params.hot_threshold) & \
-        (heat > table[victim, table_lib.HOTNESS])
+        (heat > table_lib.hotness_at(table, victim))
     new_ptr = (ptr + skip + want.astype(jnp.int32)) % params.n_fast_pages
     return want, cand, victim, new_ptr
 
@@ -337,7 +336,7 @@ def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid,
     # WEAR is keyed by slow frame: one O(chunk) gather of the candidates'
     # frame rows (the page rows above are the stage-2-style gather every
     # chunk-local policy already pays).
-    frame_wear = table[jnp.where(slow, frm, 0), table_lib.WEAR]
+    frame_wear = table_lib.wear_at(table, jnp.where(slow, frm, 0))
     if min_wear is None:
         wmin = jnp.min(jnp.where(slow, frame_wear, 2 ** 30))
     else:
@@ -346,6 +345,6 @@ def wear_level_policy(cfg, params, table, ptr, pages, is_write, valid,
     cand, cheat = _chunk_candidate(table, pages, valid, extra_mask=fresh)
     victim, vfound, skip = _clock_victim(table, ptr, params.n_fast_pages)
     want = vfound & (cheat >= params.hot_threshold) & \
-        (cheat > table[victim, table_lib.HOTNESS])
+        (cheat > table_lib.hotness_at(table, victim))
     new_ptr = (ptr + skip + want.astype(jnp.int32)) % params.n_fast_pages
     return want, cand, victim, new_ptr

@@ -145,6 +145,61 @@ def is_retired(table: jax.Array) -> jax.Array:
     return (table[..., FLAGS] & RETIRED) != 0
 
 
+def device_at(table: jax.Array, pages) -> jax.Array:
+    """DEVICE lane of ``pages`` as a single-lane gather (no full-row
+    fetch) — the read the stamp/veto paths use."""
+    return table[pages, DEVICE]
+
+
+def hotness_at(table: jax.Array, pages) -> jax.Array:
+    """HOTNESS lane of ``pages`` as a single-lane gather."""
+    return table[pages, HOTNESS]
+
+
+def wear_at(table: jax.Array, frames) -> jax.Array:
+    """WEAR lane of ``frames`` (WEAR is keyed by slow frame) as a
+    single-lane gather."""
+    return table[frames, WEAR]
+
+
+def flags_at(table: jax.Array, pages) -> jax.Array:
+    """FLAGS lane of ``pages`` as a single-lane gather."""
+    return table[pages, FLAGS]
+
+
+def add_hotness(table: jax.Array, pages, w) -> jax.Array:
+    """Scatter-add access weights into the HOTNESS lane (out-of-range
+    pages drop — the sentinel-index convention of the boundary commit)."""
+    return table.at[pages, HOTNESS].add(w, mode="drop")
+
+
+def decay_hotness(table: jax.Array, shift) -> jax.Array:
+    """The aging tick: arithmetic-shift every page's HOTNESS lane."""
+    return table.at[:, HOTNESS].set(table[:, HOTNESS] >> shift)
+
+
+def store_flags(table: jax.Array, idx, values) -> jax.Array:
+    """Store precomputed FLAGS values at rows ``idx`` (out-of-range
+    sentinel rows drop). The traced counterpart of
+    :func:`set_flags`/:func:`clear_flags` for batched stamp programs that
+    compute the new FLAGS words themselves."""
+    return table.at[idx, FLAGS].set(values, mode="drop")
+
+
+def swap_commit_lanes(k: jax.Array) -> jax.Array:
+    """Lane ids of the DMA swap commit's delta pairs, by pair index
+    ``k``: (DEVICE, FRAME, EPOCH, WEAR, FLAGS) — the one place outside
+    this module's accessors where lane numbers route a scatter, kept
+    here so ``dma.plan_commit`` stays lane-layout-agnostic. Traces
+    inside the Pallas chunk-step body (pure ``jnp.where`` chain, no
+    captured device constants)."""
+    return jnp.where(
+        k == 0, DEVICE,
+        jnp.where(k == 1, FRAME,
+                  jnp.where(k == 2, EPOCH,
+                            jnp.where(k == 3, WEAR, FLAGS))))
+
+
 def set_flags(table: jax.Array, pages, bits: int) -> jax.Array:
     """OR ``bits`` into the FLAGS lane of ``pages`` (scenario/middleware
     side — the hot path never writes FLAGS)."""

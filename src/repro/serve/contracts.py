@@ -37,27 +37,27 @@ from repro.core.emulator import EmulatorState
 
 @functools.partial(jax.jit, static_argnames=("n_pages",), donate_argnums=(0,))
 def _stamp(table, active, page_a, page_b, pages, live, *, n_pages):
-    dev = table[jnp.clip(pages, 0, n_pages - 1), table_lib.DEVICE]
+    dev = table_lib.device_at(table, jnp.clip(pages, 0, n_pages - 1))
     in_swap_a = (active != 0) & (pages == page_a)
     in_swap_b = (active != 0) & (pages == page_b)
     dev = jnp.where(in_swap_a, FAST, jnp.where(in_swap_b, SLOW, dev))
     bit = jnp.where(dev == FAST, table_lib.PIN_FAST, table_lib.PIN_SLOW)
-    cur = table[jnp.clip(pages, 0, n_pages - 1), table_lib.FLAGS]
+    cur = table_lib.flags_at(table, jnp.clip(pages, 0, n_pages - 1))
     # Never pin a page whose frame is dying or dead: a pin on a POISONED
     # page would both violate the table invariant and veto its own
     # rescue. The scheduler re-places such contracts on healthy pages.
     healthy = (cur & (table_lib.POISONED | table_lib.RETIRED)) == 0
     bit = jnp.where(live & healthy, bit, 0).astype(jnp.int32)
     idx = jnp.where(live & healthy, pages, n_pages)  # sentinel rows drop
-    return table.at[idx, table_lib.FLAGS].set(cur | bit, mode="drop")
+    return table_lib.store_flags(table, idx, cur | bit)
 
 
 @functools.partial(jax.jit, static_argnames=("n_pages",), donate_argnums=(0,))
 def _release(table, pages, live, *, n_pages):
     idx = jnp.where(live, pages, n_pages)
-    cur = table[jnp.clip(pages, 0, n_pages - 1), table_lib.FLAGS]
-    return table.at[idx, table_lib.FLAGS].set(
-        cur & ~jnp.int32(table_lib.PINNED), mode="drop")
+    cur = table_lib.flags_at(table, jnp.clip(pages, 0, n_pages - 1))
+    return table_lib.store_flags(table, idx,
+                                 cur & ~jnp.int32(table_lib.PINNED))
 
 
 def _pad(pages, width: int):

@@ -4,9 +4,8 @@ Implements exactly the chunk=1 semantics of the JAX emulation pipeline
 (repro.core.emulator), one request at a time in a Python loop — the
 software-simulator methodology the paper compares against. Because the
 semantics match, this module is also the *oracle* for the platform's
-correctness tests: a chunk=1 ``repro.Engine.run`` (and the legacy
-``emulate`` wrapper over it) must be bit-identical to this loop
-(tests/test_emulator_oracle.py, tests/test_engine.py).
+correctness tests: a chunk=1 ``repro.Engine.run`` must be bit-identical
+to this loop (tests/test_emulator_oracle.py, tests/test_engine.py).
 """
 from __future__ import annotations
 

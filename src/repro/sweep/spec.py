@@ -6,7 +6,7 @@ fast-tier share, placement policy, link latency, plus any
 of :class:`DesignPoint`. Every point must agree on the static geometry
 (``config.static_key``): that is what lets the executor stack the
 per-point ``RuntimeParams`` and evaluate the whole grid in one compiled,
-vmapped ``emulate`` call.
+vmapped emulation program (``repro.Engine.sweep``).
 """
 
 from __future__ import annotations

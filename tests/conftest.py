@@ -24,7 +24,7 @@ def make_trace_arrays(cfg, n, rng, hot_fraction=0.4, n_hot=4):
 
 
 def engine_run(cfg, t, params=None, registry=None):
-    """Session-API equivalent of the old ``run_trace`` free function:
+    """Session-API run helper (pad, run at one design point, trim):
     pad, run undonated, return (state, padded outputs, counters summary).
     Shared by the oracle/policy/system tests that predate the Engine."""
     from repro import Engine
