@@ -45,6 +45,7 @@ import numpy as np
 from benchmarks.schema import (add_check_args, bench_payload, check_against,
                                run_check, write_bench_json)
 from repro import Engine
+from repro.analysis import assert_compile_flat
 from repro.core import paper_platform, seeded_plan
 from repro.serve import ContinuousBatchingScheduler, ServeConfig
 
@@ -114,20 +115,18 @@ def run_profile(name: str, verbose: bool = True) -> tuple[dict, dict]:
     t0 = time.time()
     sched.warmup()
     warm_s = time.time() - t0
-    compiles_warm = engine.compile_count
 
     prompt, decode = _workload(prof["n_seqs"], prof["decode_lo"],
                                prof["decode_hi"])
     t0 = time.time()
-    sched.submit(prompt, decode)
-    sched.run()
+    with assert_compile_flat(
+            engine, msg="a dispatch shape escaped the bucket list "
+            f"{prof['serve']['sorted_batch_sizes']}") as cc:
+        sched.submit(prompt, decode)
+        sched.run()
     wall_s = time.time() - t0
     rep = sched.report()
-
-    recompiles = engine.compile_count - compiles_warm
-    assert recompiles == 0, \
-        f"{recompiles} recompiles after warmup — a dispatch shape escaped " \
-        f"the bucket list {prof['serve']['sorted_batch_sizes']}"
+    recompiles = cc.count
     assert rep.live_seqs_high_water >= prof["min_live"], \
         f"only {rep.live_seqs_high_water} concurrent sequences " \
         f"(wanted >= {prof['min_live']})"

@@ -29,6 +29,7 @@ import jax
 from benchmarks.schema import (add_check_args, bench_payload, run_check,
                                write_bench_json)
 from repro import Engine
+from repro.analysis import assert_compile_flat
 from repro.core import paper_platform
 from repro.sweep import SweepSpec, build_points
 from repro.trace import TraceSpec, generate
@@ -72,12 +73,14 @@ def run(verbose=True, n_requests=100_000, sharded=None, out=None):
 
     mesh = "auto" if sharded or len(jax.devices()) > 1 else None
     engine = Engine(points[0].cfg)
-    before = engine.compile_count
     t0 = time.time()
-    res = engine.sweep(points, trace, mesh=mesh)
-    jax.block_until_ready(res.states.clock)
+    # allow=1: the grid's ONE compilation; a second entry raises.
+    with assert_compile_flat(engine, allow=1,
+                             msg="design-space sweep") as cc:
+        res = engine.sweep(points, trace, mesh=mesh)
+        jax.block_until_ready(res.states.clock)
     first_s = time.time() - t0
-    compiles = engine.compile_count - before
+    compiles = cc.count
     assert compiles == 1, f"sweep must compile once, got {compiles}"
 
     t0 = time.time()

@@ -1,0 +1,65 @@
+"""reprolint — repo-specific static analysis for the emulator's contracts.
+
+The conventions this repo runs on (the one-true chunk schedule, lane
+accessors on the packed table, donation aliasing, the traced/static
+split, zero recompiles after warmup) have each been violated and
+hand-fixed at least once. This package turns them into machine-checked
+contracts:
+
+    PYTHONPATH=src python -m repro.analysis --check
+
+runs all passes against the repo and exits non-zero with
+``path:line: [pass] message`` findings. Single passes run with
+``--pass <name>``; fixture/file mode takes explicit paths. To exempt a
+line, add ``# reprolint: allow[<pass>] <why>`` — the reason is part of
+the contract.
+
+Passes: schedule (jaxpr-level chunk schedule on the scan path AND the
+Pallas kernel body), donation (lowered aliasing cross-check + AST
+read-after-donate), lanes (AST lane-accessor discipline), staticness
+(AST traced control flow + static_key completeness by perturbation),
+tripwire (``assert_compile_flat`` + adoption check), docrefs (stale
+legacy-entry-point references).
+"""
+from __future__ import annotations
+
+import pathlib
+
+from . import docrefs, donation, lanes, schedule, staticness, tripwire
+from .common import Finding, repo_root
+from .tripwire import RecompileError, assert_compile_flat
+
+__all__ = [
+    "Finding",
+    "PASSES",
+    "RecompileError",
+    "assert_compile_flat",
+    "repo_root",
+    "run_pass",
+    "run_repo",
+]
+
+PASSES = {
+    "schedule": schedule,
+    "donation": donation,
+    "lanes": lanes,
+    "staticness": staticness,
+    "tripwire": tripwire,
+    "docrefs": docrefs,
+}
+
+
+def run_pass(name: str, paths=None, root=None) -> list[Finding]:
+    """One pass, repo mode (``paths`` None) or file/fixture mode."""
+    mod = PASSES[name]
+    if paths:
+        return mod.run_paths([pathlib.Path(p) for p in paths])
+    return mod.run_repo(pathlib.Path(root) if root else repo_root())
+
+
+def run_repo(passes=None, root=None) -> list[Finding]:
+    """All (or the named) passes against the repo."""
+    findings: list[Finding] = []
+    for name in passes or PASSES:
+        findings += run_pass(name, root=root)
+    return findings

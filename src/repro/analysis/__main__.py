@@ -1,0 +1,60 @@
+"""CLI: ``python -m repro.analysis [--check] [--pass NAME] [paths...]``.
+
+Repo mode (no paths) runs the selected passes — all six by default —
+against the repository and exits 1 when any finding survives the
+pragmas. File/fixture mode (explicit paths) runs the selected passes
+against those files only: AST passes lint them, dynamic passes execute
+their ``reprolint_case()`` if present. ``--report FILE`` additionally
+writes the findings as JSON (the CI job uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import PASSES, run_pass
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="reprolint — the emulator's contract checkers")
+    ap.add_argument("paths", nargs="*",
+                    help="files to check (fixture/file mode); none = "
+                         "whole repo")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: run everything, exit 1 on findings "
+                         "(the default behavior, spelled explicitly)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=sorted(PASSES), metavar="NAME",
+                    help="run only this pass (repeatable); default all")
+    ap.add_argument("--report", metavar="FILE",
+                    help="also write findings as JSON")
+    ap.add_argument("--list-passes", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for name, mod in PASSES.items():
+            doc = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{name:12s} {doc}")
+        return 0
+
+    names = args.passes or list(PASSES)
+    findings = []
+    for name in names:
+        findings += run_pass(name, paths=args.paths or None)
+
+    for f in findings:
+        print(f.format())
+    if args.report:
+        with open(args.report, "w") as fh:
+            json.dump([f.as_dict() for f in findings], fh, indent=2)
+    n = len(findings)
+    scope = "repo" if not args.paths else f"{len(args.paths)} file(s)"
+    print(f"reprolint: {n} finding(s) [{', '.join(names)}] on {scope}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,128 @@
+"""Pass ``lanes`` — lane-accessor discipline on the packed table.
+
+``core/table.py`` is the single source of truth for the packed
+``int32[n_pages, ROW_W]`` redirection-table layout (PR 2). Raw lane
+indexing — ``table[..., HOTNESS]``, ``rows[:, 2]`` — anywhere else
+couples callers to the physical layout, which is exactly how the
+pre-PR-2 five-array scatter bugs happened. The contract:
+
+  * the lane index constants (``DEVICE``/``FRAME``/``HOTNESS``/``WEAR``/
+    ``OWNER``/``EPOCH``/``FLAGS``/``_PAD``) may be *referenced* only
+    inside the allowlist (``core/table.py`` itself and the fused
+    ``kernels/chunk_step.py`` Pallas body);
+  * subscripting a table-like value with a bare integer lane is banned
+    everywhere outside the allowlist;
+  * everyone else goes through the accessors (``device_at``,
+    ``hotness_at``, ``add_hotness``, ``store_flags``, ...).
+
+FLAGS *bit* constants (``PIN_FAST``, ``POISONED``, ...) are public
+vocabulary and stay legal everywhere.
+
+Purely an AST pass — fixture files are linted directly by path.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from .common import Finding, apply_pragmas, iter_py_files, rel
+
+PASS = "lanes"
+
+LANE_NAMES = {"DEVICE", "FRAME", "HOTNESS", "WEAR", "OWNER", "EPOCH",
+              "FLAGS", "_PAD"}
+
+# Files where raw lane indexing is the point.
+ALLOWLIST = {
+    "src/repro/core/table.py",
+    "src/repro/kernels/chunk_step.py",
+}
+
+_ROW_W = 8
+
+
+def _table_aliases(tree: ast.AST) -> tuple[set[str], set[str]]:
+    """(module aliases of repro.core.table, directly imported lane
+    constant names) in this file."""
+    mod_aliases: set[str] = set()
+    lane_names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.core.table":
+                    mod_aliases.add(a.asname or "repro")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "repro.core":
+                for a in node.names:
+                    if a.name == "table":
+                        mod_aliases.add(a.asname or "table")
+            elif node.module == "repro.core.table":
+                for a in node.names:
+                    if a.name in LANE_NAMES:
+                        lane_names.add(a.asname or a.name)
+    return mod_aliases, lane_names
+
+
+def _mentions_table(node: ast.AST) -> bool:
+    """Heuristic: does this expression look like the packed table?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and "table" in n.id.lower():
+            return True
+        if isinstance(n, ast.Attribute) and "table" in n.attr.lower():
+            return True
+    return False
+
+
+def check_source(source: str, path: str) -> list[Finding]:
+    tree = ast.parse(source)
+    mod_aliases, lane_names = _table_aliases(tree)
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in mod_aliases
+                and node.attr in LANE_NAMES):
+            findings.append(Finding(
+                path, node.lineno, PASS,
+                f"raw lane constant `{node.value.id}.{node.attr}` outside "
+                "core/table.py — use the lane accessors "
+                "(device_at/hotness_at/store_flags/...)"))
+        elif (isinstance(node, ast.Name)
+              and isinstance(node.ctx, ast.Load)
+              and node.id in lane_names):
+            findings.append(Finding(
+                path, node.lineno, PASS,
+                f"lane constant `{node.id}` imported and used outside "
+                "core/table.py — use the lane accessors"))
+        elif isinstance(node, ast.Subscript) and _mentions_table(node.value):
+            sl = node.slice
+            elems = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            last = elems[-1]
+            if (len(elems) >= 2 and isinstance(last, ast.Constant)
+                    and isinstance(last.value, int)
+                    and 0 <= last.value < _ROW_W):
+                findings.append(Finding(
+                    path, node.lineno, PASS,
+                    f"bare integer lane index `[..., {last.value}]` on a "
+                    "table-like value — use the lane accessors"))
+    return apply_pragmas(findings, source)
+
+
+def check_file(path: pathlib.Path) -> list[Finding]:
+    return check_source(path.read_text(), rel(path))
+
+
+def run_repo(root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in iter_py_files(root):
+        if rel(path, root) in ALLOWLIST or "analysis" in path.parts:
+            continue
+        findings += check_file(path)
+    return findings
+
+
+def run_paths(paths) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in paths:
+        findings += check_file(pathlib.Path(path))
+    return findings

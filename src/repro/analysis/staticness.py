@@ -1,0 +1,279 @@
+"""Pass ``staticness`` — the traced/static split that makes the sweep
+engine work.
+
+Everything in ``RuntimeParams`` is a traced scalar; everything in
+``static_key`` shapes the compiled program. Three contracts, each of
+which has been violated and hand-fixed before (stale ``policy_id``,
+knobs missing from ``static_key``):
+
+  * **no Python control flow on traced params** (AST): a
+    ``RuntimeParams`` field reaching ``if``/``while``/``assert`` or a
+    ternary test is a concretization error waiting for the first real
+    trace — use ``jnp.where``/``lax.cond``.
+  * **static_key completeness** (runtime, perturbation-based): perturb
+    every ``EmulatorConfig`` field (descending into the two
+    ``TechnologyParams``); each perturbation must change ``static_key``
+    or a ``RuntimeParams.from_config`` leaf, or the knob silently
+    misses both the cache key and the traced computation.
+  * **canonical_config discipline** (runtime): static fields survive
+    canonicalization (``static_key(canonical(c)) == static_key(c)``)
+    and runtime-only fields are neutralized (equal canonical configs),
+    because the canonical config is a jit *static* argument — a leaked
+    runtime field fragments the entry cache.
+
+Plus a dtype cross-check: ``kernels/chunk_step._FLOAT_PARAM_FIELDS``
+must agree exactly with the float32 leaves of
+``RuntimeParams.from_config`` (the Pallas scalar packing depends on it).
+
+Fixture protocol: AST violations are linted directly by path.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+from .common import Finding, apply_pragmas, iter_py_files, rel
+
+PASS = "staticness"
+
+# Unannotated names conventionally bound to RuntimeParams in this repo.
+PARAM_NAME_HINTS = {"params", "p", "rp"}
+
+# TechnologyParams subfields that are *documentation only* (config.py
+# declares them behaviorally inert: `name` labels the row, and
+# endurance_log10 is a datasheet number surfaced in reports, never read
+# by the pipeline). Everything else must reach static_key or
+# RuntimeParams.
+INERT_SUBFIELDS = {"fast.name", "slow.name",
+                   "fast.endurance_log10", "slow.endurance_log10"}
+
+
+def _runtime_fields() -> frozenset[str]:
+    from repro.core.config import RuntimeParams
+
+    return frozenset(RuntimeParams._fields)
+
+
+# --- AST: control flow on traced params -----------------------------------
+
+
+def _annotated_param_names(fn) -> set[str]:
+    names = set()
+    args = list(fn.args.posonlyargs) + list(fn.args.args) + \
+        list(fn.args.kwonlyargs)
+    for a in args:
+        ann = a.annotation
+        if ann is None:
+            continue
+        txt = ast.unparse(ann)
+        if "RuntimeParams" in txt:
+            names.add(a.arg)
+    return names
+
+
+def check_source(source: str, path: str) -> list[Finding]:
+    tree = ast.parse(source)
+    fields = _runtime_fields()
+    findings: list[Finding] = []
+
+    def flag_tests(fn, names):
+        tests = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                tests.append(node.test)
+            elif isinstance(node, ast.Assert):
+                tests.append(node.test)
+        for test in tests:
+            for n in ast.walk(test):
+                if (isinstance(n, ast.Attribute)
+                        and isinstance(n.value, ast.Name)
+                        and n.value.id in names and n.attr in fields):
+                    findings.append(Finding(
+                        path, n.lineno, PASS,
+                        f"traced RuntimeParams field `{n.value.id}."
+                        f"{n.attr}` reaches Python control flow — use "
+                        "jnp.where / lax.cond on traced values"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names = _annotated_param_names(node) | PARAM_NAME_HINTS
+            flag_tests(node, names)
+    return apply_pragmas(findings, source)
+
+
+def check_file(path: pathlib.Path) -> list[Finding]:
+    return check_source(path.read_text(), rel(path))
+
+
+# --- runtime: static_key completeness -------------------------------------
+
+
+def _field_linenos(config_path: pathlib.Path) -> dict[str, int]:
+    tree = ast.parse(config_path.read_text())
+    out: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.ClassDef)
+                and node.name == "EmulatorConfig"):
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    out[stmt.target.id] = stmt.lineno
+    return out
+
+
+def _perturb(name: str, value):
+    """A changed-but-valid value for one config field, or None when the
+    checker does not know how (itself a finding: teach it)."""
+    if isinstance(value, bool):
+        return not value
+    if isinstance(value, int):
+        return value + 1
+    if isinstance(value, float):
+        return value * 2 + 0.25
+    if isinstance(value, str):
+        from repro.core import policies
+
+        menus = {
+            "policy": sorted(policies.POLICIES),
+            "bank_resolver": ["dense", "segmented", "auto"],
+            "chunk_step_kernel": ["on", "off", "auto"],
+        }
+        menu = menus.get(name)
+        if menu:
+            return next(v for v in menu if v != value)
+    return None
+
+
+def _runtime_leaves(cfg):
+    import numpy as np
+
+    from repro.core.config import RuntimeParams
+
+    rp = RuntimeParams.from_config(cfg)
+    return {f: np.asarray(v) for f, v in zip(rp._fields, rp)}
+
+
+def _check_one_field(findings, root, linenos, base, label, line, make):
+    """Perturb one (sub)field via ``make(base) -> perturbed_cfg`` and
+    enforce the completeness + canonicalization contracts."""
+    import numpy as np
+
+    from repro.core.config import canonical_config, static_key
+
+    cfg_path = "src/repro/core/config.py"
+    pert = make(base)
+    static_changed = static_key(base) != static_key(pert)
+    rb, rp = _runtime_leaves(base), _runtime_leaves(pert)
+    runtime_changed = any(not np.array_equal(rb[f], rp[f]) for f in rb)
+    if not static_changed and not runtime_changed:
+        findings.append(Finding(
+            cfg_path, line, PASS,
+            f"config field `{label}` reaches NEITHER static_key nor "
+            "RuntimeParams.from_config — a sweep/jit over this knob is "
+            "silently inert"))
+        return
+    if static_changed:
+        if static_key(canonical_config(pert)) != static_key(pert):
+            findings.append(Finding(
+                cfg_path, line, PASS,
+                f"static field `{label}` does not survive "
+                "canonical_config — geometry-equal sessions will not "
+                "share executables"))
+    elif canonical_config(pert) != canonical_config(base):
+        findings.append(Finding(
+            cfg_path, line, PASS,
+            f"runtime field `{label}` leaks into canonical_config — the "
+            "canonical config is a jit static argument, so this "
+            "fragments the entry cache"))
+
+
+def check_static_key_completeness(root: pathlib.Path) -> list[Finding]:
+    from repro.core.config import EmulatorConfig, TechnologyParams
+
+    findings: list[Finding] = []
+    linenos = _field_linenos(root / "src" / "repro" / "core" / "config.py")
+    base = EmulatorConfig()
+    for f in dataclasses.fields(EmulatorConfig):
+        value = getattr(base, f.name)
+        line = linenos.get(f.name, 1)
+        if isinstance(value, TechnologyParams):
+            for sub in dataclasses.fields(TechnologyParams):
+                label = f"{f.name}.{sub.name}"
+                if label in INERT_SUBFIELDS:
+                    continue
+                new = _perturb(sub.name, getattr(value, sub.name))
+                if new is None:
+                    findings.append(Finding(
+                        "src/repro/core/config.py", line, PASS,
+                        f"don't know how to perturb `{label}` — teach "
+                        "analysis.staticness._perturb about it"))
+                    continue
+                _check_one_field(
+                    findings, root, linenos, base, label, line,
+                    lambda c, f=f, sub=sub, new=new: c.with_(
+                        **{f.name: dataclasses.replace(
+                            getattr(c, f.name), **{sub.name: new})}))
+            continue
+        new = _perturb(f.name, value)
+        if new is None:
+            findings.append(Finding(
+                "src/repro/core/config.py", line, PASS,
+                f"don't know how to perturb `{f.name}` — teach "
+                "analysis.staticness._perturb about it"))
+            continue
+        _check_one_field(findings, root, linenos, base, f.name, line,
+                         lambda c, f=f, new=new: c.with_(**{f.name: new}))
+    return findings
+
+
+def check_float_fields(root: pathlib.Path) -> list[Finding]:
+    """``_FLOAT_PARAM_FIELDS`` must be exactly the float32 leaves of
+    ``RuntimeParams.from_config`` — the Pallas scalar packing splits on
+    it."""
+    import numpy as np
+
+    from repro.core.config import EmulatorConfig, RuntimeParams
+    from repro.kernels import chunk_step
+
+    rp = RuntimeParams.from_config(EmulatorConfig())
+    floats = {f for f, v in zip(rp._fields, rp)
+              if np.asarray(v).dtype.kind == "f"}
+    declared = set(chunk_step._FLOAT_PARAM_FIELDS)
+    if floats == declared:
+        return []
+    path = root / "src" / "repro" / "kernels" / "chunk_step.py"
+    line = 1
+    for i, text in enumerate(path.read_text().splitlines(), start=1):
+        if "_FLOAT_PARAM_FIELDS" in text:
+            line = i
+            break
+    missing = sorted(floats - declared)
+    extra = sorted(declared - floats)
+    return [Finding(
+        rel(path), line, PASS,
+        "chunk_step._FLOAT_PARAM_FIELDS disagrees with the float32 "
+        f"leaves of RuntimeParams.from_config (missing={missing}, "
+        f"extra={extra}) — the Pallas scalar packing will mis-slot")]
+
+
+def run_repo(root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in iter_py_files(root):
+        if "analysis" in path.parts:
+            continue
+        # config.py builds RuntimeParams FROM the config on the host;
+        # its `p`/`params` names are not traced values.
+        if rel(path, root) == "src/repro/core/config.py":
+            continue
+        findings += check_file(path)
+    findings += check_static_key_completeness(root)
+    findings += check_float_fields(root)
+    return findings
+
+
+def run_paths(paths) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in paths:
+        findings += check_file(pathlib.Path(path))
+    return findings

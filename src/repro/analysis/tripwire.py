@@ -1,0 +1,131 @@
+"""Pass ``tripwire`` — ``assert_compile_flat``, the recompile tripwire.
+
+The unified entry-point cache (core/emulator.py) makes
+``entry_cache_count`` the exact compile count, so "zero recompiles after
+warmup" is a checkable contract instead of a bench footnote. This module
+provides the context manager the serving warmup test and the benches
+use:
+
+    with assert_compile_flat(engine) as cc:
+        ... steady-state work ...
+    # raises RecompileError listing the new cache entries if any
+    # compilation happened; cc.count / cc.new_entries for reporting
+
+and the pass itself verifies (AST) that the adoption sites still use it
+— a dropped tripwire is how recompile regressions return.
+
+Fixture protocol: ``reprolint_case()`` returning
+``{"kind": "tripwire", "run": callable}`` where ``run`` performs work
+under ``assert_compile_flat`` that compiles a fresh entry; the pass
+reports the resulting ``RecompileError`` as a finding.
+"""
+from __future__ import annotations
+
+import ast
+import contextlib
+import pathlib
+
+from .common import Finding, rel
+
+PASS = "tripwire"
+
+# Files that must keep using assert_compile_flat (the zero-recompile
+# contract holders).
+ADOPTION_SITES = (
+    "tests/test_serve.py",
+    "benchmarks/bench_serve.py",
+    "benchmarks/bench_engine.py",
+    "benchmarks/bench_sweep.py",
+)
+
+
+class RecompileError(AssertionError):
+    """Raised when compilation happened under ``assert_compile_flat``."""
+
+
+class _CacheDelta:
+    def __init__(self):
+        self.count = 0
+        self.new_entries: list[tuple] = []
+
+
+def _cache_keys(skey):
+    from repro.core import emulator
+
+    # The private _ENTRY_CACHE is deliberately inspected here (same
+    # repo, and the keys make the error actionable: they carry the
+    # shape_sig that forced the new executable).
+    return {k for k in emulator._ENTRY_CACHE
+            if skey is None or k[0] == skey}
+
+
+@contextlib.contextmanager
+def assert_compile_flat(engine=None, *, allow: int = 0, msg: str = ""):
+    """Assert no new emulation entry points compile inside the block.
+
+    ``engine`` scopes the check to that engine's static geometry (its
+    ``static_key``); None watches the whole cache. ``allow`` permits a
+    known number of compilations (e.g. ``allow=1`` for a first-call
+    bench that then asserts exactly one). Yields a handle whose
+    ``count``/``new_entries`` are filled on exit, so benches can report
+    the number they tolerated."""
+    skey = None if engine is None else engine._skey
+    before = _cache_keys(skey)
+    delta = _CacheDelta()
+    yield delta
+    # no sort: cache keys carry a PolicyRegistry and don't order
+    new = list(_cache_keys(skey) - before)
+    delta.count = len(new)
+    delta.new_entries = new
+    if delta.count > allow:
+        detail = "; ".join(
+            f"batch={k[2]} donate={k[3]} shape_sig={k[4]}" for k in new)
+        prefix = f"{msg}: " if msg else ""
+        raise RecompileError(
+            f"{prefix}{delta.count} new emulation entry point(s) "
+            f"compiled under assert_compile_flat (allow={allow}): "
+            f"{detail}")
+
+
+def _uses_tripwire(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == "assert_compile_flat":
+            return True
+        if (isinstance(node, ast.Attribute)
+                and node.attr == "assert_compile_flat"):
+            return True
+    return False
+
+
+def run_repo(root: pathlib.Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for site in ADOPTION_SITES:
+        path = root / site
+        if not path.exists():
+            findings.append(Finding(site, 1, PASS,
+                                    "adoption site vanished — update "
+                                    "analysis.tripwire.ADOPTION_SITES"))
+            continue
+        if not _uses_tripwire(ast.parse(path.read_text())):
+            findings.append(Finding(
+                site, 1, PASS,
+                "no assert_compile_flat use — the zero-recompile "
+                "contract lost its tripwire here"))
+    return findings
+
+
+def run_paths(paths) -> list[Finding]:
+    from .common import fixture_case
+
+    findings: list[Finding] = []
+    for path in paths:
+        path = pathlib.Path(path)
+        case = fixture_case(path)
+        if not case or case.get("kind") != "tripwire":
+            continue
+        try:
+            case["run"]()
+        except RecompileError as e:
+            findings.append(Finding(rel(path), case.get("line", 1), PASS,
+                                    str(e)))
+    return findings

@@ -115,6 +115,8 @@ def build_cell(arch: str, shape_name: str, mesh, cfg: ModelConfig | None = None,
         gspecs = shd.to_named(ospecs_inner, mesh)   # ZeRO-2 grad layout
         step = make_train_step(cfg, AdamWConfig(), sh, micro_batches=mb,
                                grad_specs=gspecs)
+        # reprolint: allow[donation] model-training params/opt-state, not
+        # emulator session state; aliasing is exercised by the dryrun CLI
         fn = jax.jit(step,
                      in_shardings=(shd.to_named(pspecs, mesh),
                                    shd.to_named(ospecs, mesh),
@@ -153,6 +155,8 @@ def build_cell(arch: str, shape_name: str, mesh, cfg: ModelConfig | None = None,
     pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
     bspec = jax.sharding.PartitionSpec(
         sh.batch_axes_for(shape.global_batch))
+    # reprolint: allow[donation] decode KV cache of the model-serving
+    # dry-run, not emulator session state
     fn = jax.jit(step,
                  in_shardings=(shd.to_named(pspecs, mesh),
                                shd.to_named(bspec, mesh),

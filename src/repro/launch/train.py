@@ -102,9 +102,13 @@ def run(argv=None):
             params, opt_state = jax.jit(
                 init_all, out_shardings=(shd.to_named(pspecs, mesh),
                                          shd.to_named(ospecs, mesh)))()
+            # reprolint: allow[donation] training params/opt-state loop,
+            # not emulator session state (rebound every step below)
             step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
     else:
         params, opt_state = jax.jit(init_all)()
+        # reprolint: allow[donation] training params/opt-state loop, not
+        # emulator session state (rebound every step below)
         step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
     # --- auto-resume --------------------------------------------------------

@@ -1,0 +1,7 @@
+"""Seeded stale-doc violation, in the style of the pre-PR-7 docstrings:
+
+Run this workload through ``emulate`` (or the run_sweep free function
+in sweep/runner.py) to reproduce the figure.
+
+``python -m repro.analysis --pass docrefs <this file>`` must exit
+non-zero with findings pointing at the lines above."""

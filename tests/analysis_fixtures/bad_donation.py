@@ -1,0 +1,24 @@
+"""Seeded donation violations: a caller that reads a state after
+donating it (AST), and a jitted function whose donated argument cannot
+alias into any output, so XLA silently drops the donation (lowering).
+``python -m repro.analysis --pass donation <this file>`` must exit
+non-zero with findings at the lines below."""
+
+
+def leaky_caller(engine, trace, state):
+    out = engine.run(trace, state=state)
+    return out, state.table  # read after donating `state`
+
+
+def reprolint_case():
+    def make():
+        import jax
+        import jax.numpy as jnp
+
+        # int32 in, float32 out: nothing for the donated buffer to
+        # alias — XLA drops the donation without a word.
+        fn = jax.jit(lambda x: jnp.float32(1.5) * x.astype(jnp.float32),
+                     donate_argnums=(0,))
+        return fn, (jnp.zeros((8, 8), jnp.int32),), (0,)
+
+    return {"kind": "donation", "make": make, "line": 21}

@@ -1,0 +1,18 @@
+"""Seeded lane-discipline violations: raw lane constants and bare
+integer lane indexing outside core/table.py.
+``python -m repro.analysis --pass lanes <this file>`` must exit
+non-zero with findings at the lines below."""
+from repro.core import table as table_lib
+from repro.core.table import HOTNESS
+
+
+def peek_hotness(table, pages):
+    return table[pages, table_lib.HOTNESS]  # raw lane constant
+
+
+def peek_wear(table, frames):
+    return table[frames, 3]  # bare integer lane index
+
+
+def imported_lane(table):
+    return table[:, HOTNESS]  # directly imported lane constant

@@ -1,0 +1,21 @@
+"""Seeded traced/static violations: RuntimeParams fields reaching
+Python control flow (concretization errors on the first real trace).
+``python -m repro.analysis --pass staticness <this file>`` must exit
+non-zero with findings at the lines below."""
+
+
+def promote_if_hot(params, hotness):
+    if params.hot_threshold > 0:  # traced field in Python `if`
+        return hotness + 1
+    return hotness
+
+
+def spin(params, clock):
+    while clock < params.decay_every:  # traced field in `while`
+        clock = clock + 1
+    return clock
+
+
+def checked(params, w):
+    assert params.write_weight >= 0  # traced field in `assert`
+    return w * params.write_weight

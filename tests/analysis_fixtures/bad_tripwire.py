@@ -1,0 +1,27 @@
+"""Seeded recompile violation: work under ``assert_compile_flat`` that
+compiles a brand-new entry point (a trace length no warmup covered).
+``python -m repro.analysis --pass tripwire <this file>`` must exit
+non-zero, reporting the RecompileError as a finding."""
+
+
+def _recompiles_under_tripwire():
+    import jax.numpy as jnp
+
+    from repro import Engine
+    from repro.analysis import assert_compile_flat
+    from repro.core import small_platform
+    from repro.core.emulator import Trace
+
+    # a geometry no test shares, so this probe never perturbs
+    # compile-count assertions elsewhere
+    eng = Engine(small_platform(n_fast_pages=4, n_slow_pages=12, chunk=4))
+    i32 = jnp.int32
+    trace = Trace(page=jnp.zeros(4, i32), offset=jnp.zeros(4, i32),
+                  is_write=jnp.zeros(4, bool), size=jnp.full(4, 64, i32))
+    with assert_compile_flat(eng):
+        eng.run(trace)  # cold entry -> one compilation -> boom
+
+
+def reprolint_case():
+    return {"kind": "tripwire", "run": _recompiles_under_tripwire,
+            "line": 21}

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro import Engine
+from repro.analysis import assert_compile_flat
 from repro.core import check_table, small_platform
 from repro.core import table as table_lib
 from repro.serve import (BucketSpec, ContinuousBatchingScheduler, PagedKVMap,
@@ -99,13 +100,12 @@ def test_compile_count_flat_after_warmup():
     engine = Engine(cfg)
     sched = ContinuousBatchingScheduler(engine, _serve_cfg())
     sched.warmup()
-    before = engine.compile_count
     # Mixed lengths: short/long prompts, short/long decodes — every
     # dispatch (steady floor-bucket AND padded drain tail) must hit a
     # warm entry; the valid mask is an argument, not a cache key.
-    sched.submit(*_workload(140, seed=3))
-    sched.run()
-    assert engine.compile_count == before
+    with assert_compile_flat(engine, msg="serving dispatch after warmup"):
+        sched.submit(*_workload(140, seed=3))
+        sched.run()
     assert any(n < s for s, n in sched.dispatch_log), \
         "workload never exercised the padded drain path"
 
