@@ -52,10 +52,10 @@ class FaultPlan(NamedTuple):
 
     @staticmethod
     def empty() -> "FaultPlan":
-        """A plan injecting nothing (single sentinel row per class)."""
-        return FaultPlan(
-            transient=jnp.full((1, 2), -1, jnp.int32),
-            deaths=jnp.asarray([[NEVER, 0]], jnp.int32))
+        """A plan injecting nothing (single sentinel row per class).
+        Bitwise-identical to ``FaultPlan.of()`` and to a zero-event
+        ``seeded_plan``, so all three share one compiled entry point."""
+        return FaultPlan.of()
 
     @staticmethod
     def of(transient=(), deaths=()) -> "FaultPlan":

@@ -1,0 +1,134 @@
+"""FaultPlan edge cases the main endurance suite does not pin down:
+degenerate plan construction (zero events, exact-fit padding,
+heterogeneous stacking) and the fault-cursor register at the boundaries
+of its domain — events scheduled past the end of the run must cost
+nothing and must NOT wrap the cursor, and a fully consumed plan must
+stay consumed across continued runs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import Engine
+from repro.core import (FaultPlan, Trace, check_table, pad_plan,
+                        seeded_plan, small_platform, stack_plans)
+from repro.core import table as table_lib
+from repro.core.faults import NEVER
+
+
+def _write_burst(cfg, n, lo, hi, seed=0):
+    rng = np.random.default_rng(seed)
+    page = rng.integers(lo, hi, n).astype(np.int32)
+    off = (rng.integers(0, cfg.page_size // 64, n) * 64).astype(np.int32)
+    return Trace(jnp.asarray(page), jnp.asarray(off),
+                 jnp.ones(n, bool), jnp.full(n, 64, jnp.int32))
+
+
+# ---------------------------------------------------------------------
+# plan construction edges
+# ---------------------------------------------------------------------
+def test_zero_fault_seeded_plan_is_the_empty_plan():
+    """n_deaths=0, n_transient=0 must build the exact sentinel plan —
+    same arrays, same shape_sig, so it shares the empty plan's compiled
+    entry point instead of minting a new one."""
+    plan = seeded_plan(123, pages=np.arange(16), n_chunks=50)
+    empty = FaultPlan.empty()
+    assert plan.shape_sig == empty.shape_sig == (((1, 2), (1, 2)))
+    np.testing.assert_array_equal(np.asarray(plan.transient),
+                                  np.asarray(empty.transient))
+    np.testing.assert_array_equal(np.asarray(plan.deaths),
+                                  np.asarray(empty.deaths))
+    assert not plan.is_batched
+
+
+def test_pad_plan_rejects_shrinking():
+    plan = FaultPlan.of(deaths=[(1, 2), (3, 4), (5, 6)],
+                        transient=[(0, 1), (2, 3)])
+    with pytest.raises(ValueError, match="3 events > pad 2"):
+        pad_plan(plan, nt=2, nd=2)
+    with pytest.raises(ValueError, match="2 events > pad 1"):
+        pad_plan(plan, nt=1, nd=3)
+
+
+def test_pad_plan_exact_fit_is_identity():
+    plan = FaultPlan.of(deaths=[(1, 2), (3, 4)], transient=[(0, 1)])
+    same = pad_plan(plan, nt=1, nd=2)
+    assert same.shape_sig == plan.shape_sig
+    np.testing.assert_array_equal(np.asarray(same.transient),
+                                  np.asarray(plan.transient))
+    np.testing.assert_array_equal(np.asarray(same.deaths),
+                                  np.asarray(plan.deaths))
+    # padding past the fit appends only never-due sentinels
+    grown = pad_plan(plan, nt=3, nd=5)
+    assert grown.shape_sig == ((3, 2), (5, 2))
+    assert (np.asarray(grown.transient)[1:, 0] == -1).all()
+    assert (np.asarray(grown.deaths)[2:, 0] == NEVER).all()
+
+
+def test_stack_plans_rejects_heterogeneous_shapes():
+    a = pad_plan(FaultPlan.of(deaths=[(1, 2)]), nt=2, nd=2)
+    b = FaultPlan.empty()  # (1, 2) rows — disagrees with (2, 2)
+    with pytest.raises(ValueError, match="disagree on event-array shapes"):
+        stack_plans([a, b])
+    stacked = stack_plans([a, pad_plan(b, nt=2, nd=2)])
+    assert stacked.is_batched
+    assert stacked.deaths.shape == (2, 2, 2)
+
+
+# ---------------------------------------------------------------------
+# fault-cursor domain edges
+# ---------------------------------------------------------------------
+def test_death_past_end_of_run_is_inert_and_cursor_does_not_move():
+    """A death stamped beyond the last boundary of the run must (a) leave
+    the run bitwise-identical to the empty plan and (b) leave the cursor
+    at 0 — not consumed, not wrapped — so a later continued run that DOES
+    reach the stamp still fires it exactly once."""
+    cfg = small_platform(chunk=8, policy="hotness", decay_every=8)
+    engine = Engine(cfg)
+    t = _write_burst(cfg, 32, cfg.n_fast_pages, cfg.n_pages)
+    # 32 requests / chunk=8 -> boundaries 0..3; stamp far past them
+    late = FaultPlan.of(deaths=[(1000, cfg.n_fast_pages + 2)])
+    a = engine.run(t, donate=False, faults=FaultPlan.empty())
+    b = engine.run(t, donate=False, faults=late)
+    for k in a.outs:
+        np.testing.assert_array_equal(np.asarray(a.outs[k]),
+                                      np.asarray(b.outs[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(a.state.table),
+                                  np.asarray(b.state.table))
+    np.testing.assert_array_equal(np.asarray(a.state.counters),
+                                  np.asarray(b.state.counters))
+    assert int(b.state.fault_cursor) == 0
+    assert int(b.state.counters.frames_retired) == 0
+    # continue past the stamp: the plan is keyed on absolute chunk_idx,
+    # so the deferred death fires exactly once in the continuation
+    state = b.state
+    assert int(state.chunk_idx) == 4
+    long_t = _write_burst(cfg, 8 * 1000, cfg.n_fast_pages, cfg.n_pages,
+                          seed=1)
+    state, _ = engine.run(long_t, state=state, faults=late)
+    assert int(state.fault_cursor) == 1
+    assert int(state.counters.frames_retired) == 1
+
+
+def test_consumed_plan_does_not_refire_on_continuation():
+    """Once every death is consumed the cursor saturates at nd; running
+    on — with the SAME plan still attached — must not re-fire events or
+    walk the cursor past the end of the array."""
+    cfg = small_platform(chunk=8, policy="hotness", decay_every=8)
+    engine = Engine(cfg)
+    victims = [cfg.n_fast_pages + 2, cfg.n_fast_pages + 5]
+    plan = FaultPlan.of(deaths=[(0, victims[0]), (1, victims[1])])
+    t = _write_burst(cfg, 64, cfg.n_fast_pages, cfg.n_pages)
+    state, _ = engine.run(t, faults=plan)
+    assert int(state.fault_cursor) == 2          # nd: fully consumed
+    assert int(state.counters.frames_retired) == 2
+    check_table(cfg, np.asarray(state.table))
+    # two more runs with the consumed plan: nothing new may die
+    for seed in (1, 2):
+        t2 = _write_burst(cfg, 64, cfg.n_fast_pages, cfg.n_pages,
+                          seed=seed)
+        state, _ = engine.run(t2, state=state, faults=plan)
+        assert int(state.fault_cursor) == 2, "cursor wrapped or re-fired"
+        assert int(state.counters.frames_retired) == 2
+    flags = np.asarray(state.table)[:, table_lib.FLAGS]
+    retired = np.flatnonzero((flags & table_lib.RETIRED) != 0)
+    assert len(retired) == 2
