@@ -477,7 +477,7 @@ def decode_step(cfg: ModelConfig, params: dict, inputs: jax.Array,
         # (decode blocks are small; 32 unrolled bodies compile fine)
         new_cache = []
         for l in range(cfg.n_layers):
-            p_l = jax.tree.map(lambda a: a[l], params["layers"])
+            p_l = jax.tree.map(lambda a, l=l: a[l], params["layers"])
             x, nc = _decode_block(cfg, sh, p_l, x, cache[l], pos, None)
             new_cache.append(nc)
         new_cache = tuple(new_cache)
