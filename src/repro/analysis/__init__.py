@@ -19,13 +19,28 @@ Pallas kernel body), donation (lowered aliasing cross-check + AST
 read-after-donate), lanes (AST lane-accessor discipline), staticness
 (AST traced control flow + static_key completeness by perturbation),
 tripwire (``assert_compile_flat`` + adoption check), docrefs (stale
-legacy-entry-point references).
+legacy-entry-point references), ranges (interval abstract interpreter:
+int32 overflow proofs for the packed-table accumulators under the
+declared run budget + in-bounds proofs for every table gather/scatter,
+on the scan path AND both step_ref paths), pallas_san (static Pallas
+kernel sanitizer: VMEM footprint vs budget, init-before-read on
+output/scratch refs, write-write grid hazards via index_map
+evaluation).
 """
 from __future__ import annotations
 
 import pathlib
 
-from . import docrefs, donation, lanes, schedule, staticness, tripwire
+from . import (
+    docrefs,
+    donation,
+    lanes,
+    pallas_san,
+    ranges,
+    schedule,
+    staticness,
+    tripwire,
+)
 from .common import Finding, repo_root
 from .tripwire import RecompileError, assert_compile_flat
 
@@ -46,6 +61,8 @@ PASSES = {
     "staticness": staticness,
     "tripwire": tripwire,
     "docrefs": docrefs,
+    "ranges": ranges,
+    "pallas_san": pallas_san,
 }
 
 

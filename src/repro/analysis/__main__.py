@@ -1,19 +1,39 @@
 """CLI: ``python -m repro.analysis [--check] [--pass NAME] [paths...]``.
 
-Repo mode (no paths) runs the selected passes — all six by default —
+Repo mode (no paths) runs the selected passes — all eight by default —
 against the repository and exits 1 when any finding survives the
 pragmas. File/fixture mode (explicit paths) runs the selected passes
 against those files only: AST passes lint them, dynamic passes execute
-their ``reprolint_case()`` if present. ``--report FILE`` additionally
-writes the findings as JSON (the CI job uploads it as an artifact).
+their ``reprolint_case()`` if present.
+
+``--report FILE`` writes a JSON report::
+
+    {"findings": [{path, line, pass_name, message}, ...],
+     "proved_bounds": [...],   # per-program budget proofs (ranges pass)
+     "stats": {"<pass>": seconds, ..., "total": seconds}}
+
+``--baseline FILE`` loads a previous report and exits 1 only on
+findings NOT present in it (keyed on (path, pass_name, message) — line
+numbers drift with unrelated edits). ``--stats`` prints per-pass wall
+time; the CI job gates the total under its time budget.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
 from . import PASSES, run_pass
+
+
+def _load_baseline(path) -> set:
+    """Known-finding keys from a previous ``--report`` JSON (either the
+    current ``{"findings": [...]}`` shape or the legacy flat list)."""
+    with open(path) as fh:
+        data = json.load(fh)
+    rows = data["findings"] if isinstance(data, dict) else data
+    return {(r["path"], r["pass_name"], r["message"]) for r in rows}
 
 
 def main(argv=None) -> int:
@@ -30,7 +50,12 @@ def main(argv=None) -> int:
                     choices=sorted(PASSES), metavar="NAME",
                     help="run only this pass (repeatable); default all")
     ap.add_argument("--report", metavar="FILE",
-                    help="also write findings as JSON")
+                    help="also write findings + proved bounds as JSON")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="previous --report JSON; exit 1 only on "
+                         "findings not already present in it")
+    ap.add_argument("--stats", action="store_true",
+                    help="print per-pass analyzer wall time")
     ap.add_argument("--list-passes", action="store_true")
     args = ap.parse_args(argv)
 
@@ -42,18 +67,41 @@ def main(argv=None) -> int:
 
     names = args.passes or list(PASSES)
     findings = []
+    stats: dict[str, float] = {}
     for name in names:
+        t0 = time.perf_counter()
         findings += run_pass(name, paths=args.paths or None)
+        stats[name] = round(time.perf_counter() - t0, 3)
+    stats["total"] = round(sum(stats.values()), 3)
+
+    new = findings
+    if args.baseline:
+        known = _load_baseline(args.baseline)
+        new = [f for f in findings
+               if (f.path, f.pass_name, f.message) not in known]
 
     for f in findings:
-        print(f.format())
+        mark = "" if f in new else " (baseline)"
+        print(f.format() + mark)
+    if args.stats:
+        for name in names:
+            print(f"reprolint: pass {name} took {stats[name]:.3f}s")
+        print(f"reprolint: total analyzer time {stats['total']:.3f}s")
     if args.report:
+        from . import ranges
+        report = {
+            "findings": [f.as_dict() for f in findings],
+            "proved_bounds": list(ranges.LAST_BOUNDS),
+            "stats": stats,
+        }
         with open(args.report, "w") as fh:
-            json.dump([f.as_dict() for f in findings], fh, indent=2)
+            json.dump(report, fh, indent=2, default=str)
     n = len(findings)
     scope = "repo" if not args.paths else f"{len(args.paths)} file(s)"
-    print(f"reprolint: {n} finding(s) [{', '.join(names)}] on {scope}")
-    return 1 if findings else 0
+    tail = f", {len(new)} new vs baseline" if args.baseline else ""
+    print(f"reprolint: {n} finding(s){tail} "
+          f"[{', '.join(names)}] on {scope}")
+    return 1 if new else 0
 
 
 if __name__ == "__main__":

@@ -106,6 +106,197 @@ def apply_pragmas(findings: list[Finding], source: str) -> list[Finding]:
             if f.pass_name not in allowed.get(f.line, ())]
 
 
+# --------------------------------------------------------------------------- #
+# Path-linking machinery: building and tracing the emulator's two compiled
+# chunk-step programs (the `lax.scan` body of `_emulate_impl` and the
+# Pallas kernel body via ``step_ref(seq=True)``). Grown out of the
+# schedule pass (PR 9); the ranges pass reuses it with params/faults as
+# *traced inputs* so its interval proofs are parametric over the runtime
+# knobs instead of specialized to one config's values.
+# --------------------------------------------------------------------------- #
+
+
+def eqn_loc(eqn, default=("<jaxpr>", 0)):
+    """(repo-relative path, line) of a jaxpr equation's user frame."""
+    try:
+        from jax._src import source_info_util
+
+        fr = source_info_util.user_frame(eqn.source_info)
+        if fr is not None:
+            return rel(fr.file_name), fr.start_line
+    except Exception:
+        pass
+    return default
+
+
+def step_args(cfg, *, nt: int = 2, nd: int = 2):
+    """(params, faults, call_args) for tracing one chunk step.
+
+    ``call_args`` is the positional tail of ``step_ref`` after
+    ``(cfg, registry, table, params, ...)``: ``(table, sc, bank_free,
+    page, offset, is_write, size, valid)``. ``faults`` is a shaped (not
+    empty) plan so cursor arithmetic stays symbolic — a sentinel-only
+    plan constant-folds the death detector away and the trace would no
+    longer cover fault consumption."""
+    import jax.numpy as jnp
+
+    from repro.core import emulator as emu
+    from repro.core import faults as faults_lib
+    from repro.core.config import RuntimeParams
+    from repro.kernels import chunk_step as cs
+
+    params = RuntimeParams.from_config(cfg)
+    state = emu.init_state(cfg, params)
+    sc = cs.StepScalars(
+        clock=state.clock, clock_ptr=state.clock_ptr,
+        chunk_idx=state.chunk_idx, dma=state.dma,
+        link_free_rx=state.link_free_rx, link_free_tx=state.link_free_tx,
+        last_return=state.last_return, rescue_page=state.rescue_page,
+        min_wear=state.min_wear, fault_cursor=state.fault_cursor)
+    faults = faults_lib.pad_plan(faults_lib.FaultPlan.empty(), nt, nd)
+    n = cfg.chunk
+    i32 = jnp.int32
+    page = jnp.zeros(n, i32)
+    offset = jnp.zeros(n, i32)
+    is_write = jnp.zeros(n, bool)
+    size = jnp.full(n, cfg.line_size, i32)
+    valid = jnp.ones(n, bool)
+    return params, faults, (state.table, sc, state.bank_free,
+                            page, offset, is_write, size, valid)
+
+
+def _leaf_names(prefix, tree):
+    import jax
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, _leaf in flat:
+        name = prefix + "".join(
+            f".{p.name}" if hasattr(p, "name") else f"[{p.idx}]"
+            if hasattr(p, "idx") else str(p) for p in path)
+        out.append(name)
+    return out
+
+
+def trace_step_ref(cfg, registry, seq: bool, *,
+                   params_as_inputs: bool = False):
+    """Trace ``step_ref`` for one chunk. Returns
+    ``(jaxpr, names, out_names)``: ``names[i]`` labels
+    ``jaxpr.jaxpr.invars[i]`` and ``out_names[i]`` labels
+    ``jaxpr.jaxpr.outvars[i]`` (dotted pytree paths, e.g.
+    ``"params.write_weight"`` / ``"sc.dma.page_a"``), or None for both
+    when ``params_as_inputs`` is False (params/faults closed over as
+    constants — the schedule pass's historical shape)."""
+    import jax
+
+    from repro.kernels import chunk_step as cs
+
+    params, faults, (table, sc, bank_free, page, offset, is_write, size,
+                     valid) = step_args(cfg)
+
+    if not params_as_inputs:
+        def fn(table, sc, bank_free, page, offset, is_write, size, valid):
+            return cs.step_ref(cfg, registry, table, params, sc, bank_free,
+                               page, offset, is_write, size, valid, None,
+                               seq=seq)
+
+        return jax.make_jaxpr(fn)(table, sc, bank_free, page, offset,
+                                  is_write, size, valid), None, None
+
+    def fn(table, params, sc, bank_free, page, offset, is_write, size,
+           valid, faults):
+        return cs.step_ref(cfg, registry, table, params, sc, bank_free,
+                           page, offset, is_write, size, valid, faults,
+                           seq=seq)
+
+    args = (table, params, sc, bank_free, page, offset, is_write, size,
+            valid, faults)
+    arg_names = ("table", "params", "sc", "bank_free", "page", "offset",
+                 "is_write", "size", "valid", "faults")
+    names = []
+    for prefix, arg in zip(arg_names, args):
+        names += _leaf_names(prefix, arg)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    assert len(names) == len(jaxpr.jaxpr.invars), \
+        (len(names), len(jaxpr.jaxpr.invars))
+    # step_ref returns (table, sc', bank_free', outs-dict); label the
+    # flattened outvars the same way so the ranges pass can map its
+    # monitored fields.
+    out_struct = jax.eval_shape(fn, *args)
+    out_names = _leaf_names("out", out_struct)
+    # the out tree is (table, sc, bank_free, outs) — relabel the first
+    # three to the canonical field names.
+    fixed = []
+    for nm in out_names:
+        nm = nm.replace("out[0]", "table").replace("out[1]", "sc") \
+               .replace("out[2]", "bank_free").replace("out[3]", "outs")
+        fixed.append(nm)
+    assert len(fixed) == len(jaxpr.jaxpr.outvars), \
+        (len(fixed), len(jaxpr.jaxpr.outvars))
+    return jaxpr, names, fixed
+
+
+def scan_body_info(cfg, registry):
+    """The chunk body of the compiled scan path, with enough structure to
+    map its invars: trace ``_emulate_impl`` (params concrete, faults a
+    shaped traced input) and pull the ``scan`` equation.
+
+    Returns ``(info, err)`` where info is a dict with:
+
+    * ``outer``: the traced ClosedJaxpr of ``_emulate_impl``;
+    * ``outer_names``: dotted labels of the outer invars (trace/faults);
+    * ``scan_eqn``: the scan equation inside it;
+    * ``body``: the scan body (open) jaxpr;
+    * ``num_consts`` / ``num_carry``: the scan's split of body invars;
+    * ``carry_names``: dotted ``EmulatorState`` leaf labels for body
+      invars ``[num_consts : num_consts + num_carry]`` (flattening order
+      of the carry pytree is the flattening order of the state);
+    * ``table_index``: body invar index of the packed table carry.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import emulator as emu
+    from repro.core import faults as faults_lib
+    from repro.core.config import RuntimeParams
+
+    n = cfg.chunk  # one chunk is enough — the body is per-chunk
+    i32 = jnp.int32
+    trace = emu.Trace(page=jnp.zeros(n, i32), offset=jnp.zeros(n, i32),
+                      is_write=jnp.zeros(n, bool),
+                      size=jnp.full(n, cfg.line_size, i32))
+    faults = faults_lib.pad_plan(faults_lib.FaultPlan.empty(), 2, 2)
+    params = RuntimeParams.from_config(cfg)
+    state = emu.init_state(cfg, params)
+
+    def fn(trace, faults):
+        return emu._emulate_impl(cfg, registry, trace, faults=faults)
+
+    outer = jax.make_jaxpr(fn)(trace, faults)
+    outer_names = _leaf_names("trace", trace) + _leaf_names("faults", faults)
+    scans = [e for e in outer.jaxpr.eqns if e.primitive.name == "scan"]
+    if not scans:
+        return None, "no `scan` equation found in _emulate_impl"
+    eqn = scans[0]
+    body = eqn.params["jaxpr"].jaxpr
+    num_consts = eqn.params["num_consts"]
+    num_carry = eqn.params["num_carry"]
+    carry_names = _leaf_names("state", state)
+    if len(carry_names) != num_carry:
+        return None, (f"scan carries {num_carry} leaves but EmulatorState "
+                      f"flattens to {len(carry_names)} — the carry mapping "
+                      "needs retargeting")
+    tshape = (cfg.n_pages, 8)
+    idx = [i for i, v in enumerate(body.invars)
+           if tuple(v.aval.shape) == tshape]
+    if len(idx) != 1:
+        return None, (f"expected exactly one {tshape} carry in the scan "
+                      f"body, found {len(idx)}")
+    return {"outer": outer, "outer_names": outer_names, "scan_eqn": eqn,
+            "body": body, "num_consts": num_consts, "num_carry": num_carry,
+            "carry_names": carry_names, "table_index": idx[0]}, None
+
+
 def load_module_from_path(path: pathlib.Path):
     """Import a fixture module by file path (no package side effects)."""
     path = pathlib.Path(path)

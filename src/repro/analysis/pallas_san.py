@@ -1,0 +1,242 @@
+"""Pass ``pallas_san`` — static sanitizer for the chunk-step Pallas
+kernel (and any ``pallas_call`` in a fixture).
+
+Three checks, all on the traced ``pallas_call`` equation (so they see
+exactly what Mosaic compiles, not what the Python source suggests):
+
+  1. **VMEM footprint** — the per-grid-iteration resident set (every
+     block-spec block plus every scratch operand) must fit the kernel's
+     declared budget ``chunk_step.VMEM_TABLE_BUDGET``. The dispatch gate
+     (`use_chunk_step_kernel`) only sizes the table; this check covers
+     the whole operand set of the geometry actually traced.
+  2. **Init-before-read** — every output/scratch ref must be stored
+     (``swap``) before it is loaded (``get``). Output blocks are
+     uninitialized VMEM; a ``get`` first reads garbage. A ref escaping
+     into an opaque sub-jaxpr counts as a read.
+  3. **Write-write hazard** — for every output block spec, the
+     ``index_map`` is evaluated at two points along each grid axis; if
+     two distinct grid iterations map to the SAME output block, they
+     overwrite each other's result (grid iterations are unordered on
+     TPU, so the survivor is undefined).
+
+Fixture protocol: ``reprolint_case()`` returning
+``{"kind": "pallas_san", "make": lambda: (fn, args)}``; ``fn(*args)``
+is traced and every ``pallas_call`` found is checked.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+from .common import Finding, fixture_case, rel
+
+PASS = "pallas_san"
+
+#: Ref-touching primitives: loads vs stores. Anything else consuming a
+#: ref is treated as a read (conservative).
+_LOADS = ("get",)
+_STORES = ("swap", "masked_swap", "addupdate")
+
+
+def _walk_pallas_calls(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None and hasattr(inner, "eqns"):
+                _walk_pallas_calls(inner, out)
+            elif hasattr(v, "eqns"):
+                _walk_pallas_calls(v, out)
+            elif isinstance(v, (tuple, list)):
+                for w in v:
+                    inner = getattr(w, "jaxpr", None)
+                    if inner is not None and hasattr(inner, "eqns"):
+                        _walk_pallas_calls(inner, out)
+    return out
+
+
+def _nbytes(shape, dtype):
+    n = 1
+    for d in shape:
+        # pl.Blocked/None dims ("mapped") contribute a single element
+        d = getattr(d, "block_size", d)
+        n *= int(d) if d is not None else 1
+    return n * np.dtype(dtype).itemsize
+
+
+def _eval_index_map(bm, point):
+    """Concretely evaluate one block mapping's index_map at a grid
+    point; non-grid operands (scalar-prefetch refs) are bound to
+    zeros."""
+    from jax import core as jcore
+    cj = bm.index_map_jaxpr
+    ngrid = len(point)
+    args = [np.int32(p) for p in point]
+    for v in cj.jaxpr.invars[ngrid:]:
+        aval = v.aval
+        args.append(np.zeros(aval.shape, getattr(aval, "dtype", np.int32)))
+    outs = jcore.eval_jaxpr(cj.jaxpr, cj.consts, *args)
+    return tuple(int(o) for o in outs)
+
+
+def check_pallas_eqn(eqn, budget, label) -> list[Finding]:
+    findings: list[Finding] = []
+    gm = eqn.params["grid_mapping"]
+    body = eqn.params["jaxpr"]
+    name = eqn.params.get("name_and_src_info", None)
+    where = str(name) if name is not None else label
+
+    def bad(msg):
+        findings.append(Finding(f"<{label}>", 0, PASS,
+                                f"[{where}] {msg}"))
+
+    nidx = gm.num_index_operands
+    nin = gm.num_inputs
+    nout = gm.num_outputs
+    nscratch = gm.num_scratch_operands
+    bms = tuple(gm.block_mappings)
+
+    # 1. VMEM footprint: all blocks + scratch per grid iteration.
+    total = 0
+    for bm in bms:
+        aval = bm.transformed_block_aval
+        inner = getattr(aval, "inner_aval", aval)
+        total += _nbytes(inner.shape, getattr(inner, "dtype", np.int32))
+    scratch_vars = body.invars[nidx + nin + nout:]
+    for v in scratch_vars:
+        aval = getattr(v.aval, "inner_aval", v.aval)
+        total += _nbytes(aval.shape, getattr(aval, "dtype", np.int32))
+    if total > budget:
+        bad(f"VMEM footprint {total} bytes (blocks + scratch) exceeds "
+            f"the kernel budget {budget} — shrink the block specs or "
+            "raise VMEM_TABLE_BUDGET deliberately")
+
+    # 2. init-before-read on output/scratch refs.
+    out_refs = {id(v): i for i, v in enumerate(
+        body.invars[nidx + nin:nidx + nin + nout])}
+    scr_refs = {id(v): i for i, v in enumerate(scratch_vars)}
+    seen_store: set = set()
+    flagged: set = set()
+
+    def scan_body(jx):
+        for e in jx.eqns:
+            prim = e.primitive.name
+            for v in e.invars:
+                vid = id(v)
+                kind = ("output" if vid in out_refs
+                        else "scratch" if vid in scr_refs else None)
+                if kind is None or vid in seen_store or vid in flagged:
+                    continue
+                if prim in _STORES and v is e.invars[0]:
+                    seen_store.add(vid)
+                elif prim in _LOADS or prim not in _STORES:
+                    slot = (out_refs.get(vid) if kind == "output"
+                            else scr_refs.get(vid))
+                    bad(f"{kind} ref #{slot} is read (`{prim}`) before "
+                        "any store — uninitialized VMEM")
+                    flagged.add(vid)
+
+    scan_body(body)
+
+    # 3. write-write hazard: two grid iterations targeting one block.
+    grid = tuple(int(g) for g in gm.grid)
+    for j, bm in enumerate(bms[nin:nin + nout]):
+        base = (0,) * len(grid)
+        try:
+            b0 = _eval_index_map(bm, base)
+        except Exception:
+            continue  # dynamic index map — out of static scope
+        for ax, g in enumerate(grid):
+            if g < 2:
+                continue
+            p = list(base)
+            p[ax] = 1
+            try:
+                b1 = _eval_index_map(bm, tuple(p))
+            except Exception:
+                continue
+            if b1 == b0:
+                bad(f"output block spec #{j}: grid points {base} and "
+                    f"{tuple(p)} both map to block {b0} — write-write "
+                    "hazard across grid iterations (iteration order is "
+                    "undefined)")
+    return findings
+
+
+def check_traced(jaxpr, budget, label) -> list[Finding]:
+    calls = _walk_pallas_calls(
+        jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr, [])
+    findings: list[Finding] = []
+    for eqn in calls:
+        findings += check_pallas_eqn(eqn, budget, label)
+    if not calls:
+        findings.append(Finding(f"<{label}>", 0, PASS,
+                                f"[{label}] no pallas_call found in the "
+                                "trace — the sanitizer has nothing to "
+                                "check"))
+    return findings
+
+
+def _trace_step_kernel(cfg, registry):
+    """Trace the real batched chunk-step kernel at grid size 2 (two
+    design points — enough for the two-point hazard evaluation)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.config import RuntimeParams
+    from repro.kernels import chunk_step as cs
+
+    step = cs._pallas_step_fn(cfg, registry, True)
+    b, chunk = 2, cfg.chunk
+    n_pages, w = cfg.n_pages, 8
+    nb = 2 * cfg.n_banks
+    n_int_params = sum(1 for f in RuntimeParams._fields
+                      if f not in cs._FLOAT_PARAM_FIELDS)
+    ni = cs._N_SC + n_int_params
+    nf = len(cs._FLOAT_PARAM_FIELDS)
+    i32 = jnp.int32
+    args = (
+        jnp.zeros((b, n_pages, w), i32), jnp.zeros((b, chunk), i32),
+        jnp.zeros((b, chunk), i32), jnp.zeros((b, chunk), i32),
+        jnp.ones((b, chunk), i32), jnp.ones((b, chunk), i32),
+        jnp.zeros((b, ni), i32), jnp.zeros((b, nf), jnp.float32),
+        jnp.zeros((b, nb), i32), jnp.zeros((b, 4, 2), i32),
+        jnp.zeros((b, 4, 2), i32),
+    )
+    return jax.make_jaxpr(step)(*args)
+
+
+def run_repo(root: pathlib.Path) -> list[Finding]:
+    from repro.core.config import small_platform
+    from repro.core.emulator import as_registry
+    from repro.kernels import chunk_step as cs
+
+    cfg = small_platform()
+    registry = as_registry(None)
+    jaxpr = _trace_step_kernel(cfg, registry)
+    return check_traced(jaxpr, cs.VMEM_TABLE_BUDGET, "chunk-step-kernel")
+
+
+def run_paths(paths) -> list[Finding]:
+    import jax
+
+    from repro.kernels import chunk_step as cs
+
+    findings: list[Finding] = []
+    for path in paths:
+        case = fixture_case(path)
+        if not case or case.get("kind") != "pallas_san":
+            continue
+        fn, args = case["make"]()
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        stem = pathlib.Path(path).stem
+        for f in check_traced(
+                jaxpr, case.get("budget", cs.VMEM_TABLE_BUDGET), stem):
+            # Kernel-geometry findings carry no jaxpr source loc; anchor
+            # them at the fixture file so CI output stays clickable.
+            if f.path == f"<{stem}>":
+                f = Finding(rel(path), 1, f.pass_name, f.message)
+            findings.append(f)
+    return findings

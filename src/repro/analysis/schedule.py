@@ -33,7 +33,7 @@ from __future__ import annotations
 import ast
 import pathlib
 
-from .common import Finding, rel
+from .common import Finding, eqn_loc, rel, scan_body_info, trace_step_ref
 
 try:  # jax >= 0.4.33 moved the public jaxpr types
     from jax.extend.core import Literal, Var
@@ -48,16 +48,8 @@ PASS = "schedule"
 _WRITE_PRIMS = ("scatter", "scatter-apply", "dynamic_update_slice")
 
 
-def _loc(eqn, default=("<jaxpr>", 0)):
-    try:
-        from jax._src import source_info_util
-
-        fr = source_info_util.user_frame(eqn.source_info)
-        if fr is not None:
-            return rel(fr.file_name), fr.start_line
-    except Exception:
-        pass
-    return default
+# Shared with the ranges pass (analysis/common.py).
+_loc = eqn_loc
 
 
 def check_jaxpr_schedule(jaxpr, table_invar_index: int = 0,
@@ -175,79 +167,20 @@ def check_jaxpr_schedule(jaxpr, table_invar_index: int = 0,
     return findings
 
 
-def _step_args(cfg):
-    """(table, sc, bank_free, trace arrays, valid) for one chunk."""
-    import jax.numpy as jnp
-
-    from repro.core import emulator as emu
-    from repro.core.config import RuntimeParams
-    from repro.kernels import chunk_step as cs
-
-    params = RuntimeParams.from_config(cfg)
-    state = emu.init_state(cfg, params)
-    sc = cs.StepScalars(
-        clock=state.clock, clock_ptr=state.clock_ptr,
-        chunk_idx=state.chunk_idx, dma=state.dma,
-        link_free_rx=state.link_free_rx, link_free_tx=state.link_free_tx,
-        last_return=state.last_return, rescue_page=state.rescue_page,
-        min_wear=state.min_wear, fault_cursor=state.fault_cursor)
-    n = cfg.chunk
-    i32 = jnp.int32
-    page = jnp.zeros(n, i32)
-    offset = jnp.zeros(n, i32)
-    is_write = jnp.zeros(n, bool)
-    size = jnp.full(n, cfg.line_size, i32)
-    valid = jnp.ones(n, bool)
-    return params, (state.table, sc, state.bank_free,
-                    page, offset, is_write, size, valid)
-
-
 def _trace_step_ref(cfg, registry, seq: bool):
-    import jax
-
-    from repro.kernels import chunk_step as cs
-
-    params, (table, sc, bank_free, page, offset, is_write, size,
-             valid) = _step_args(cfg)
-
-    def fn(table, sc, bank_free, page, offset, is_write, size, valid):
-        return cs.step_ref(cfg, registry, table, params, sc, bank_free,
-                           page, offset, is_write, size, valid, None,
-                           seq=seq)
-
-    return jax.make_jaxpr(fn)(table, sc, bank_free, page, offset,
-                              is_write, size, valid)
+    """One-chunk ``step_ref`` trace (path-linking machinery now lives in
+    analysis/common.py — the ranges pass shares it)."""
+    jaxpr, _names, _out_names = trace_step_ref(cfg, registry, seq)
+    return jaxpr
 
 
 def _scan_body_jaxpr(cfg, registry):
-    """The chunk body of the compiled scan path: trace
-    ``_emulate_impl`` and pull the ``scan`` equation's sub-jaxpr."""
-    import jax
-    import jax.numpy as jnp
-
-    from repro.core import emulator as emu
-
-    n = cfg.chunk  # one chunk is enough — the body is per-chunk
-    i32 = jnp.int32
-    trace = emu.Trace(page=jnp.zeros(n, i32), offset=jnp.zeros(n, i32),
-                      is_write=jnp.zeros(n, bool),
-                      size=jnp.full(n, cfg.line_size, i32))
-
-    def fn(trace):
-        return emu._emulate_impl(cfg, registry, trace)
-
-    jaxpr = jax.make_jaxpr(fn)(trace)
-    scans = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "scan"]
-    if not scans:
-        return None, "no `scan` equation found in _emulate_impl"
-    body = scans[0].params["jaxpr"].jaxpr
-    tshape = (cfg.n_pages, 8)
-    idx = [i for i, v in enumerate(body.invars)
-           if tuple(v.aval.shape) == tshape]
-    if len(idx) != 1:
-        return None, (f"expected exactly one {tshape} carry in the scan "
-                      f"body, found {len(idx)}")
-    return (body, idx[0]), None
+    """The chunk body of the compiled scan path (via
+    :func:`common.scan_body_info`) as ``((body, table_index), err)``."""
+    info, err = scan_body_info(cfg, registry)
+    if err is not None:
+        return None, err
+    return (info["body"], info["table_index"]), None
 
 
 def _check_pallas_body_link(root: pathlib.Path) -> list[Finding]:

@@ -229,7 +229,16 @@ def maybe_complete(cfg: EmulatorConfig, dma: DMAState, now: jax.Array,
     ib = jnp.maximum(dma.page_b, 0)
     plan = plan_commit(cfg, dma, now, table[ia], table[ib], params,
                        rescue_page)
-    table = table.at[plan.rows, plan.lanes].add(plan.delta)
+    # WEAR deltas saturate at WEAR_CAP like the chunk-boundary commit
+    # (at most one WEAR charge per commit — a swap always pairs FAST with
+    # SLOW — so a plain min against the headroom is exact).
+    pre = table[plan.rows, plan.lanes]
+    delta = jnp.where(
+        plan.lanes == table_lib.WEAR,
+        jnp.minimum(plan.delta,
+                    jnp.maximum(jnp.int32(table_lib.WEAR_CAP) - pre, 0)),
+        plan.delta)
+    table = table.at[plan.rows, plan.lanes].add(delta)
     return plan.dma, table, plan.done
 
 

@@ -88,6 +88,19 @@ RETIRED = 1 << 3
 PINNED = PIN_FAST | PIN_SLOW
 KNOWN_FLAGS = PIN_FAST | PIN_SLOW | POISONED | RETIRED
 
+# Accumulator-lane saturation caps. HOTNESS and WEAR are monotone
+# scatter-add counters fed every chunk; on runs long enough to matter
+# (the paper's whole point) an uncapped int32 eventually wraps and
+# silently corrupts the placement/retirement decision it drives. Both
+# lanes saturate at this cap instead: far above any decision threshold
+# (endurance budgets are < 2^27; hot_threshold is single digits) yet
+# leaving > 2 bits of headroom below int32 overflow, so even a full
+# chunk of duplicate weights added to a saturated lane cannot wrap.
+# ``check_table`` (runtime) and ``repro.analysis.ranges`` (static)
+# enforce the same invariant from these two constants.
+HOTNESS_CAP = 1 << 29
+WEAR_CAP = 1 << 29
+
 
 class TableRows(NamedTuple):
     """Unpacked view of table rows — one array per named lane."""
@@ -171,6 +184,34 @@ def add_hotness(table: jax.Array, pages, w) -> jax.Array:
     """Scatter-add access weights into the HOTNESS lane (out-of-range
     pages drop — the sentinel-index convention of the boundary commit)."""
     return table.at[pages, HOTNESS].add(w, mode="drop")
+
+
+def saturating_weights(targets: jax.Array, weights: jax.Array,
+                       pre: jax.Array, cap: int) -> jax.Array:
+    """Clip scatter-add ``weights`` so the accumulator lane at each
+    target saturates at ``cap`` instead of wrapping ("fill until full").
+
+    ``pre`` holds the pre-commit lane value gathered at ``targets``.
+    Duplicate targets are exact: element ``i`` may add at most what is
+    left of ``cap`` after the pre-value and every *earlier* element
+    aimed at the same slot, so the scatter-add total per slot is
+    ``min(sum(w), max(0, cap - pre))`` — order-independent, and the
+    identity whenever the slot stays below the cap (existing golden
+    digests are untouched). O(n^2) in the chunk width via a masked
+    matrix, which is trivial next to the bank resolver.
+
+    Written as explicit ``minimum(maximum(...))`` over a literal cap so
+    the ``ranges`` static pass can recognise the saturation idiom in the
+    jaxpr and certify the lane's int32 bound.
+    """
+    w = jnp.asarray(weights, jnp.int32)
+    n = w.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    same_earlier = (targets[None, :] == targets[:, None]) & (i[None, :] <
+                                                             i[:, None])
+    psum = jnp.sum(jnp.where(same_earlier, w[None, :], 0), axis=1)
+    allow = jnp.int32(cap) - pre - psum
+    return jnp.minimum(jnp.maximum(allow, 0), w)
 
 
 def decay_hotness(table: jax.Array, shift) -> jax.Array:
@@ -272,7 +313,10 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
       PIN_FAST page on the slow tier means a pinned page migrated);
     * RETIRED implies POISONED (a tombstone is always on a dead frame)
       and no page is both PINNED and POISONED (retirement force-clears
-      pins, so a pinned page never sits on a poisoned frame).
+      pins, so a pinned page never sits on a poisoned frame);
+    * the accumulator lanes saturate: ``0 <= HOTNESS <= HOTNESS_CAP``
+      and ``0 <= WEAR <= WEAR_CAP`` — the runtime half of the contract
+      the ``ranges`` static pass proves from the same two constants.
 
     Raises on violation (used by tests and the emulator's debug mode).
     """
@@ -321,6 +365,14 @@ def check_table(cfg: EmulatorConfig, table: np.ndarray,
         raise AssertionError(
             f"page {hot[0]} is pinned on a poisoned frame "
             f"({flg[hot[0]]:#x})")
+    for lane, cap, name in ((HOTNESS, HOTNESS_CAP, "HOTNESS"),
+                            (WEAR, WEAR_CAP, "WEAR")):
+        vals = table[..., lane]
+        bad = np.nonzero((vals < 0) | (vals > cap))[0]
+        if bad.size:
+            raise AssertionError(
+                f"{name} lane of row {bad[0]} outside [0, {name}_CAP]: "
+                f"{vals[bad[0]]} (wrapped or unsaturated accumulator)")
 
 
 class HybridAllocator:

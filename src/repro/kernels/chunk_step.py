@@ -123,6 +123,8 @@ class PipelineOut(NamedTuple):
     bank_free: jax.Array  # int32[2*n_banks] — post-chunk bank busy times
     rx_last: jax.Array    # int32 — RX link busy-until after the chunk
     tx_last: jax.Array    # int32 — TX link busy-until after the chunk
+    hot_pre: jax.Array    # int32[chunk] — pre-chunk HOTNESS of the pages
+    #   (commit_phase saturates the hotness scatter against it)
 
 
 # --------------------------------------------------------------------------- #
@@ -213,7 +215,8 @@ def pipeline_phase(cfg: EmulatorConfig, params: RuntimeParams,
     arrive = rx_done + jnp.where(valid, params.link_lat // 2, 0)
     if upto == "rx":
         return PipelineOut(zv, zv, zrow, zrow, zv, zv, zs,
-                           jnp.zeros(n, bool), bank_free, rx_done[-1], zs)
+                           jnp.zeros(n, bool), bank_free, rx_done[-1], zs,
+                           zv)
 
     # --- stage 2: redirection-table lookup (+ DMA swap-progress redirect).
     # One packed-row fetch — the BRAM read per cycle of the paper's
@@ -237,12 +240,13 @@ def pipeline_phase(cfg: EmulatorConfig, params: RuntimeParams,
         row_a, row_b = table[a], table[b]
     dev = table_lib.device(rows)
     frm = table_lib.frame(rows)
+    hot_pre = table_lib.hotness(rows)
     dev, frm = dma_lib.redirect(
         cfg, sc.dma, page, offset, arrive, dev, frm, row_a, row_b, params)
     poisoned = valid & table_lib.is_poisoned(rows)
     if upto == "gather":
         return PipelineOut(dev, frm, row_a, row_b, zv, zv, zs, poisoned,
-                           bank_free, rx_done[-1], zs)
+                           bank_free, rx_done[-1], zs, hot_pre)
 
     # --- stage 3: per-device bank queues + media access.
     bank = dev * cfg.n_banks + frm % cfg.n_banks
@@ -259,7 +263,7 @@ def pipeline_phase(cfg: EmulatorConfig, params: RuntimeParams,
             arrive, med_srv, bank, 2 * cfg.n_banks, bank_free)
     if upto == "resolve":
         return PipelineOut(dev, frm, row_a, row_b, zv, zv, zs, poisoned,
-                           bank_free2, rx_done[-1], zs)
+                           bank_free2, rx_done[-1], zs, hot_pre)
 
     # --- stage 4: tag-match in-order return (paper §III-C) ...
     inorder = _seq_inorder if seq else consistency.in_order_returns
@@ -276,7 +280,7 @@ def pipeline_phase(cfg: EmulatorConfig, params: RuntimeParams,
         tx_srv) + jnp.where(valid, params.link_lat // 2, 0)
     lat = jnp.where(valid, returns - issue, 0)
     return PipelineOut(dev, frm, row_a, row_b, returns, lat, held, poisoned,
-                       bank_free2, rx_done[-1], returns[-1])
+                       bank_free2, rx_done[-1], returns[-1], hot_pre)
 
 
 # --------------------------------------------------------------------------- #
@@ -327,10 +331,15 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
     now = jnp.maximum(sc.clock + params.issue_gap * n, last_ret)
 
     # Hotness accumulation (decayed below, after the combined scatter —
-    # nothing else in the scatter touches the HOTNESS lane).
+    # nothing else in the scatter touches the HOTNESS lane). Weights are
+    # clipped against the pre-chunk lane value so the counter saturates
+    # at HOTNESS_CAP instead of wrapping — exact under duplicate pages,
+    # identity below the cap.
     hot_w = 1 + (jnp.asarray(eff_weight, jnp.int32) - 1) * \
         is_write.astype(jnp.int32)
     hot_w = jnp.where(valid, hot_w, 0)
+    hot_w = table_lib.saturating_weights(page, hot_w, pipe.hot_pre,
+                                         table_lib.HOTNESS_CAP)
     # NVM endurance: demand writes per slow frame (the DMA migration's
     # full-page write is charged by the swap commit's WEAR deltas).
     slow_wr = is_write & valid & (pipe.dev == SLOW)
@@ -352,14 +361,33 @@ def commit_phase(cfg: EmulatorConfig, params: RuntimeParams,
                         n_pages * w_lanes)
     own_delta = jnp.where(promoted, swap_a - own_pre, 0)
 
+    # WEAR saturation: demand charges and the swap commit's migration
+    # charges can land on the SAME slow frame in one boundary, so both
+    # sources join ONE fill-until-full pass against the pre-chunk WEAR
+    # (one extra pre-commit single-lane gather — a read, schedule §1).
+    # The plan keeps its non-WEAR deltas; its WEAR entries move into the
+    # joint fill (scatter-add totals are order-independent, so below the
+    # cap this is bitwise the historical commit).
+    wear_mask = plan.lanes == table_lib.WEAR
+    wear_rows = jnp.concatenate([
+        jnp.where(slow_wr, pipe.frm, 0),
+        jnp.where(wear_mask, plan.rows, 0)])
+    wear_w = jnp.concatenate([
+        slow_wr.astype(jnp.int32),
+        jnp.where(wear_mask, plan.delta, 0)])
+    wear_pre = table[wear_rows, table_lib.WEAR]
+    wear_w = table_lib.saturating_weights(wear_rows, wear_w, wear_pre,
+                                          table_lib.WEAR_CAP)
+    plan_delta = jnp.where(wear_mask, 0, plan.delta)
+
     idx = jnp.concatenate([
         page * w_lanes + table_lib.HOTNESS,
-        jnp.where(slow_wr, pipe.frm, 0) * w_lanes + table_lib.WEAR,
+        wear_rows * w_lanes + table_lib.WEAR,
         plan.rows * w_lanes + plan.lanes,
         own_idx[None],
     ])
     upd = jnp.concatenate([
-        hot_w, slow_wr.astype(jnp.int32), plan.delta, own_delta[None],
+        hot_w, wear_w, plan_delta, own_delta[None],
     ])
     table = table.reshape(-1).at[idx].add(upd, mode="drop") \
         .reshape(n_pages, w_lanes)

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.config import EmulatorConfig, FAST, SLOW
 from repro.core import dma as dma_lib
+from repro.core import table as table_lib
 
 
 @dataclass
@@ -117,7 +118,9 @@ def simulate(cfg: EmulatorConfig, page, offset, is_write, size) -> SimResult:
         # --- chunk boundary (chunk == 1): hotness, DMA, policy.
         # write_weight is policy-scoped: only write_bias biases hotness.
         ww = cfg.write_weight if cfg.policy == "write_bias" else 1
-        hotness[p] += 1 + (ww - 1) * int(w)
+        # Saturating like the emulator's HOTNESS lane (identity below cap).
+        hotness[p] = min(hotness[p] + 1 + (ww - 1) * int(w),
+                         table_lib.HOTNESS_CAP)
         if i % cfg.decay_every == cfg.decay_every - 1:
             hotness >>= cfg.hotness_decay_shift
 

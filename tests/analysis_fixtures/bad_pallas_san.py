@@ -1,0 +1,37 @@
+"""Seeded Pallas-sanitizer violations: a kernel that (a) READS its
+output block before any store (uninitialized VMEM), (b) maps BOTH grid
+iterations onto the same output block (write-write hazard — iteration
+order is undefined), and (c) overflows the fixture's deliberately tiny
+VMEM budget. ``python -m repro.analysis --pass pallas_san <this file>``
+must exit non-zero with findings anchored at this file."""
+
+
+def _bad_kernel(x_ref, o_ref):
+    acc = o_ref[...]  # read of uninitialized output VMEM
+    o_ref[...] = acc + x_ref[...]
+
+
+def _bad_call(x):
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((1, 128), lambda i: (i, 0))],
+        # hazard: the index_map ignores the grid index entirely
+        out_specs=pl.BlockSpec((1, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((2, 128), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def reprolint_case():
+    def make():
+        import jax.numpy as jnp
+
+        return _bad_call, (jnp.zeros((2, 128), jnp.int32),)
+
+    # 512 B budget: the two 1x128 int32 blocks (1 KiB) exceed it.
+    return {"kind": "pallas_san", "make": make, "budget": 512}

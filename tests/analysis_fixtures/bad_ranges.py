@@ -1,0 +1,30 @@
+"""Seeded ranges violations: an UNGUARDED table gather (the page index
+comes straight from an int argument the analyzer must assume spans the
+full fixture budget ``[0, 2**20]``, far past ``n_pages``) and an
+UNSATURATED scatter-add whose accumulation provably overflows int32
+under that same budget. ``python -m repro.analysis --pass ranges
+<this file>`` must exit non-zero with findings at the lines below."""
+
+
+def _bad_step(table, pages, w):
+    import jax.numpy as jnp
+
+    hot = table[pages, 2]  # unguarded gather: pages unproven < n_pages
+    flat = table.reshape(-1)
+    # Unsaturated accumulation: w can be 2**20 per event with no clamp,
+    # so repeated chunks blow through int32 — the prover must flag the
+    # add as overflow-capable under the budget.
+    committed = flat.at[pages * 8 + 2].add(w * w, mode="drop")
+    return committed.reshape(table.shape), jnp.sum(hot)
+
+
+def reprolint_case():
+    def make():
+        import jax.numpy as jnp
+
+        i32 = jnp.int32
+        args = (jnp.zeros((16, 8), i32), jnp.arange(4, dtype=i32),
+                jnp.ones(4, i32))
+        return _bad_step, args
+
+    return {"kind": "ranges", "make": make}

@@ -19,7 +19,7 @@ import pytest
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 FIXTURES = ROOT / "tests" / "analysis_fixtures"
 PASSES = ("schedule", "donation", "lanes", "staticness", "tripwire",
-          "docrefs")
+          "docrefs", "ranges", "pallas_san")
 
 
 def _cli(*args):
@@ -57,10 +57,48 @@ def test_cli_report_json(tmp_path):
     assert r.returncode != 0
     import json
 
-    rows = json.loads(report.read_text())
+    data = json.loads(report.read_text())
+    assert set(data) == {"findings", "proved_bounds", "stats"}
+    rows = data["findings"]
     assert rows and all(
         set(row) == {"path", "line", "pass_name", "message"}
         for row in rows)
+    assert data["stats"]["total"] >= data["stats"]["lanes"] >= 0
+
+
+def test_cli_report_proved_bounds(tmp_path):
+    """A repo-mode ranges run ships per-program budget proofs (the
+    per-chunk growth G, the horizon, and the proved per-lane bounds)."""
+    report = tmp_path / "bounds.json"
+    r = _cli("--pass", "ranges", "--report", str(report))
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    import json
+
+    bounds = json.loads(report.read_text())["proved_bounds"]
+    labels = {b["label"] for b in bounds}
+    assert labels == {"scan-path", "pallas-body", "jnp-ref"}
+    for b in bounds:
+        assert b["int32_horizon_chunks"] >= b["n_chunks_budget"]
+        assert b["table_gathers_proved"] > 0
+    lanes = next(b for b in bounds if b["label"] == "jnp-ref")["lanes"]
+    assert lanes["HOTNESS"][1] <= 2**29 and lanes["WEAR"][1] <= 2**29
+
+
+def test_cli_baseline_diff(tmp_path):
+    """--baseline makes known findings informational: same fixture twice
+    exits 0; adding a second violating fixture exits 1 again."""
+    base = tmp_path / "base.json"
+    bad = str(FIXTURES / "bad_ranges.py")
+    r = _cli("--pass", "ranges", "--report", str(base), bad)
+    assert r.returncode != 0
+    r = _cli("--pass", "ranges", "--baseline", str(base), bad)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "0 new vs baseline" in r.stdout
+    r = _cli("--pass", "ranges", "--pass", "pallas_san",
+             "--baseline", str(base), bad,
+             str(FIXTURES / "bad_pallas_san.py"))
+    assert r.returncode != 0
+    assert "new vs baseline" in r.stdout
 
 
 # --- checker internals ----------------------------------------------------
